@@ -1,0 +1,92 @@
+"""JAX SM-tree engine benchmarks: jitted batched-query throughput, bulk
+build, engine-vs-ref page-hit comparison, insert/delete fast-path rates."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SMTreeEngine
+from repro.core.ref_impl import SMTree
+from repro.data.datagen import make_dataset
+
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+N = 50_000 if FULL else 10_000
+BATCH = 64
+
+
+def run(report):
+    X = make_dataset("clustered", N, seed=7)[:, :10].copy()
+    t0 = time.time()
+    eng = SMTreeEngine.build(X, capacity=32)
+    report("bulk_build_seconds", round(time.time() - t0, 2))
+    report("bulk_build_objects_per_s", int(N / (time.time() - t0)))
+
+    rng = np.random.default_rng(8)
+    Q = X[rng.integers(0, N, BATCH)] + rng.normal(0, 0.01, (BATCH, 10)) \
+        .astype(np.float32)
+    Qj = jnp.asarray(Q)
+
+    # jitted batched kNN throughput
+    res = eng.knn(Qj, k=10, max_frontier=256)      # compile + warm
+    jax.block_until_ready(res.dists)
+    t0 = time.time()
+    iters = 20
+    for _ in range(iters):
+        res = eng.knn(Qj, k=10, max_frontier=256)
+    jax.block_until_ready(res.dists)
+    dt = (time.time() - t0) / iters
+    report("engine_knn10_us_per_query", round(dt / BATCH * 1e6, 1))
+    report("engine_knn10_batch_ms", round(dt * 1e3, 2))
+    report("engine_knn10_mean_page_hits",
+           round(float(np.asarray(res.page_hits).mean()), 1))
+    report("engine_knn10_mean_dist_evals",
+           round(float(np.asarray(res.dist_evals).mean()), 1))
+
+    # ref-impl page hits on the same workload (paper-faithful DFS order)
+    ref = SMTree(dim=10, capacity=32, n_dims=10)
+    for i, x in enumerate(X[:N // 4]):              # smaller ref for time
+        ref.insert(x, i)
+    tot = 0
+    for q in Q[:16]:
+        ref.reset_counters()
+        ref.knn_query(q, 10)
+        tot += ref.ios
+    report("ref_knn10_mean_page_hits_quarter_tree", round(tot / 16, 1))
+
+    # insert/delete fast-path hit rates (amortised split/merge frequency)
+    extra = make_dataset("uniform", 1000, seed=9)[:, :10].copy()
+    n_split = 0
+    t0 = time.time()
+    from repro.core.smtree import insert_fast
+    tree = eng.tree
+    for i, x in enumerate(extra):
+        new_tree, fits, _ = insert_fast(tree, jnp.asarray(x), jnp.int32(N + i))
+        if bool(fits):
+            tree = new_tree
+        else:
+            n_split += 1
+            eng.tree = tree
+            eng.insert(x, N + i)
+            tree = eng.tree
+    eng.tree = tree
+    report("insert_fastpath_rate", round(1 - n_split / len(extra), 3))
+    report("insert_us_per_op", round((time.time() - t0) / len(extra) * 1e6, 0))
+
+    n_under = 0
+    t0 = time.time()
+    from repro.core.smtree import delete_fast
+    for i, x in enumerate(extra[:500]):
+        new_tree, found, underflow, _ = delete_fast(
+            eng.tree, jnp.asarray(x), jnp.int32(N + i))
+        assert bool(found)
+        if bool(underflow):
+            n_under += 1
+            eng.delete(x, N + i)
+        else:
+            eng.tree = new_tree
+    report("delete_fastpath_rate", round(1 - n_under / 500, 3))
+    report("delete_us_per_op", round((time.time() - t0) / 500 * 1e6, 0))

@@ -1,0 +1,59 @@
+"""Kernel-level benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness)
+— wall-clock numbers for them are NOT TPU-representative; we benchmark the
+XLA reference paths (what the dry-run lowers) and validate kernel outputs.
+The TPU-side performance claims live in the roofline analysis."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.attention_xla import chunked_attention
+
+
+def _time(fn, *args, iters=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run(report):
+    # pairwise distance: XLA path throughput + interpret-mode equivalence
+    q = jax.random.normal(jax.random.PRNGKey(0), (256, 128))
+    e = jax.random.normal(jax.random.PRNGKey(1), (4096, 128))
+    f_x = jax.jit(lambda a, b: ops.pairwise_distance(a, b, impl="xla"))
+    dt = _time(f_x, q, e)
+    gflops = 2 * 256 * 4096 * 128 / dt / 1e9
+    report("dist_xla_us", round(dt * 1e6, 1))
+    report("dist_xla_gflops_cpu", round(gflops, 2))
+    got = ops.pairwise_distance(q[:32], e[:128], impl="interpret")
+    want = ref.pairwise_distance_ref(q[:32], e[:128])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    report("dist_pallas_interpret_allclose", 1)
+
+    # attention: chunked flash-style scan vs naive, bytes advantage
+    b, h, s, d = 1, 4, 2048, 64
+    qq = jax.random.normal(jax.random.PRNGKey(2), (b, h, s, d))
+    kk = jax.random.normal(jax.random.PRNGKey(3), (b, h, s, d))
+    vv = jax.random.normal(jax.random.PRNGKey(4), (b, h, s, d))
+    f_naive = jax.jit(lambda a, b_, c: ref.flash_attention_ref(a, b_, c))
+    f_chunk = jax.jit(lambda a, b_, c: chunked_attention(a, b_, c, chunk=256))
+    report("attn_naive_ms", round(_time(f_naive, qq, kk, vv) * 1e3, 2))
+    report("attn_chunked_ms", round(_time(f_chunk, qq, kk, vv) * 1e3, 2))
+    got = ops.attention(qq[:, :2, :256], kk[:, :2, :256], vv[:, :2, :256],
+                        impl="interpret")
+    want = ref.flash_attention_ref(qq[:, :2, :256], kk[:, :2, :256],
+                                   vv[:, :2, :256])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    report("attn_pallas_interpret_allclose", 1)

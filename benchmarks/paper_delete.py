@@ -1,0 +1,79 @@
+"""Paper Figure 10 + §4.2 occupancy claim: the post-delete SM-tree.
+
+Build three trees over the same 20-d clustered data:
+  * M-tree with N objects (baseline)
+  * SM-tree with N objects (fresh)
+  * SM-tree built by inserting 2N objects and deleting N of them (the
+    operation no other M-tree variant supports)
+then compare NN-1 IOs, the sequential-scan limit, and node occupancy.
+Paper: post-delete tree is bigger and ~40% full (the underflow limit) vs
+~60% for the fresh trees — 'exactly analogous to B-trees'.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.ref_impl import MTree, SMTree
+from repro.data.datagen import make_dataset
+
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+N = 25_000 if FULL else 6_000
+N_Q = 100 if FULL else 40
+
+
+def run(report):
+    X = make_dataset("clustered", 2 * N, seed=3)
+    keep = np.arange(0, 2 * N, 2)       # survivors
+    drop = np.arange(1, 2 * N, 2)       # deleted
+    nd = 10
+
+    m = MTree(dim=20, capacity=42, n_dims=nd)
+    s_fresh = SMTree(dim=20, capacity=42, n_dims=nd)
+    for i in keep:
+        m.insert(X[i], int(i))
+        s_fresh.insert(X[i], int(i))
+
+    s_del = SMTree(dim=20, capacity=42, n_dims=nd)
+    for i in range(2 * N):
+        s_del.insert(X[i], i)
+    for i in drop:
+        assert s_del.delete(X[i], int(i)), f"delete failed for {i}"
+    s_del.validate(check_sm_invariant=True, check_min_fill=True)
+    assert s_del.n_objects == N
+
+    rng = np.random.default_rng(5)
+    queries = X[keep[rng.integers(0, N, N_Q)]]
+
+    def nn1(t):
+        tot = 0
+        for q in queries:
+            t.reset_counters()
+            t.knn_query(q, 1)
+            tot += t.ios
+        return tot / len(queries)
+
+    rows = {
+        "fig10_nn1_mtree": nn1(m),
+        "fig10_nn1_smtree": nn1(s_fresh),
+        "fig10_nn1_smtree_postdelete": nn1(s_del),
+        "fig10_leafscan_mtree": m.leaf_io_count(),
+        "fig10_leafscan_smtree": s_fresh.leaf_io_count(),
+        "fig10_leafscan_postdelete": s_del.leaf_io_count(),
+        "occupancy_mtree": round(m.stats().occupancy, 3),
+        "occupancy_smtree": round(s_fresh.stats().occupancy, 3),
+        "occupancy_postdelete": round(s_del.stats().occupancy, 3),
+    }
+    for k, v in rows.items():
+        report(k, v)
+
+    # paper claims
+    assert rows["fig10_nn1_smtree_postdelete"] >= rows["fig10_nn1_smtree"], \
+        "post-delete tree should be no cheaper (it is bigger, less occupied)"
+    assert rows["fig10_leafscan_postdelete"] > rows["fig10_leafscan_smtree"], \
+        "post-delete tree must have more leaves (lower occupancy)"
+    assert rows["occupancy_postdelete"] < rows["occupancy_smtree"], \
+        "post-delete occupancy must drop toward the underflow limit"
+    assert rows["occupancy_postdelete"] > 0.38, \
+        "occupancy must stay above the 40% underflow limit (minus slack)"

@@ -1,0 +1,97 @@
+"""§Roofline table: read dry-run artifacts, derive the three terms and the
+achieved-fraction metric, print the 40-cell table.
+
+Fraction metric: decode steps are *bandwidth*-bound by construction (one
+token against all params + cache), so the honest yardstick is
+    ideal_s  = max( MODEL_FLOPS_chip / peak,  must_bytes_chip / HBM_bw )
+    frac     = ideal_s / step_s,   step_s = max(compute, memory, collective)
+with must_bytes = params(+cache) for inference, 2x(params+opt moments) for
+training (read+write of the update is irreducible traffic).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_rows(mesh: str = "pod"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r["status"] == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "skipped",
+                         "reason": r["reason"][:60]})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "error"})
+            continue
+        roof = r["roofline"]
+        static = r.get("static_memory", {})
+        must = static.get("params_bytes_dev", 0) + \
+            static.get("cache_bytes_dev", 0)
+        if r["shape"].startswith("train"):
+            must = 2 * (static.get("params_bytes_dev", 0)
+                        + static.get("opt_bytes_dev", 0))
+        ideal = max(roof["model_flops"] / PEAK_FLOPS, must / HBM_BW)
+        step = roof["step_s"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_s": roof["compute_s"], "memory_s": roof["memory_s"],
+            "collective_s": roof["collective_s"],
+            "bottleneck": roof["bottleneck"],
+            "useful_ratio": roof["useful_ratio"],
+            "frac": ideal / step if step else 0.0,
+            "step_s": step,
+            "params_gib_dev": static.get("params_bytes_dev", 0) / 2**30,
+            "opt_gib_dev": static.get("opt_bytes_dev", 0) / 2**30,
+            "cache_gib_dev": static.get("cache_bytes_dev", 0) / 2**30,
+            "compile_s": r.get("compile_s"),
+        })
+    return rows
+
+
+def run(report):
+    for mesh in ("pod", "multipod"):
+        rows = load_rows(mesh)
+        ok = [r for r in rows if r["status"] == "ok"]
+        report(f"dryrun_cells_ok[{mesh}]", len(ok))
+        report(f"dryrun_cells_skipped[{mesh}]",
+               sum(1 for r in rows if r["status"] == "skipped"))
+        report(f"dryrun_cells_error[{mesh}]",
+               sum(1 for r in rows if r["status"] == "error"))
+        if mesh == "pod":
+            for r in ok:
+                report(f"roofline_frac[{r['arch']}|{r['shape']}]",
+                       round(r["frac"], 4))
+    print_table("pod")
+
+
+def print_table(mesh: str = "pod"):
+    rows = load_rows(mesh)
+    hdr = (f"{'arch':18s} {'shape':12s} {'cmp_s':>8s} {'mem_s':>8s} "
+           f"{'coll_s':>8s} {'bneck':>10s} {'frac':>7s} {'useful':>7s} "
+           f"{'par/dev':>8s}")
+    print("\n== Roofline:", mesh, "==")
+    print(hdr)
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:18s} {r['shape']:12s} "
+                  f"{'(' + r['status'] + ')':>8s}")
+            continue
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['compute_s']:8.3f} "
+              f"{r['memory_s']:8.3f} {r['collective_s']:8.3f} "
+              f"{r['bottleneck']:>10s} {r['frac']:7.4f} "
+              f"{r['useful_ratio']:7.3f} {r['params_gib_dev']:7.2f}G")
+
+
+if __name__ == "__main__":
+    print_table("pod")
+    print_table("multipod")

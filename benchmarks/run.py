@@ -1,0 +1,38 @@
+"""Benchmark orchestrator: one module per paper table/figure + engine,
+kernel and roofline benches.  Prints ``name,value`` CSV lines (plus readable
+tables at the end).  REPRO_BENCH_FULL=1 restores full paper scale."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_engine, bench_kernels, paper_delete,
+                            paper_queries, roofline_table)
+    results: list[tuple[str, object]] = []
+
+    def report(name, value):
+        results.append((name, value))
+        print(f"{name},{value}", flush=True)
+
+    suites = [
+        ("paper_queries", paper_queries.run),     # Figs. 5-8
+        ("paper_delete", paper_delete.run),       # Fig. 10 + occupancy
+        ("bench_engine", bench_engine.run),       # JAX engine throughput
+        ("bench_kernels", bench_kernels.run),     # kernel validation/baseline
+        ("roofline", roofline_table.run),         # 40-cell dry-run table
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in suites:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        fn(report)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    print(f"# total rows: {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""End-to-end training driver example: a few hundred steps with checkpoints
+and a kill/resume demonstration.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Uses the production driver (repro.launch.train) on a reduced qwen2.5-family
+config; pass --arch/--no-smoke to scale up to the real configs on hardware
+(e.g. ``--arch yi-34b`` on a TPU pod with the 16x16 mesh).
+"""
+import shutil
+import subprocess
+import sys
+import tempfile
+
+from repro.launch import train
+
+steps = 200
+if "--steps" in sys.argv:
+    steps = int(sys.argv[sys.argv.index("--steps") + 1])
+
+ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+try:
+    # 1. train with an injected failure half-way
+    try:
+        train.main(["--smoke", "--steps", str(steps), "--ckpt-dir", ckpt,
+                    "--ckpt-every", str(max(10, steps // 4)),
+                    "--fail-at", str(steps // 2), "--log-every", "20"])
+        raise AssertionError("expected injected failure")
+    except SystemExit as e:
+        print(f"-> {e}")
+
+    # 2. resume from the latest checkpoint and finish
+    loss = train.main(["--smoke", "--steps", str(steps), "--ckpt-dir", ckpt,
+                       "--resume", "--log-every", "20"])
+    print(f"resumed run finished with loss {loss:.4f}")
+finally:
+    shutil.rmtree(ckpt, ignore_errors=True)

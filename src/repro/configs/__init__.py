@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES, get_config, list_archs, shape_applicable  # noqa: F401
+from repro.configs.all_archs import smoke_config  # noqa: F401

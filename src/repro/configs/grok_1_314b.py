@@ -1,0 +1,8 @@
+"""Config for grok-1-314b (see all_archs.py for the authoritative numbers)."""
+from repro.configs.base import get_config
+
+ARCH_ID = "grok-1-314b"
+
+
+def config(**overrides):
+    return get_config(ARCH_ID, **overrides)

@@ -1,0 +1,8 @@
+"""Config for internvl2-1b (see all_archs.py for the authoritative numbers)."""
+from repro.configs.base import get_config
+
+ARCH_ID = "internvl2-1b"
+
+
+def config(**overrides):
+    return get_config(ARCH_ID, **overrides)

@@ -1,0 +1,8 @@
+"""Config for yi-34b (see all_archs.py for the authoritative numbers)."""
+from repro.configs.base import get_config
+
+ARCH_ID = "yi-34b"
+
+
+def config(**overrides):
+    return get_config(ARCH_ID, **overrides)

@@ -1,0 +1,176 @@
+"""Distributed SM-forest: the paper's index sharded across a device mesh.
+
+Design (DESIGN.md §2): objects are partitioned over the mesh's 'model' axis,
+one independent SM-tree shard per device (a *forest*).  Under ``shard_map``:
+
+  * ``forest_knn`` — queries are replicated to every shard (the sharded-in
+    queries are all-gathered), each shard runs the jitted local kNN over its
+    subtree, and the global top-k is a k-way merge: all_gather the per-shard
+    candidate sets and ``lax.top_k`` them.  One collective round-trip per
+    query batch — the classic scatter-gather search fan-out.
+  * ``forest_delete`` / ``forest_insert_fast`` — updates broadcast; each
+    shard applies the ones that belong to it (exact-match id test for
+    delete, routing rule for insert).  The SM-tree's O(h) Delete — the
+    paper's contribution — is what makes *online eviction* of a live
+    distributed datastore possible without a stop-the-world rebuild.
+
+The same code drives 8 host devices in tests and the production mesh's
+'model' axis in serving (kNN-LM datastore, serve/knnlm.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import smtree
+from repro.core.smtree import TreeArrays, bulk_build
+
+
+def build_forest(X: np.ndarray, mesh: Mesh, *, axis: str = "model",
+                 capacity: int = 32, metric: str = "d_inf",
+                 seed: int = 0) -> TreeArrays:
+    """Partition X round-robin over the mesh axis and bulk-build one SM-tree
+    per shard.  Returns a TreeArrays whose leaves carry a leading [n_shards]
+    axis sharded over ``axis`` (ids are global)."""
+    n_shards = mesh.shape[axis]
+    n = X.shape[0]
+    per = -(-n // n_shards)
+    trees = []
+    max_nodes = 0
+    for s in range(n_shards):
+        idx = np.arange(s, n, n_shards)
+        t = bulk_build(X[idx], ids=idx, capacity=capacity, metric=metric,
+                       seed=seed + s)
+        trees.append(t)
+        max_nodes = max(max_nodes, t.max_nodes)
+    # pad every shard's node table to the same size, stack
+    def pad_leaf(leaf, target, axis0_pad):
+        pad = [(0, axis0_pad)] + [(0, 0)] * (leaf.ndim - 1)
+        return jnp.pad(leaf, pad)
+
+    stacked = {}
+    import dataclasses
+    fields = [f.name for f in dataclasses.fields(TreeArrays)
+              if f.name not in ("capacity", "dim", "metric", "max_nodes",
+                                "min_fill")]
+    for name in fields:
+        leaves = []
+        for t in trees:
+            leaf = getattr(t, name)
+            if leaf.ndim and leaf.shape[:1] == (t.max_nodes,):
+                leaf = pad_leaf(leaf, max_nodes, max_nodes - t.max_nodes)
+            leaves.append(leaf)
+        stacked[name] = jnp.stack(leaves)
+    proto = trees[0]
+    forest = TreeArrays(capacity=proto.capacity, dim=proto.dim,
+                        metric=proto.metric, max_nodes=max_nodes,
+                        min_fill=proto.min_fill, **stacked)
+    spec = jax.tree.map(lambda _: P(axis), forest)
+    return jax.device_put(forest, NamedSharding(mesh, P(axis))), spec
+
+
+def _local_tree(forest_slice: TreeArrays) -> TreeArrays:
+    """Strip the leading length-1 shard axis inside shard_map."""
+    import dataclasses
+    return dataclasses.replace(
+        forest_slice,
+        **{f: getattr(forest_slice, f)[0]
+           for f in ("vecs", "radius", "pdist", "child", "oid", "valid",
+                     "count", "is_leaf", "alive", "parent", "pslot", "root",
+                     "n_nodes", "height")})
+
+
+def forest_knn(forest: TreeArrays, mesh: Mesh, queries: jax.Array, *,
+               k: int = 8, axis: str = "model", max_frontier: int = 64,
+               batch_axis: str | None = None):
+    """Batched global kNN over the sharded forest.
+
+    queries: [b, dim] (replicated or sharded over ``batch_axis``).
+    Returns (dists [b, k], ids [b, k]) with globally merged results.
+    """
+    in_specs = (P(axis), P(batch_axis))
+    out_specs = (P(batch_axis), P(batch_axis))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    def run(forest_slice, q):
+        tree = _local_tree(forest_slice)
+        res = smtree.knn(tree, q, k=k, max_frontier=max_frontier)
+        # k-way merge across shards: gather candidates, top-k
+        all_d = jax.lax.all_gather(res.dists, axis)            # [S, b, k]
+        all_i = jax.lax.all_gather(res.ids, axis)
+        S = all_d.shape[0]
+        b = q.shape[0]
+        flat_d = all_d.transpose(1, 0, 2).reshape(b, S * k)
+        flat_i = all_i.transpose(1, 0, 2).reshape(b, S * k)
+        neg, sel = jax.lax.top_k(-flat_d, k)
+        return -neg, jnp.take_along_axis(flat_i, sel, axis=1)
+
+    return run(forest, queries)
+
+
+def forest_delete(forest: TreeArrays, mesh: Mesh, xs: jax.Array,
+                  oids: jax.Array, *, axis: str = "model"):
+    """Broadcast a delete batch; each shard applies the ids it owns via the
+    jitted no-underflow fast path (underflow fallback is host-side per shard;
+    eviction workloads delete recent bulk-built entries, so fast-path hit
+    rate is high — measured in benchmarks/bench_engine.py).
+    Returns (forest, found_mask [n])."""
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(P(axis), P(None), P(None)),
+                       out_specs=(P(axis), P(None)), check_rep=False)
+    def run(forest_slice, xs, oids):
+        tree = _local_tree(forest_slice)
+
+        def body(carry, xo):
+            tree = carry
+            x, oid = xo
+            new_tree, found, underflow, _ = smtree.delete_fast(tree, x, oid)
+            # keep the pre-delete tree if underflow (host path resolves later)
+            tree = jax.tree.map(
+                lambda a, b: jnp.where(underflow, a, b), tree, new_tree)
+            return tree, found & ~underflow
+
+        tree, found = jax.lax.scan(body, tree, (xs, oids))
+        found = jax.lax.psum(found.astype(jnp.int32), axis) > 0
+        import dataclasses
+        out = dataclasses.replace(
+            forest_slice,
+            **{f: getattr(tree, f)[None]
+               for f in ("vecs", "radius", "pdist", "child", "oid", "valid",
+                         "count", "is_leaf", "alive", "parent", "pslot",
+                         "root", "n_nodes", "height")})
+        return out, found
+
+    return run(forest, xs, oids)
+
+
+def brute_force_knn(X: jax.Array, mesh: Mesh, queries: jax.Array, *,
+                    k: int = 8, axis: str = "model", metric: str = "d_inf"):
+    """Flat sharded scan baseline (the paper's 'sequential scan' line) using
+    the Pallas distance kernel per shard."""
+    from repro.kernels import ops
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(P(axis), P(None)),
+                       out_specs=(P(None), P(None)), check_rep=False)
+    def run(xs, q):
+        d = ops.pairwise_distance(q, xs, metric=metric)       # [b, n_loc]
+        neg, idx = jax.lax.top_k(-d, k)
+        size = xs.shape[0]
+        me = jax.lax.axis_index(axis)
+        gids = idx + me * size
+        all_d = jax.lax.all_gather(-neg, axis)                # [S, b, k]
+        all_i = jax.lax.all_gather(gids, axis)
+        S, b, _ = all_d.shape
+        fd = all_d.transpose(1, 0, 2).reshape(b, S * k)
+        fi = all_i.transpose(1, 0, 2).reshape(b, S * k)
+        neg2, sel = jax.lax.top_k(-fd, k)
+        return -neg2, jnp.take_along_axis(fi, sel, axis=1)
+
+    return run(X, queries)

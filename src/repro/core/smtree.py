@@ -1,0 +1,498 @@
+"""TPU-native SM-tree engine in JAX.
+
+The paper's pointer-machine structure is re-expressed as a fixed-capacity
+structure-of-arrays (one row per node / one lane per entry) so traversal is
+frontier-at-a-time: every level of the descent scores *all entries of all
+frontier nodes* in one batched metric evaluation (VPU/MXU work via the Pallas
+distance kernel on TPU, the identical jnp math elsewhere), prunes with the
+triangle inequality, and compacts the surviving children into the next
+frontier with a fixed-size top-F selection.
+
+Roles (mirrors production vector-store engines):
+  * data plane  — ``knn``, ``range_search``, ``insert`` fast path, ``delete``
+    fast path: pure jitted functions on the ``TreeArrays`` pytree
+    (lax.while_loop / fori_loop control flow, donate-friendly).
+  * control plane — node splits/merges (amortised-rare structure edits):
+    host-side numpy on the same arrays, sharing the exact split policy of the
+    paper-faithful reference implementation (core/split.py).
+
+The SM-tree invariant r(entry) = max(pdist_child + r_child) is what makes the
+functional formulation possible at all: radius maintenance is a *fold over
+the descent path*, no subtree walks (DESIGN.md §2).
+
+All arrays are padded to static bounds (max_nodes, capacity, max height, max
+frontier) — required for jit and exactly analogous to page-file layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.split import SPLIT_POLICIES
+
+MAX_HEIGHT = 16          # supports capacity^15 objects; plenty
+_INF = jnp.inf
+# the SM radius is a sum of f32-rounded terms; a directly computed distance
+# can exceed the folded bound by an ulp — pad the prune test so borderline
+# subtrees are visited rather than (incorrectly) pruned
+_EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# Tree state
+# --------------------------------------------------------------------------
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["vecs", "radius", "pdist", "child", "oid",
+                                "valid", "count", "is_leaf", "alive",
+                                "parent", "pslot", "root", "n_nodes",
+                                "height"],
+                   meta_fields=["capacity", "dim", "metric", "max_nodes",
+                                "min_fill"])
+@dataclasses.dataclass
+class TreeArrays:
+    vecs: jax.Array      # [N, cap, dim] f32 — entry reference values
+    radius: jax.Array    # [N, cap] f32 — covering radii (0 at leaf entries)
+    pdist: jax.Array     # [N, cap] f32 — d(entry, parent routing object)
+    child: jax.Array     # [N, cap] i32 — child node id; -1 for leaf entries
+    oid: jax.Array       # [N, cap] i32 — object id at leaf entries; -1 else
+    valid: jax.Array     # [N, cap] bool
+    count: jax.Array     # [N] i32
+    is_leaf: jax.Array   # [N] bool
+    alive: jax.Array     # [N] bool — allocated node slots (free-list support)
+    parent: jax.Array    # [N] i32 — parent node id (-1 at root)
+    pslot: jax.Array     # [N] i32 — slot within parent pointing here
+    root: jax.Array      # [] i32
+    n_nodes: jax.Array   # [] i32
+    height: jax.Array    # [] i32
+    capacity: int
+    dim: int
+    metric: str
+    max_nodes: int
+    min_fill: int
+
+    @property
+    def n_objects(self) -> int:
+        return int(jnp.sum(jnp.where(self.is_leaf[:, None] & self.valid,
+                                     1, 0)))
+
+
+def empty_tree(*, dim: int, capacity: int = 32, max_nodes: int = 1024,
+               metric: str = "d_inf", min_fill_frac: float = 0.4) -> TreeArrays:
+    cap, N = capacity, max_nodes
+    return TreeArrays(
+        vecs=jnp.zeros((N, cap, dim), jnp.float32),
+        radius=jnp.zeros((N, cap), jnp.float32),
+        pdist=jnp.zeros((N, cap), jnp.float32),
+        child=jnp.full((N, cap), -1, jnp.int32),
+        oid=jnp.full((N, cap), -1, jnp.int32),
+        valid=jnp.zeros((N, cap), bool),
+        count=jnp.zeros((N,), jnp.int32),
+        is_leaf=jnp.ones((N,), bool),
+        alive=jnp.zeros((N,), bool).at[0].set(True),
+        parent=jnp.full((N,), -1, jnp.int32),
+        pslot=jnp.full((N,), -1, jnp.int32),
+        root=jnp.int32(0), n_nodes=jnp.int32(1), height=jnp.int32(1),
+        capacity=cap, dim=dim, metric=metric, max_nodes=N,
+        min_fill=max(1, math.ceil(min_fill_frac * cap)))
+
+
+def _metric_eval(metric: str, q, e):
+    """q: [..., d]; e: [..., d] broadcast; returns distances [...]."""
+    if metric == "d_inf":
+        return jnp.max(jnp.abs(q - e), axis=-1)
+    if metric == "l2":
+        return jnp.sqrt(jnp.sum((q - e) ** 2, axis=-1))
+    raise ValueError(metric)
+
+
+# --------------------------------------------------------------------------
+# Bulk build (host-side, numpy): balanced bottom-up construction
+# --------------------------------------------------------------------------
+def bulk_build(X: np.ndarray, ids: np.ndarray | None = None, *,
+               capacity: int = 32, metric: str = "d_inf",
+               fill_frac: float = 0.7, min_fill_frac: float = 0.4,
+               seed: int = 0, slack: float = 1.5) -> TreeArrays:
+    """Construct a valid SM-tree over X [n, d] (balanced recursive-bisection
+    grouping, medoid routing objects, exact SM radii).  O(n log n) distance
+    evaluations, fully vectorised per group."""
+    from repro.core.metric import make_metric
+    mfn = make_metric(metric, None)
+    X = np.asarray(X, np.float32)
+    n, dim = X.shape
+    ids = np.arange(n, dtype=np.int64) if ids is None else np.asarray(ids)
+    target = max(2, int(capacity * fill_frac))
+    rng = np.random.default_rng(seed)
+
+    def group(indices: np.ndarray, tgt: int, pts: np.ndarray) -> list[np.ndarray]:
+        """Partition `indices` into ceil(n/tgt) groups of near-equal size via
+        recursive 2-pivot bisection.  Sizes land in [floor(n/parts),
+        ceil(n/parts)] — close to tgt, never near the min-fill floor (naive
+        halving would produce power-of-two sizes ~tgt/2 and leave freshly
+        built leaves one delete away from underflow)."""
+        n_idx = len(indices)
+        parts = -(-n_idx // tgt)
+        if parts <= 1:
+            return [indices]
+        P = pts[indices]
+        a = int(rng.integers(n_idx))
+        da = mfn(P[a][None, :], P)
+        b = int(np.argmax(da))
+        db = mfn(P[b][None, :], P)
+        order = np.argsort(da - db, kind="stable")   # closest-to-a first
+        left_parts = parts // 2
+        cut = round(n_idx * left_parts / parts)
+        return (group(indices[order[:cut]], tgt, pts)
+                + group(indices[order[cut:]], tgt, pts))
+
+    # --- leaves ---
+    leaf_groups = group(np.arange(n), target, X)
+    levels = [leaf_groups]
+
+    # node table accumulators
+    nodes: list[dict] = []
+
+    def medoid(P: np.ndarray, extra: np.ndarray | None = None) -> int:
+        D = np.asarray(mfn(P[:, None, :], P[None, :, :]))
+        if extra is not None:
+            D = D + extra[None, :]
+        return int(D.max(axis=1).argmin())
+
+    # build leaf nodes
+    level_nodes = []   # (node_id, routing_vec, covering_radius)
+    for g in leaf_groups:
+        P = X[g]
+        mi = medoid(P)
+        d_to_m = np.asarray(mfn(P[mi][None, :], P))
+        nid = len(nodes)
+        nodes.append(dict(is_leaf=True, vecs=P, radius=np.zeros(len(g)),
+                          pdist=d_to_m, oid=ids[g], child=np.full(len(g), -1)))
+        level_nodes.append((nid, P[mi], float(d_to_m.max())))
+
+    height = 1
+    while len(level_nodes) > 1:
+        height += 1
+        routing = np.stack([v for _, v, _ in level_nodes])
+        radii = np.array([r for _, _, r in level_nodes])
+        nids = np.array([i for i, _, _ in level_nodes])
+        parent_groups = group(np.arange(len(level_nodes)), target, routing)
+        next_level = []
+        for g in parent_groups:
+            P = routing[g]
+            rg = radii[g]
+            mi = medoid(P, rg)
+            d_to_m = np.asarray(mfn(P[mi][None, :], P))
+            nid = len(nodes)
+            nodes.append(dict(is_leaf=False, vecs=P, radius=rg, pdist=d_to_m,
+                              oid=np.full(len(g), -1), child=nids[g]))
+            next_level.append((nid, P[mi], float((d_to_m + rg).max())))
+        level_nodes = next_level
+
+    root = level_nodes[0][0]
+    N = max(16, int(len(nodes) * slack))
+    t = empty_tree(dim=dim, capacity=capacity, max_nodes=N, metric=metric,
+                   min_fill_frac=min_fill_frac)
+    vecs = np.zeros((N, capacity, dim), np.float32)
+    radius = np.zeros((N, capacity), np.float32)
+    pdist = np.zeros((N, capacity), np.float32)
+    child = np.full((N, capacity), -1, np.int32)
+    oid = np.full((N, capacity), -1, np.int32)
+    valid = np.zeros((N, capacity), bool)
+    count = np.zeros((N,), np.int32)
+    is_leaf = np.ones((N,), bool)
+    parent = np.full((N,), -1, np.int32)
+    pslot = np.full((N,), -1, np.int32)
+    alive = np.zeros((N,), bool)
+    alive[:len(nodes)] = True
+    for i, nd in enumerate(nodes):
+        m = len(nd["oid"])
+        assert m <= capacity, (m, capacity)
+        vecs[i, :m] = nd["vecs"]
+        radius[i, :m] = nd["radius"]
+        pdist[i, :m] = nd["pdist"]
+        child[i, :m] = nd["child"]
+        oid[i, :m] = nd["oid"]
+        valid[i, :m] = True
+        count[i] = m
+        is_leaf[i] = nd["is_leaf"]
+        if not nd["is_leaf"]:
+            for s, c in enumerate(nd["child"]):
+                parent[c] = i
+                pslot[c] = s
+    return dataclasses.replace(
+        t, vecs=jnp.asarray(vecs), radius=jnp.asarray(radius),
+        pdist=jnp.asarray(pdist), child=jnp.asarray(child),
+        oid=jnp.asarray(oid), valid=jnp.asarray(valid),
+        count=jnp.asarray(count), is_leaf=jnp.asarray(is_leaf),
+        alive=jnp.asarray(alive), parent=jnp.asarray(parent),
+        pslot=jnp.asarray(pslot),
+        root=jnp.int32(root), n_nodes=jnp.int32(len(nodes)),
+        height=jnp.int32(height))
+
+
+# --------------------------------------------------------------------------
+# Batched queries (jitted data plane)
+# --------------------------------------------------------------------------
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["dists", "ids", "page_hits", "dist_evals",
+                                "overflow"], meta_fields=[])
+@dataclasses.dataclass
+class QueryResult:
+    dists: jax.Array     # [b, k] (inf-padded)
+    ids: jax.Array       # [b, k] (-1-padded)
+    page_hits: jax.Array # [b] nodes visited
+    dist_evals: jax.Array# [b] metric evaluations
+    overflow: jax.Array  # [b] bool — frontier truncated (result approximate)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_frontier"))
+def knn(tree: TreeArrays, queries: jax.Array, *, k: int = 1,
+        max_frontier: int = 64) -> QueryResult:
+    """Batched k-NN: level-synchronous descent with dynamic search radius.
+
+    queries: [b, dim].  Exact when ``overflow`` is False (frontier never
+    truncated); otherwise best-effort (closest-first truncation).
+    """
+    return _knn_impl(tree, queries, k, max_frontier, jnp.float32(_INF))
+
+
+@functools.partial(jax.jit, static_argnames=("max_results", "max_frontier"))
+def range_search(tree: TreeArrays, queries: jax.Array, radius: jax.Array, *,
+                 max_results: int = 128, max_frontier: int = 64) -> QueryResult:
+    """Batched range query: all objects within ``radius`` (per-query scalar or
+    broadcast).  Returns the closest ``max_results`` matches (overflow flag
+    set if more matched)."""
+    radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32),
+                              (queries.shape[0],))
+    res = _knn_impl(tree, queries, max_results, max_frontier, radius)
+    keep = res.dists <= radius[:, None]
+    return QueryResult(jnp.where(keep, res.dists, _INF),
+                       jnp.where(keep, res.ids, -1),
+                       res.page_hits, res.dist_evals,
+                       res.overflow | (jnp.sum(keep, 1) == max_results))
+
+
+def _knn_impl(tree: TreeArrays, queries: jax.Array, k: int, F: int,
+              r_cap) -> QueryResult:
+    """Shared engine: kNN with dynamic radius additionally capped at r_cap
+    (inf for pure kNN; the query radius for range search)."""
+    b = queries.shape[0]
+    cap = tree.capacity
+    r_cap = jnp.broadcast_to(jnp.asarray(r_cap, jnp.float32), (b,))
+
+    def per_query(q, rc):
+        frontier = jnp.full((F,), -1, jnp.int32).at[0].set(tree.root)
+        topk_d = jnp.full((k,), _INF, jnp.float32)
+        topk_i = jnp.full((k,), -1, jnp.int32)
+        ub = jnp.float32(_INF)  # upper bound on kth-NN distance (d_max bound)
+        stats = jnp.zeros((3,), jnp.int32)  # page_hits, dist_evals, overflow
+        lvl = jnp.int32(0)
+
+        def cond(state):
+            frontier, *_, lvl = state
+            return (lvl < tree.height) & jnp.any(frontier >= 0)
+
+        def body(state):
+            frontier, topk_d, topk_i, ub, stats, lvl = state
+            fvalid = frontier >= 0
+            nodes = jnp.maximum(frontier, 0)
+            evalid = tree.valid[nodes] & fvalid[:, None]        # [F, cap]
+            evecs = tree.vecs[nodes]                            # [F, cap, d]
+            erad = tree.radius[nodes]
+            echild = tree.child[nodes]
+            eoid = tree.oid[nodes]
+            leafy = tree.is_leaf[nodes][:, None]                # [F, 1]
+
+            d = _metric_eval(tree.metric, q[None, None, :], evecs)  # [F, cap]
+            stats = stats.at[0].add(jnp.sum(fvalid.astype(jnp.int32)))
+            stats = stats.at[1].add(jnp.sum(evalid.astype(jnp.int32)))
+
+            # d_max bound: each internal entry's (disjoint, non-empty) subtree
+            # holds an object within d + r, so the kth smallest of all d + r
+            # seen is an upper bound on the kth-NN distance.  This is what
+            # lets level-synchronous descent prune before any leaf is seen.
+            imask0 = evalid & ~leafy
+            dmax = jnp.where(imask0, d + erad, _INF).reshape(-1)
+            kth_dmax = -jax.lax.top_k(-dmax, k)[0][k - 1] + _EPS
+            ub = jnp.minimum(ub, kth_dmax)
+
+            r_q = jnp.minimum(jnp.minimum(topk_d[k - 1], rc), ub)
+            # --- leaf candidates -> merge into running top-k
+            lmask = evalid & leafy & (d <= r_q)
+            cd = jnp.where(lmask, d, _INF).reshape(-1)
+            ci = jnp.where(lmask, eoid, -1).reshape(-1)
+            all_d = jnp.concatenate([topk_d, cd])
+            all_i = jnp.concatenate([topk_i, ci])
+            neg, sel = jax.lax.top_k(-all_d, k)
+            topk_d, topk_i = -neg, all_i[sel]
+            r_q = jnp.minimum(jnp.minimum(topk_d[k - 1], rc), ub)
+
+            # --- surviving internal entries -> next frontier (closest-first)
+            imask = imask0 & ((d - erad) <= r_q + _EPS)
+            score = jnp.where(imask, d - erad, _INF).reshape(-1)
+            childs = echild.reshape(-1)
+            neg_s, order = jax.lax.top_k(-score, F)
+            sel_ok = -neg_s < _INF
+            frontier = jnp.where(sel_ok, childs[order], -1)
+            stats = stats.at[2].max(
+                (jnp.sum(imask) > F).astype(jnp.int32))
+            return frontier, topk_d, topk_i, ub, stats, lvl + 1
+
+        frontier, topk_d, topk_i, ub, stats, _ = jax.lax.while_loop(
+            cond, body, (frontier, topk_d, topk_i, ub, stats, lvl))
+        return topk_d, topk_i, stats
+
+    topk_d, topk_i, stats = jax.vmap(per_query)(queries, r_cap)
+    return QueryResult(topk_d, topk_i, stats[:, 0], stats[:, 1],
+                       stats[:, 2].astype(bool))
+
+
+# --------------------------------------------------------------------------
+# Jitted insert fast path + host-side split fallback
+# --------------------------------------------------------------------------
+@jax.jit
+def _descend(tree: TreeArrays, x: jax.Array):
+    """SM-tree choose-subtree (closest entry) from root to leaf.
+    Returns (path_nodes [MAX_HEIGHT], path_slots [MAX_HEIGHT], leaf_id)."""
+    def body(state):
+        node, lvl, pn, ps = state
+        d = _metric_eval(tree.metric, x[None, :], tree.vecs[node])
+        d = jnp.where(tree.valid[node], d, _INF)
+        slot = jnp.argmin(d)
+        pn = pn.at[lvl].set(node)
+        ps = ps.at[lvl].set(slot.astype(jnp.int32))
+        return tree.child[node, slot], lvl + 1, pn, ps
+
+    def cond(state):
+        node, *_ = state
+        return ~tree.is_leaf[node]
+
+    pn = jnp.full((MAX_HEIGHT,), -1, jnp.int32)
+    ps = jnp.full((MAX_HEIGHT,), -1, jnp.int32)
+    leaf, _, pn, ps = jax.lax.while_loop(cond, body, (tree.root, 0, pn, ps))
+    return pn, ps, leaf
+
+
+def _refresh_path_radii(tree: TreeArrays, pn: jax.Array, ps: jax.Array) -> TreeArrays:
+    """Bottom-up radius fold along the descent path: the SM invariant.
+    r(entry at (pn[i], ps[i])) = max over its child node's valid entries of
+    (pdist [+ radius])."""
+    def body(i, t):
+        lvl = MAX_HEIGHT - 1 - i
+        node = pn[lvl]
+        slot = ps[lvl]
+        ok = node >= 0
+        n = jnp.maximum(node, 0)
+        c = t.child[n, jnp.maximum(slot, 0)]
+        cn = jnp.maximum(c, 0)
+        contrib = t.pdist[cn] + jnp.where(t.is_leaf[cn], 0.0, t.radius[cn])
+        r = jnp.max(jnp.where(t.valid[cn], contrib, -_INF))
+        new_rad = t.radius.at[n, jnp.maximum(slot, 0)].set(
+            jnp.where(ok, jnp.maximum(r, 0.0), t.radius[n, jnp.maximum(slot, 0)]))
+        return dataclasses.replace(t, radius=new_rad)
+
+    return jax.lax.fori_loop(0, MAX_HEIGHT, body, tree)
+
+
+@jax.jit
+def insert_fast(tree: TreeArrays, x: jax.Array, obj_id: jax.Array):
+    """No-split insert.  Returns (tree, fits: bool, leaf_id).  When the leaf
+    is full the tree is returned UNCHANGED with fits=False — the caller runs
+    the host-side split path."""
+    pn, ps, leaf = _descend(tree, x)
+    cnt = tree.count[leaf]
+    fits = cnt < tree.capacity
+    slot = jnp.minimum(cnt, tree.capacity - 1)
+    # parent routing vec: entry pointing at `leaf`
+    has_parent = pn[0] >= 0
+    plast = jnp.argmax(jnp.where(pn >= 0, jnp.arange(MAX_HEIGHT), -1))
+    pnode = pn[plast]
+    pslot = ps[plast]
+    pvec = tree.vecs[jnp.maximum(pnode, 0), jnp.maximum(pslot, 0)]
+    pd = jnp.where(has_parent, _metric_eval(tree.metric, x, pvec), 0.0)
+
+    def apply(t: TreeArrays) -> TreeArrays:
+        t = dataclasses.replace(
+            t,
+            vecs=t.vecs.at[leaf, slot].set(x),
+            radius=t.radius.at[leaf, slot].set(0.0),
+            pdist=t.pdist.at[leaf, slot].set(pd),
+            child=t.child.at[leaf, slot].set(-1),
+            oid=t.oid.at[leaf, slot].set(obj_id.astype(jnp.int32)),
+            valid=t.valid.at[leaf, slot].set(True),
+            count=t.count.at[leaf].add(1))
+        return _refresh_path_radii(t, pn, ps)
+
+    new_tree = jax.lax.cond(fits, apply, lambda t: t, tree)
+    return new_tree, fits, leaf
+
+
+@jax.jit
+def path_to_root(tree: TreeArrays, leaf: jax.Array):
+    """Climb parent pointers: returns (path_nodes, path_slots) root-first,
+    padded with -1 — same layout as _descend's output."""
+    def body(state):
+        node, chain_n, chain_s, depth = state
+        p = tree.parent[node]
+        s = tree.pslot[node]
+        chain_n = chain_n.at[depth].set(p)
+        chain_s = chain_s.at[depth].set(s)
+        return p, chain_n, chain_s, depth + 1
+
+    def cond(state):
+        node, *_ , _d = state
+        return tree.parent[node] >= 0
+
+    cn = jnp.full((MAX_HEIGHT,), -1, jnp.int32)
+    cs = jnp.full((MAX_HEIGHT,), -1, jnp.int32)
+    _, cn, cs, depth = jax.lax.while_loop(cond, body, (leaf, cn, cs, 0))
+    # chain is leaf-first; reverse the filled prefix to be root-first
+    idx = depth - 1 - jnp.arange(MAX_HEIGHT)
+    ok = idx >= 0
+    pn = jnp.where(ok, cn[jnp.maximum(idx, 0)], -1)
+    ps = jnp.where(ok, cs[jnp.maximum(idx, 0)], -1)
+    return pn, ps
+
+
+@jax.jit
+def delete_fast(tree: TreeArrays, x: jax.Array, obj_id: jax.Array):
+    """No-underflow delete.  Returns (tree, found, underflow, leaf_id).
+    On underflow the tree is returned UNCHANGED with underflow=True — caller
+    runs the host-side merge path.  Locates the object by exact id match and
+    climbs parent pointers for the O(h) radius fold."""
+    hit = (tree.oid == obj_id) & tree.valid
+    found = jnp.any(hit)
+    flat = jnp.argmax(hit.reshape(-1))
+    leaf = (flat // tree.capacity).astype(jnp.int32)
+    slot = (flat % tree.capacity).astype(jnp.int32)
+    cnt = tree.count[leaf]
+    # root never underflows
+    underflow = found & (cnt - 1 < tree.min_fill) & (leaf != tree.root)
+
+    pn, ps = path_to_root(tree, leaf)
+
+    def apply(t: TreeArrays) -> TreeArrays:
+        last = cnt - 1
+        # swap-remove: move last entry into the hole
+        t = dataclasses.replace(
+            t,
+            vecs=t.vecs.at[leaf, slot].set(t.vecs[leaf, last]),
+            radius=t.radius.at[leaf, slot].set(t.radius[leaf, last]),
+            pdist=t.pdist.at[leaf, slot].set(t.pdist[leaf, last]),
+            child=t.child.at[leaf, slot].set(t.child[leaf, last]),
+            oid=t.oid.at[leaf, slot].set(t.oid[leaf, last]))
+        t = dataclasses.replace(
+            t,
+            valid=t.valid.at[leaf, last].set(False),
+            oid=t.oid.at[leaf, last].set(-1),
+            count=t.count.at[leaf].add(-1))
+        return _refresh_path_radii(t, pn, ps)
+
+    ok = found & ~underflow
+    new_tree = jax.lax.cond(ok, apply, lambda t: t, tree)
+    return new_tree, found, underflow, leaf

@@ -1,0 +1,1 @@
+from repro.data.datagen import make_dataset, clustered, nonuniform, uniform  # noqa: F401

@@ -1,0 +1,85 @@
+"""Memory-efficient chunked attention in pure XLA (lax.scan flash-style).
+
+Same math as the Pallas kernel, expressed as a scan over KV chunks with an
+online-softmax carry.  Used (a) as the lowering path on non-TPU backends (the
+multi-pod dry-run compiles this), (b) as the recompute backward for the
+Pallas forward, (c) as an oracle cross-check.  Fully differentiable; memory
+is O(sq * d + chunk * d) per head instead of O(sq * sk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                      chunk: int = 512) -> jax.Array:
+    """q: [b, h, sq, d]; k, v: [b, hk, sk, d].  float32 accumulation."""
+    b, h, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    g = h // hk
+    scale = d ** -0.5 if scale is None else scale
+    qf = q.astype(jnp.float32) * scale
+    qf = qf.reshape(b, hk, g * sq, d)  # group folded into rows; positions tracked below
+    qpos = jnp.tile(jnp.arange(sq) + (sk - sq), g)                 # [g*sq]
+
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    sk_p = n_chunks * chunk
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    kf = kf.reshape(b, hk, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vf = vf.reshape(b, hk, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, blk):
+        m, l, acc, j = carry
+        kc, vc = blk                                   # [b, hk, chunk, d]
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc)      # [b, hk, g*sq, chunk]
+        kpos = j * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] < sk
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        return (m_new, l, acc, j + 1), None
+
+    m0 = jnp.full((b, hk, g * sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g * sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hk, g * sq, d), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)), (kf, vf))
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    return out.reshape(b, hk, g, sq, d).reshape(b, h, sq, d).astype(q.dtype)
+
+
+def decode_attention(q1, k, v, *, scale: float | None = None,
+                     kv_len: jax.Array | None = None) -> jax.Array:
+    """Single-position decode attention.
+
+    q1: [b, h, 1, d]; k, v: [b, hk, S, d] (the cache, possibly longer than the
+    valid prefix); kv_len: [b] valid lengths (attend to positions < kv_len).
+    Math in float32; safe-softmax.  This formulation psum-combines cleanly
+    when the cache S axis is sharded (sequence-parallel decode, see
+    models/attention.py).
+    """
+    b, h, _, d = q1.shape
+    _, hk, S, _ = k.shape
+    g = h // hk
+    scale = d ** -0.5 if scale is None else scale
+    qf = q1.astype(jnp.float32).reshape(b, hk, g, d) * scale
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k.astype(jnp.float32))
+    if kv_len is not None:
+        mask = jnp.arange(S)[None, :] < kv_len[:, None]           # [b, S]
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32)) / jnp.where(l == 0, 1, l)
+    return out.reshape(b, h, 1, d).astype(q1.dtype)

@@ -1,0 +1,87 @@
+"""Public jit'd kernel entry points with backend dispatch.
+
+``impl`` policy:
+  * 'auto'    — Pallas/Mosaic on TPU, XLA reference elsewhere (CPU dry-run).
+  * 'pallas'  — force the Mosaic kernel (TPU).
+  * 'interpret' — Pallas interpret mode (CPU correctness validation).
+  * 'xla'     — pure-jnp reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.distance import (pairwise_distance_pallas,
+                                    pairwise_distance_prune_pallas)
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def pairwise_distance(q, e, *, metric: str = "d_inf", impl: str = "auto", **kw):
+    """[nq, d] x [ne, d] -> [nq, ne] distances."""
+    if impl == "auto":
+        impl = _default_impl()
+    if impl == "xla":
+        return ref.pairwise_distance_ref(q, e, metric=metric)
+    if impl == "interpret":
+        return pairwise_distance_pallas(q, e, metric=metric, interpret=True, **kw)
+    return pairwise_distance_pallas(q, e, metric=metric, **kw)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _pallas_attention(q, k, v, causal, scale, interpret):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    return flash_attention_fwd(q, k, v, causal=causal, scale=scale,
+                               interpret=interpret)
+
+
+def _pallas_attention_fwd(q, k, v, causal, scale, interpret):
+    return _pallas_attention(q, k, v, causal, scale, interpret), (q, k, v)
+
+
+def _pallas_attention_bwd(causal, scale, interpret, res, g):
+    # recompute backward through the chunked XLA flash (same math, O(s·d) mem)
+    from repro.kernels.attention_xla import chunked_attention
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: chunked_attention(
+        q_, k_, v_, causal=causal, scale=scale), q, k, v)
+    return vjp(g)
+
+
+_pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+              impl: str = "auto"):
+    """Multi-head GQA attention.  q: [b,h,sq,d]; k,v: [b,hk,sk,d].
+
+    impl: 'auto' | 'pallas' | 'interpret' | 'xla' (chunked flash-style scan)
+    | 'xla_naive' (materialised logits — small shapes/tests only)."""
+    if impl == "auto":
+        impl = _default_impl()
+    if impl == "xla":
+        from repro.kernels.attention_xla import chunked_attention
+        return chunked_attention(q, k, v, causal=causal, scale=scale)
+    if impl == "xla_naive":
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return _pallas_attention(q, k, v, causal, scale, impl == "interpret")
+
+
+def pairwise_distance_prune(q, e, r_q, r_e, *, metric: str = "d_inf",
+                            impl: str = "auto", **kw):
+    """Fused distances + triangle-inequality prune mask."""
+    if impl == "auto":
+        impl = _default_impl()
+    if impl == "xla":
+        m = "sqeuclidean" if metric == "sqeuclidean" else metric
+        dist = ref.pairwise_distance_ref(q, e, metric=m)
+        true_dist = jnp.sqrt(jnp.maximum(dist, 0.0)) if m == "sqeuclidean" else dist
+        return dist, ref.prune_mask_ref(true_dist, r_q, r_e)
+    interp = impl == "interpret"
+    return pairwise_distance_prune_pallas(q, e, r_q, r_e, metric=metric,
+                                          interpret=interp, **kw)

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh and record memory/cost/collective analyses for §Roofline.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first backend init).  Do not move them.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+    python -m repro.launch.dryrun --list
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse   # noqa: E402
+import dataclasses  # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import SHAPES, get_config, list_archs, \
+    shape_applicable  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.roofline import analysis as RA  # noqa: E402
+from repro.roofline.hlo_analysis import analyse_hlo  # noqa: E402
+
+
+def static_bytes_per_device(tree_sds, pspecs, mesh) -> int:
+    """Exact per-device bytes of a sharded pytree (params/opt/cache)."""
+    total = 0
+    for sds, spec in zip(jax.tree.leaves(tree_sds),
+                         jax.tree.leaves(pspecs,
+                                         is_leaf=lambda x: isinstance(
+                                             x, jax.sharding.PartitionSpec))):
+        n = int(np.prod(sds.shape)) if sds.shape else 1
+        denom = 1
+        for part in spec:
+            if part is None:
+                continue
+            for ax in (part if isinstance(part, tuple) else (part,)):
+                denom *= mesh.shape[ax]
+        total += -(-n // denom) * jnp.dtype(sds.dtype).itemsize
+    return total
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def _bf16(cfg):
+    """Production numerics + TP-friendliness padding for the 16-way mesh."""
+    return dataclasses.replace(cfg, param_dtype="bfloat16",
+                               compute_dtype="bfloat16",
+                               head_pad=16, vocab_pad_to=256)
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        keys = ["argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes", "host_argument_size_in_bytes",
+                "peak_memory_in_bytes"]
+        return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    except Exception as e:  # CPU backend may not implement it
+        return {"error": str(e)}
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, cfg_extra=None,
+               ts_extra=None):
+    """Returns (lower_fn, static_mem dict) for a cell.  ``cfg_extra`` /
+    ``ts_extra``: config / TrainSettings overrides for §Perf variants."""
+    cfg = _bf16(get_config(arch))
+    if cfg_extra:
+        cfg = dataclasses.replace(cfg, **cfg_extra)
+    shape = SHAPES[shape_name]
+    from repro.dist import sharding as shd
+    params_sds = M.param_specs(cfg)
+    static = {}
+
+    if shape.kind == "train":
+        from repro.train.train_step import TrainSettings, make_train_step
+        inputs = M.input_specs(cfg, shape)
+        step_fn, sh = make_train_step(cfg, mesh, inputs,
+                                      TrainSettings(attn_impl="xla",
+                                                    **(ts_extra or {})))
+        from repro.train.optimizer import AdamWState
+        opt_sds = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                            params_sds),
+            nu=jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                            params_sds))
+        pspecs = sh["pspecs"]
+        static["params_bytes_dev"] = static_bytes_per_device(
+            params_sds, pspecs, mesh)
+        ospec = jax.tree.map(lambda s: s.spec, sh["opt"].mu,
+                             is_leaf=lambda x: hasattr(x, "spec"))
+        static["opt_bytes_dev"] = 2 * static_bytes_per_device(
+            opt_sds.mu, ospec, mesh)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(sh["params"], sh["opt"], sh["batch"]),
+                         out_shardings=(sh["params"], sh["opt"], sh["metrics"]),
+                         donate_argnums=(0, 1))
+        return (lambda: jitted.lower(params_sds, opt_sds, inputs)), static
+
+    if shape.kind == "prefill":
+        from repro.serve.serve_step import ServeSettings, make_prefill_step
+        fn, sh = make_prefill_step(cfg, mesh, shape,
+                                   ServeSettings(attn_impl="xla"))
+        inputs = M.input_specs(cfg, shape)
+        static["params_bytes_dev"] = static_bytes_per_device(
+            params_sds, sh["pspecs"], mesh)
+        jitted = jax.jit(fn, in_shardings=(sh["params"], sh["batch"]),
+                         out_shardings=sh["logits"])
+        return (lambda: jitted.lower(params_sds, inputs)), static
+
+    # decode
+    from repro.serve.serve_step import ServeSettings, make_decode_step
+    seq_shard = shape.name == "long_500k"
+    fn, sh = make_decode_step(cfg, mesh, shape,
+                              ServeSettings(seq_shard_cache=seq_shard))
+    cache_sds = M.cache_specs(cfg, shape)
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    static["params_bytes_dev"] = static_bytes_per_device(
+        params_sds, sh["pspecs"], mesh)
+    cspec = jax.tree.map(lambda s: s.spec, sh["cache"],
+                         is_leaf=lambda x: hasattr(x, "spec"))
+    static["cache_bytes_dev"] = static_bytes_per_device(
+        cache_sds, cspec, mesh)
+    jitted = jax.jit(fn,
+                     in_shardings=(sh["params"], sh["token"], sh["cache"],
+                                   sh["pos"]),
+                     out_shardings=(sh["token"], sh["logits"], sh["cache"]),
+                     donate_argnums=(2,))
+    return (lambda: jitted.lower(params_sds, tok_sds, cache_sds, pos_sds)), \
+        static
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             save: bool = True, verbose: bool = True, cfg_extra=None,
+             ts_extra=None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "n_chips": n_chips, "tag": tag,
+                    "mesh_shape": dict(mesh.shape)}
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+    else:
+        try:
+            t0 = time.time()
+            with mesh:
+                thunk, static = build_cell(arch, shape_name, mesh,
+                                           cfg_extra=cfg_extra,
+                                           ts_extra=ts_extra)
+                lowered = thunk()
+                t_lower = time.time() - t0
+                t0 = time.time()
+                compiled = lowered.compile()
+                t_compile = time.time() - t0
+            mem = _mem_analysis(compiled)
+            cost = _cost_analysis(compiled)
+            txt = compiled.as_text()
+            hlo = analyse_hlo(txt)      # trip-count-corrected per-chip totals
+            mf = RA.model_flops(cfg, shape)
+            coll = {"per_op_bytes": hlo["collectives"],
+                    "counts": hlo["collective_counts"],
+                    "total_bytes": hlo["collective_bytes"]}
+            roof = RA.analyse({"flops": hlo["flops"],
+                               "bytes accessed": hlo["bytes"]},
+                              coll, n_chips=n_chips,
+                              model_flops_global=mf).to_dict()
+            record.update(status="ok", lower_s=round(t_lower, 1),
+                          compile_s=round(t_compile, 1),
+                          memory_analysis=mem, cost_analysis_raw=cost,
+                          hlo_analysis={k: v for k, v in hlo.items()
+                                        if k != "while_trips"},
+                          while_trips=hlo["while_trips"],
+                          static_memory=static,
+                          collectives=coll, roofline=roof,
+                          params=M.exact_param_count(cfg),
+                          active_params=cfg.active_param_count,
+                          hlo_bytes=len(txt))
+        except Exception as e:
+            record["status"] = "error"
+            record["error"] = f"{type(e).__name__}: {e}"
+            record["traceback"] = traceback.format_exc()[-4000:]
+    if verbose:
+        s = record["status"]
+        extra = ""
+        if s == "ok":
+            r = record["roofline"]
+            extra = (f" bottleneck={r['bottleneck']} "
+                     f"frac={r['roofline_frac']:.3f} "
+                     f"compile={record['compile_s']}s")
+        elif s == "error":
+            extra = " " + record["error"][:160]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}"
+              f"{' #' + tag if tag else ''}: {s}{extra}", flush=True)
+    if save:
+        out_dir = ART_DIR if not tag else os.path.join(
+            ART_DIR, "..", "perf")
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}__{shape_name}__{mesh_kind}"
+        if tag:
+            name += f"__{tag}"
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in list_archs():
+            for s in SHAPES:
+                print(a, s)
+        return
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                path = os.path.join(
+                    ART_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            continue
+                rec = run_cell(arch, shape_name, mesh_kind)
+                failures += rec["status"] == "error"
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

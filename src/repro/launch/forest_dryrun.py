@@ -1,0 +1,101 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run of the distributed SM-forest query step on the production mesh —
+the paper-representative §Perf cell.
+
+Builds a real forest (host-side bulk build, one SM-tree shard per 'model'
+rank), lowers the shard_map'd ``forest_knn`` fan-out for a serving batch and
+records the roofline terms exactly like the LM cells.
+
+    python -m repro.launch.forest_dryrun [--capacity 32] [--frontier 64]
+        [--n 262144] [--batch 256] [--k 8] [--tag base]
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.distributed import build_forest, forest_knn  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.roofline import analysis as RA  # noqa: E402
+from repro.roofline.hlo_analysis import analyse_hlo  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "perf")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=262_144)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=32)
+    ap.add_argument("--frontier", type=int, default=64)
+    ap.add_argument("--metric", default="l2")
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--batch-axis", default=None,
+                    help="shard queries over this mesh axis (2D serving)")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh()          # 16x16 single pod
+    n_chips = 256
+    rng = np.random.default_rng(0)
+    X = rng.random((args.n, args.dim), np.float32)
+
+    t0 = time.time()
+    forest, _ = build_forest(X, mesh, capacity=args.capacity,
+                             metric=args.metric)
+    build_s = time.time() - t0
+
+    q_sds = jax.ShapeDtypeStruct((args.batch, args.dim), jnp.float32)
+
+    def step(forest, q):
+        return forest_knn(forest, mesh, q, k=args.k,
+                          max_frontier=args.frontier,
+                          batch_axis=args.batch_axis)
+
+    with mesh:
+        t0 = time.time()
+        lowered = jax.jit(step).lower(forest, q_sds)
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+    txt = compiled.as_text()
+    hlo = analyse_hlo(txt)
+
+    # 'useful' yardstick: the distance evaluations a perfectly pruned search
+    # must do — frontier * capacity * levels per query, at 2*dim flops each
+    n_nodes = int(np.asarray(forest.n_nodes).max())
+    height = int(np.asarray(forest.height).max())
+    useful_flops = args.batch * height * args.frontier * args.capacity \
+        * 2 * args.dim / n_chips
+    coll = {"per_op_bytes": hlo["collectives"],
+            "counts": hlo["collective_counts"],
+            "total_bytes": hlo["collective_bytes"]}
+    roof = RA.analyse({"flops": hlo["flops"], "bytes accessed": hlo["bytes"]},
+                      coll, n_chips=n_chips,
+                      model_flops_global=useful_flops * n_chips).to_dict()
+    rec = dict(kind="forest_knn", tag=args.tag, n=args.n, dim=args.dim,
+               batch=args.batch, k=args.k, capacity=args.capacity,
+               frontier=args.frontier, build_s=round(build_s, 1),
+               compile_s=round(compile_s, 1), n_nodes_per_shard=n_nodes,
+               height=height, roofline=roof,
+               hlo_analysis={k: v for k, v in hlo.items()
+                             if k != "while_trips"})
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"forest_knn__{args.tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    r = roof
+    print(f"[forest] tag={args.tag} cap={args.capacity} F={args.frontier}: "
+          f"compute {r['compute_s']:.4f}s memory {r['memory_s']:.4f}s "
+          f"collective {r['collective_s']:.4f}s bottleneck={r['bottleneck']} "
+          f"(compile {compile_s:.0f}s, build {build_s:.0f}s)")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

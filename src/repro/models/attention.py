@@ -1,0 +1,116 @@
+"""GQA attention block: train/prefill (flash path) + cached decode.
+
+Sharding-first design decisions (see DESIGN.md §6):
+  * Projection weights are HEAD-SHAPED ([D, H, dh] / [H, dh, D]) and sharded
+    on the head axis — never flat [D, H*dh] + reshape, which fights GSPMD
+    when H doesn't divide the model axis (yi-34b 56H, starcoder2 24H, ...).
+    Uneven head counts just pad.
+  * K/V weights and activations are REPLICATED across 'model' (kv heads are
+    2..32 — the projection is tiny) and broadcast to query heads via
+    jnp.repeat, which is free on the sharded head axis.  This keeps the
+    attention einsums collective-free under TP.
+  * Decode uses the safe-softmax formulation whose (m, l, acc) statistics
+    combine across sequence-sharded KV caches (long-context decode).
+
+``ATTN_IMPL``: 'pallas' on TPU, 'xla' (chunked scan flash) for CPU
+lowering/dry-run, 'xla_naive' for tiny test shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.attention_xla import decode_attention
+from repro.models.layers import apply_rope, truncated_normal
+
+ATTN_IMPL = "xla"  # module-level default; launchers override
+
+
+def attn_init(key, cfg, dtype):
+    D, dh = cfg.d_model, cfg.d_head
+    H, KV = cfg.padded_heads, cfg.padded_kv_heads
+    ks = jax.random.split(key, 4)
+    scale = D ** -0.5
+    p = {
+        "wq": truncated_normal(ks[0], (D, H, dh), scale, dtype),
+        "wk": truncated_normal(ks[1], (D, KV, dh), scale, dtype),
+        "wv": truncated_normal(ks[2], (D, KV, dh), scale, dtype),
+        "wo": truncated_normal(ks[3], (H, dh, D), (H * dh) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, dh), dtype)
+        p["bk"] = jnp.zeros((KV, dh), dtype)
+        p["bv"] = jnp.zeros((KV, dh), dtype)
+    return p
+
+
+def _head_mask(cfg, out):
+    """Zero the padded q-heads (axis 1 of [b, H, s, dh]) so padding is
+    exactly inert (no gradient ever reaches pad-head parameters)."""
+    Hp = cfg.padded_heads
+    if Hp == cfg.n_heads:
+        return out
+    mask = (jnp.arange(Hp) < cfg.n_heads).astype(out.dtype)
+    return out * mask[None, :, None, None]
+
+
+def _project_qkv(p, cfg, x, pos):
+    """x: [b, s, D] -> q [b, H, s, dh], k/v [b, KV, s, dh]."""
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bhse", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bhse", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)[None, :, None, :]
+        k = k + p["bk"].astype(x.dtype)[None, :, None, :]
+        v = v + p["bv"].astype(x.dtype)[None, :, None, :]
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, pos[:, None, :], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def _out_proj(p, cfg, out):
+    """out: [b, H, s, dh] -> [b, s, D]."""
+    return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(out.dtype))
+
+
+def attn_apply(p, cfg, x, *, pos, impl=None):
+    """Full-sequence causal attention.  x: [b, s, D]; pos: [b, s]."""
+    q, k, v = _project_qkv(p, cfg, x, pos)
+    g = cfg.padded_heads // cfg.padded_kv_heads
+    if g > 1:  # broadcast KV to query heads (free on the sharded head axis)
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    out = ops.attention(q, k, v, causal=True, impl=impl or ATTN_IMPL)
+    return _out_proj(p, cfg, _head_mask(cfg, out))
+
+
+def attn_decode(p, cfg, x1, cache_kv, pos_scalar):
+    """Single-token decode.  x1: [b, 1, D]; cache_kv: (k, v) [b, KV, S, dh];
+    pos_scalar: [] position of the new token.  Returns (y1, new_cache).
+
+    The cache insert is a masked (elementwise) write: it partitions with no
+    collectives whether S is sharded over 'model' (decode_32k) or
+    ('data','model') (long_500k) — a dynamic_update_slice at a dynamic index
+    on a sharded axis would regather the cache.  decode_attention handles
+    GQA by folding q (tiny at decode) rather than repeating K/V (which would
+    multiply cache reads by the group size)."""
+    b = x1.shape[0]
+    pos = jnp.full((b, 1), pos_scalar, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x1, pos)
+    ck, cv = cache_kv
+    S = ck.shape[2]
+    hit = (jnp.arange(S, dtype=jnp.int32) == pos_scalar)[None, None, :, None]
+    ck = jnp.where(hit, k.astype(ck.dtype), ck)
+    cv = jnp.where(hit, v.astype(cv.dtype), cv)
+    kv_len = jnp.full((b,), pos_scalar + 1, jnp.int32)
+    out = decode_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                           kv_len=kv_len)
+    return _out_proj(p, cfg, _head_mask(cfg, out)), (ck, cv)
+
+
+def init_kv_cache(cfg, batch: int, length: int, dtype) -> tuple:
+    KV, dh = cfg.padded_kv_heads, cfg.d_head
+    shape = (batch, KV, length, dh)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

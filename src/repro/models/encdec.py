@@ -1,0 +1,192 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a stub per the assignment: ``input_specs`` supplies
+precomputed frame embeddings [b, s_enc, D] (what the two conv layers would
+emit).  Encoder: bidirectional self-attention, sinusoidal positions.
+Decoder: causal self-attention + cross-attention, learned positions, bounded
+at ``max_target_len``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain_batch_seq
+from repro.kernels import ops
+from repro.kernels.attention_xla import decode_attention
+from repro.models import attention as attn_mod
+from repro.models.layers import (apply_norm, dense, dense_init, mlp_apply,
+                                 mlp_init, norm_init, sinusoidal_positions,
+                                 truncated_normal)
+
+
+def _xattn_init(key, cfg, dtype):
+    return attn_mod.attn_init(key, cfg, dtype)
+
+
+def init_encdec(cfg: ArchConfig, rng) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    D = cfg.d_model
+
+    def enc_block(key):
+        ka, kf = jax.random.split(key)
+        return {"norm1": norm_init(D, cfg.norm, dtype),
+                "attn": attn_mod.attn_init(ka, cfg, dtype),
+                "norm2": norm_init(D, cfg.norm, dtype),
+                "ffn": mlp_init(kf, D, cfg.d_ff, dtype, gated=cfg.gated_mlp)}
+
+    def dec_block(key):
+        ka, kx, kf = jax.random.split(key, 3)
+        return {"norm1": norm_init(D, cfg.norm, dtype),
+                "attn": attn_mod.attn_init(ka, cfg, dtype),
+                "normx": norm_init(D, cfg.norm, dtype),
+                "xattn": _xattn_init(kx, cfg, dtype),
+                "norm2": norm_init(D, cfg.norm, dtype),
+                "ffn": mlp_init(kf, D, cfg.d_ff, dtype, gated=cfg.gated_mlp)}
+
+    enc_keys = jax.random.split(k1, cfg.encoder_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": truncated_normal(k3, (cfg.padded_vocab, D), 1.0, dtype),
+        "dec_pos": truncated_normal(k4, (cfg.max_target_len, D), 0.02, dtype),
+        "enc_blocks": jax.vmap(enc_block)(enc_keys),
+        "dec_blocks": jax.vmap(dec_block)(dec_keys),
+        "enc_norm": norm_init(D, cfg.norm, dtype),
+        "final_norm": norm_init(D, cfg.norm, dtype),
+    }
+
+
+def _proj_qkv(p, x_q, x_kv):
+    q = jnp.einsum("bsd,dhe->bhse", x_q, p["wq"].astype(x_q.dtype))
+    k = jnp.einsum("bsd,dhe->bhse", x_kv, p["wk"].astype(x_kv.dtype))
+    v = jnp.einsum("bsd,dhe->bhse", x_kv, p["wv"].astype(x_kv.dtype))
+    return q, k, v
+
+
+def _self_attn(p, cfg, x, pos, causal, impl):
+    q, k, v = _proj_qkv(p, x, x)
+    out = ops.attention(q, k, v, causal=causal, impl=impl or attn_mod.ATTN_IMPL)
+    return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(out.dtype))
+
+
+def _cross_attn(p, cfg, x, mem, impl):
+    q, k, v = _proj_qkv(p, x, mem)
+    out = ops.attention(q, k, v, causal=False, impl=impl or attn_mod.ATTN_IMPL)
+    return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(out.dtype))
+
+
+def encode(params, cfg: ArchConfig, frames, *, attn_impl=None):
+    """frames: [b, s_enc, D] stub embeddings -> encoder memory."""
+    b, s, D = frames.shape
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + jnp.asarray(sinusoidal_positions(s, D), x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def block(x, p):
+        x = constrain_batch_seq(x)
+        h = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+        x = x + _self_attn(p["attn"], cfg, h, pos, False, attn_impl)
+        h = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        return x + mlp_apply(p["ffn"], h, gated=cfg.gated_mlp), None
+
+    x, _ = jax.lax.scan(block, x, params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+def encdec_forward(params, cfg: ArchConfig, batch, *, remat=False,
+                   attn_impl=None):
+    """batch: {frames [b,s_enc,D], tokens [b,s_dec]} -> (logits, aux)."""
+    mem = encode(params, cfg, batch["frames"], attn_impl=attn_impl)
+    tok = batch["tokens"]
+    b, s = tok.shape
+    x = params["embed"][tok].astype(mem.dtype)
+    x = x + params["dec_pos"][:s].astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def block(x, p):
+        x = constrain_batch_seq(x)
+        h = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+        x = x + _self_attn(p["attn"], cfg, h, pos, True, attn_impl)
+        h = apply_norm(p["normx"], x, cfg.norm, cfg.norm_eps)
+        x = x + _cross_attn(p["xattn"], cfg, h, mem, attn_impl)
+        h = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        return x + mlp_apply(p["ffn"], h, gated=cfg.gated_mlp), None
+
+    f = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(f, x, params["dec_blocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, {"lb_loss": 0.0, "z_loss": 0.0, "drop_frac": 0.0}
+
+
+# ---- cached decode ----------------------------------------------------------
+def encdec_init_cache(cfg: ArchConfig, batch: int, enc_len: int, dtype=None):
+    """Self-attn KV cache (bounded by max_target_len) + cross-attn K/V
+    (computed once from the encoder memory at prefill)."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    KV, dh = cfg.padded_kv_heads, cfg.d_head
+    L = cfg.n_layers
+    S = cfg.max_target_len
+    return {
+        "self_k": jnp.zeros((L, batch, KV, S, dh), dtype),
+        "self_v": jnp.zeros((L, batch, KV, S, dh), dtype),
+        "cross_k": jnp.zeros((L, batch, KV, enc_len, dh), dtype),
+        "cross_v": jnp.zeros((L, batch, KV, enc_len, dh), dtype),
+    }
+
+
+def encdec_prefill_cache(params, cfg, frames, cache, *, attn_impl=None):
+    """Run the encoder and fill the cross-attention K/V."""
+    mem = encode(params, cfg, frames, attn_impl=attn_impl)
+    b, sm, _ = mem.shape
+    KV, dh = cfg.n_kv_heads, cfg.d_head
+
+    def per_layer(p):
+        k = jnp.einsum("bsd,dhe->bhse", mem, p["xattn"]["wk"].astype(mem.dtype))
+        v = jnp.einsum("bsd,dhe->bhse", mem, p["xattn"]["wv"].astype(mem.dtype))
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["dec_blocks"])
+    return dict(cache, cross_k=ks.astype(cache["cross_k"].dtype),
+                cross_v=vs.astype(cache["cross_v"].dtype))
+
+
+def encdec_decode_step(params, cfg: ArchConfig, token, cache, pos_scalar):
+    b = token.shape[0]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    x = params["embed"][token][:, None, :].astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["dec_pos"][pos_scalar][None, None].astype(x.dtype)
+
+    def block(x1, xs):
+        p, sk, sv, ck, cv = xs
+        h = apply_norm(p["norm1"], x1, cfg.norm, cfg.norm_eps)
+        q, k1, v1 = _proj_qkv(p["attn"], h, h)
+        S = sk.shape[2]
+        hit = (jnp.arange(S, dtype=jnp.int32) == pos_scalar)[None, None, :, None]
+        sk = jnp.where(hit, k1.astype(sk.dtype), sk)
+        sv = jnp.where(hit, v1.astype(sv.dtype), sv)
+        kv_len = jnp.full((b,), pos_scalar + 1, jnp.int32)
+        o = decode_attention(q, sk.astype(q.dtype), sv.astype(q.dtype),
+                             kv_len=kv_len)
+        x1 = x1 + jnp.einsum("bhse,hed->bsd", o,
+                             p["attn"]["wo"].astype(o.dtype))
+        h = apply_norm(p["normx"], x1, cfg.norm, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhe->bhse", h, p["xattn"]["wq"].astype(h.dtype))
+        ox = decode_attention(qx, ck.astype(qx.dtype), cv.astype(qx.dtype))
+        x1 = x1 + jnp.einsum("bhse,hed->bsd", ox,
+                             p["xattn"]["wo"].astype(ox.dtype))
+        h = apply_norm(p["norm2"], x1, cfg.norm, cfg.norm_eps)
+        x1 = x1 + mlp_apply(p["ffn"], h, gated=cfg.gated_mlp)
+        return x1, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        block, x, (params["dec_blocks"], cache["self_k"], cache["self_v"],
+                   cache["cross_k"], cache["cross_v"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits[:, 0], dict(cache, self_k=sk, self_v=sv)

@@ -1,0 +1,94 @@
+"""Shared neural-net layers (pure JAX, no framework deps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, *, bias=False, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": truncated_normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def norm_init(d, kind, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind, eps):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---- rotary position embeddings -------------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [..., s, d]; pos: broadcastable to [..., s]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [d/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs   # [..., s, d/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / 10_000 ** (dim / d)
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+# ---- MLPs -------------------------------------------------------------------
+def mlp_init(key, d, f, dtype, *, gated=True):
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {"wi": dense_init(ks[0], d, f, dtype),
+                "wg": dense_init(ks[1], d, f, dtype),
+                "wo": dense_init(ks[2], f, d, dtype)}
+    return {"wi": dense_init(ks[0], d, f, dtype),
+            "wo": dense_init(ks[2], f, d, dtype)}
+
+
+def mlp_apply(p, x, *, gated=True):
+    if gated:
+        h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x))
+    return dense(p["wo"], h)

@@ -1,0 +1,186 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch.
+
+Top-k routing -> per-expert capacity C = tokens*k/E * capacity_factor;
+tokens above capacity are dropped (standard Switch/GShard semantics, drop
+fraction reported via aux).  Expert FFN weights are stored stacked [E, ...]
+and tensor-parallel over the mesh 'model' axis on the hidden dim (see
+dist/sharding.py); an expert-parallel all_to_all variant is a recorded §Perf
+alternative.  Shared experts (qwen2-moe) run densely for every token.
+
+The router runs in float32 (standard practice: bf16 router logits destabilise
+top-k at scale).  Aux losses: load-balancing (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, mlp_init, mlp_apply, truncated_normal
+
+
+def moe_init(key, cfg, dtype):
+    D = cfg.d_model
+    F = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.padded_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": truncated_normal(ks[0], (D, E), D ** -0.5, jnp.float32),
+        "wi": truncated_normal(ks[1], (E, D, F), D ** -0.5, dtype),
+        "wg": truncated_normal(ks[2], (E, D, F), D ** -0.5, dtype),
+        "wo": truncated_normal(ks[3], (E, F, D), F ** -0.5, dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], D, F * cfg.n_shared_experts, dtype,
+                               gated=True)
+    return p
+
+
+def _data_axis_size() -> int:
+    from repro.dist.sharding import _ambient_mesh
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, getattr(mesh, "axis_sizes", ()))) \
+        if hasattr(mesh, "axis_sizes") else dict(mesh.shape)
+    return int(sizes.get("data", 1))
+
+
+def moe_apply_ep(p, cfg, x, capacity: int | None = None):
+    """Expert-parallel MoE via shard_map: local capacity dispatch + explicit
+    all_to_all over 'data' (experts sharded E/G per data rank), GSPMD 'auto'
+    for the tensor-parallel FFN inside.  A GSPMD-only formulation was tried
+    and refuted (EXPERIMENTS.md §Perf B2): the partitioner cannot prove the
+    dispatch scatter's batch dimension parallel and all-reduces the full
+    [E, C, D] buffer per layer."""
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import _ambient_mesh
+
+    mesh = _ambient_mesh()
+    b, s, D = x.shape
+    E, k = cfg.padded_experts, cfg.experts_per_token
+    T = b * s
+    sizes = {} if mesh is None else (
+        dict(zip(mesh.axis_names, getattr(mesh, "axis_sizes", ())))
+        if hasattr(mesh, "axis_sizes") else dict(mesh.shape))
+    G = int(sizes.get("data", 1))
+    if mesh is None or G <= 1 or b % G or E % G:
+        return moe_apply(p, cfg, x, capacity)
+    C = capacity or max(1, int(T * k / cfg.n_experts * cfg.capacity_factor))
+    Cg = max(1, -(-min(C, T) // G))
+    F = cfg.moe_d_ff or cfg.d_ff
+
+    def body(xl, router, wi, wg, wo):
+        # xl: [b/G, s, D] local tokens; wi/wg: [E/G, D, F]; wo: [E/G, F, D]
+        bl = xl.shape[0]
+        Tl = bl * s
+        xf = xl.reshape(Tl, D)
+        logits = xf.astype(jnp.float32) @ router               # [Tl, E]
+        if E != cfg.n_experts:
+            pad_mask = jnp.arange(E) >= cfg.n_experts
+            logits = jnp.where(pad_mask[None, :], -1e30, logits)
+        probs = jax.nn.softmax(logits, -1)
+        gate_v, gate_i = jax.lax.top_k(probs, k)
+        gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+        onehot = jax.nn.one_hot(gate_i, E, dtype=jnp.int32)
+        flat = onehot.reshape(Tl * k, E)
+        pos = ((jnp.cumsum(flat, axis=0) - 1) * flat).sum(-1)   # [Tl*k]
+        keep = pos < Cg
+        e_idx = gate_i.reshape(-1)
+        c_idx = jnp.clip(pos, 0, Cg - 1)
+        src = jnp.repeat(xf, k, axis=0)
+        buf = jnp.zeros((E, Cg, D), xl.dtype)
+        buf = buf.at[e_idx, c_idx].add(jnp.where(keep[:, None], src, 0))
+        # dispatch all_to_all: [E, Cg, D] -> [E/G, G*Cg, D]
+        buf = jax.lax.all_to_all(buf, "data", split_axis=0, concat_axis=1,
+                                 tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", buf, wg.astype(xl.dtype))
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf,
+                                        wi.astype(xl.dtype))
+        out_e = jnp.einsum("ecf,efd->ecd", h, wo.astype(xl.dtype))
+        # combine all_to_all: [E/G, G*Cg, D] -> [E, Cg, D]
+        out_e = jax.lax.all_to_all(out_e, "data", split_axis=1, concat_axis=0,
+                                   tiled=True)
+        picked = out_e[e_idx, c_idx]
+        w = (gate_v.reshape(-1, 1) * keep[:, None]).astype(xl.dtype)
+        y = (picked * w).reshape(Tl, k, D).sum(1).reshape(bl, s, D)
+        me = probs.mean(0)
+        ce = (flat.sum(0) / jnp.maximum(flat.sum(), 1)).astype(jnp.float32)
+        aux = jnp.stack([cfg.n_experts * jnp.sum(me * ce),
+                         jnp.mean(jax.nn.logsumexp(logits, -1) ** 2),
+                         1.0 - keep.mean()])
+        return y, aux[None]
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(P("data", None, None), P(), P("data"),
+                                 P("data"), P("data")),
+                       out_specs=(P("data", None, None), P("data")),
+                       axis_names={"data"}, check_vma=False)
+    y, aux = fn(x, p["router"], p["wi"], p["wg"], p["wo"])
+    aux = aux.mean(0)
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, gated=True)
+    return y, {"lb_loss": aux[0], "z_loss": aux[1], "drop_frac": aux[2]}
+
+
+def moe_apply(p, cfg, x, capacity: int | None = None):
+    """x: [b, s, D] -> (y, aux) with aux = dict(lb_loss, z_loss, drop_frac).
+
+    ``capacity`` overrides the per-expert buffer size; decode passes C=T for
+    dropless (deterministic) serving."""
+    if cfg.moe_ep and capacity is None:
+        return moe_apply_ep(p, cfg, x, capacity)
+    b, s, D = x.shape
+    E, k = cfg.padded_experts, cfg.experts_per_token
+    T = b * s
+    C = capacity or max(1, int(T * k / cfg.n_experts * cfg.capacity_factor))
+    C = min(C, T)
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # [T, E]
+    if E != cfg.n_experts:   # padded experts never win routing
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, -1)
+    gate_v, gate_i = jax.lax.top_k(probs, k)                    # [T, k]
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_i, E, dtype=jnp.int32)         # [T, k, E]
+    flat = onehot.reshape(T * k, E)
+    pos_in_e = jnp.cumsum(flat, axis=0) * flat - 1              # [T*k, E]
+    pos = (pos_in_e * flat).sum(-1).reshape(T, k)               # [T, k]
+    keep = (pos < C) & (pos >= 0)
+
+    # scatter tokens into [E, C, D]
+    e_idx = gate_i.reshape(-1)
+    c_idx = jnp.clip(pos.reshape(-1), 0, C - 1)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    src = jnp.repeat(xf, k, axis=0)
+    buf = buf.at[e_idx, c_idx].add(jnp.where(keep.reshape(-1, 1), src, 0))
+    if cfg.moe_ep:
+        # expert parallelism: dispatch buffer sharded by expert over 'data'
+        # (GSPMD lowers the scatter/gather to all_to_all), expert weights
+        # live E-sharded — no FSDP weight regathers
+        from repro.dist.sharding import constrain
+        buf = constrain(buf, "data", None, None)
+
+    # expert FFN (SwiGLU), batched over E
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype))
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(x.dtype))
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))  # [E, C, D]
+
+    # gather back with gate weights
+    picked = out_e[e_idx, c_idx]                                 # [T*k, D]
+    w = (gate_v.reshape(-1, 1) * keep.reshape(-1, 1)).astype(x.dtype)
+    y = (picked * w).reshape(T, k, D).sum(1).reshape(b, s, D)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, gated=True)
+
+    # aux losses
+    me = probs.mean(0)                                            # [E]
+    ce = (flat.sum(0) / jnp.maximum(flat.sum(), 1)).astype(jnp.float32)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+    drop_frac = 1.0 - keep.mean()
+    return y, {"lb_loss": lb_loss, "z_loss": z_loss, "drop_frac": drop_frac}

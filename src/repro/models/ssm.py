@@ -1,0 +1,139 @@
+"""Mamba (selective SSM) block — jamba's sequence mixer.
+
+Train path: chunked selective scan — `lax.scan` over sequence chunks with an
+`associative_scan` inside each chunk, so the [B, L, d_inner, state] working
+set is bounded by the chunk length (the TPU analogue of the fused CUDA
+selective-scan: bound the h-materialisation window, keep it in fast memory).
+Decode path: single-step recurrence, O(1) per token — this is what makes
+jamba's long_500k cell run.
+
+Layout: d_inner is the sharded axis (TP over 'model'); the scan is
+elementwise over d_inner so it needs no cross-shard communication.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, truncated_normal
+
+
+def _dt_rank(cfg) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_init(key, cfg, dtype):
+    D = cfg.d_model
+    di = cfg.ssm_expand * D
+    n = cfg.ssm_state
+    kc = cfg.ssm_conv
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di, dtype),
+        "conv_w": truncated_normal(ks[1], (kc, di), kc ** -0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, r + 2 * n, dtype),
+        "dt_proj": dense_init(ks[3], r, di, dtype, bias=True),
+        "A_log": jnp.log(A),                      # [di, n] f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, D, dtype),
+    }
+
+
+def _ssm_params(p, cfg, xc):
+    """xc: [..., di] post-conv activations -> (dt, B, C) selective params."""
+    n = cfg.ssm_state
+    r = _dt_rank(cfg)
+    dbc = dense(p["x_proj"], xc)
+    dt, Bm, Cm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt).astype(jnp.float32))  # [..., di]
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def mamba_apply(p, cfg, x, *, chunk: int = 256):
+    """x: [b, s, D] -> [b, s, D] (causal)."""
+    b, s, D = x.shape
+    di = cfg.ssm_expand * D
+    n = cfg.ssm_state
+    kc = cfg.ssm_conv
+
+    xz = dense(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                  # [b, s, di]
+
+    # causal depthwise conv along s
+    pad = jnp.pad(xi, ((0, 0), (kc - 1, 0), (0, 0)))
+    xc = sum(pad[:, i:i + s, :] * p["conv_w"][i].astype(x.dtype)
+             for i in range(kc)) + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+
+    dt, Bm, Cm = _ssm_params(p, cfg, xc)               # [b,s,di],[b,s,n],[b,s,n]
+    A = -jnp.exp(p["A_log"])                           # [di, n]
+    xcf = xc.astype(jnp.float32)
+
+    L = min(chunk, s)
+    n_chunks = -(-s // L)
+    sp = n_chunks * L
+
+    def padc(a):
+        return jnp.pad(a, ((0, 0), (0, sp - s)) + ((0, 0),) * (a.ndim - 2))
+
+    dtc = padc(dt).reshape(b, n_chunks, L, di).transpose(1, 0, 2, 3)
+    Bc = padc(Bm).reshape(b, n_chunks, L, n).transpose(1, 0, 2, 3)
+    Cc = padc(Cm).reshape(b, n_chunks, L, n).transpose(1, 0, 2, 3)
+    xcc = padc(xcf).reshape(b, n_chunks, L, di).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, blk):
+        dt_, B_, C_, x_ = blk                          # [b, L, ...]
+        dA = jnp.exp(dt_[..., None] * A)               # [b, L, di, n]
+        dBx = (dt_ * x_)[..., None] * B_[:, :, None, :]
+        # inclusive associative scan of h' = a*h + u within the chunk
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+        aa, uu = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+        hs = aa * h[:, None] + uu                      # [b, L, di, n]
+        y = jnp.einsum("blin,bln->bli", hs, C_)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (dtc, Bc, Cc, xcc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, sp, di)[:, :s]
+    y = y + xcf * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return dense(p["out_proj"], y)
+
+
+def mamba_init_cache(cfg, batch, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, cfg, x1, cache):
+    """x1: [b, 1, D] -> (y1, new_cache); O(1) per token."""
+    b = x1.shape[0]
+    kc = cfg.ssm_conv
+    xz = dense(p["in_proj"], x1)
+    xi, z = jnp.split(xz, 2, axis=-1)                  # [b, 1, di]
+
+    window = jnp.concatenate([cache["conv"], xi], axis=1)   # [b, kc, di]
+    xc = (window * p["conv_w"].astype(x1.dtype)[None]).sum(1, keepdims=True) \
+        + p["conv_b"].astype(x1.dtype)
+    xc = jax.nn.silu(xc)
+
+    dt, Bm, Cm = _ssm_params(p, cfg, xc)               # [b,1,di],[b,1,n]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)[:, 0]              # [b, di, n]
+    dBx = ((dt * xc.astype(jnp.float32))[..., None]
+           * Bm[:, :, None, :])[:, 0]                  # [b, di, n]
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bin,bn->bi", h, Cm[:, 0])[:, None, :]
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(x1.dtype) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    return out, {"conv": window[:, 1:], "h": h}

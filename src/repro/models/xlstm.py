@@ -1,0 +1,313 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory with hidden-state recurrence, sequential scan).
+
+mLSTM uses exponential input gating with the max-stabiliser m_t:
+    m_t = max(m_{t-1} + logsig(f̃_t), ĩ_t)
+    C_t = f'_t C_{t-1} + i'_t k_t v_t^T,  n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = o_t ⊙ (C_t^T q_t) / max(|n_t·q_t|, exp(-m_t))
+with f'_t = exp(f̃ + m_{t-1} − m_t), i'_t = exp(ĩ − m_t).  The stabiliser
+recurrence is a max-plus scan — associative — so it runs as one
+`associative_scan` over the full sequence; the matrix recurrence has scalar
+per-(batch, head, step) coefficients, so it parallelises *chunkwise* with
+log-space intra-chunk decays (the TPU-friendly form: two MXU einsums per
+chunk instead of a length-S recurrence).
+
+sLSTM's gates depend on h_{t-1} (true nonlinear recurrence — not scannable);
+it runs as a `lax.scan` over time, as in the paper (1 of 8 blocks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import apply_norm, dense, dense_init, norm_init, \
+    truncated_normal
+
+NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def mlstm_init(key, cfg, dtype):
+    D = cfg.d_model
+    dx = int(cfg.xlstm_proj_factor * D)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], D, 2 * dx, dtype),
+        "conv_w": truncated_normal(ks[1], (4, dx), 0.5, dtype),
+        "conv_b": jnp.zeros((dx,), dtype),
+        "wq": dense_init(ks[2], dx, dx, dtype),
+        "wk": dense_init(ks[3], dx, dx, dtype),
+        # v and o consume the up-projection LINEARLY, so they are fused into
+        # direct [D, dx] projections of the (model-replicated) block input:
+        # same function class, fewer FLOPs (D < dx), and it removes the
+        # all-gather of the dx-sharded up activation that column-parallel
+        # wv/w_o would otherwise force (measured in EXPERIMENTS.md §Perf)
+        "wv": dense_init(ks[4], D, dx, dtype),
+        "w_if": truncated_normal(ks[5], (dx, 2 * H), dx ** -0.5, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "w_o": dense_init(ks[6], D, dx, dtype),
+        "outnorm": norm_init(dx, "rmsnorm", jnp.float32),
+        "down": dense_init(ks[7], dx, D, dtype),
+    }
+
+
+def _mlstm_gates(p, xc, H):
+    """xc: [b, s, dx] -> (log_f, log_i) each [b, s, H] float32."""
+    g = xc.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    log_i, f_pre = jnp.split(g, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    return log_f, log_i
+
+
+def _stabiliser(log_f, log_i, m0):
+    """m_t = max(m_{t-1} + log_f_t, log_i_t) via max-plus associative scan.
+    log_f/log_i: [b, s, H]; m0: [b, H].  Returns m: [b, s, H]."""
+    def comb(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return (a1 + a2, jnp.maximum(b1 + a2, b2))
+    A, B = jax.lax.associative_scan(comb, (log_f, log_i), axis=1)
+    return jnp.maximum(m0[:, None] + A, B)
+
+
+def mlstm_cell(q, k, v, log_f, log_i, state, *, chunk: int = 256):
+    """Chunkwise-parallel mLSTM cell.
+
+    q,k,v: [b, H, s, dh]; log_f, log_i: [b, s, H];
+    state: (C [b,H,dh,dh], n [b,H,dh], m [b,H]).
+    Returns (h [b,H,s,dh], new_state)."""
+    b, H, s, dh = q.shape
+    C0, n0, m0 = state
+    # keep q/k/v in their (bf16) wire dtype: the row-parallel psum then moves
+    # half the bytes; all contractions below accumulate in f32 via
+    # preferred_element_type
+    qf = q * jnp.asarray(dh ** -0.5, q.dtype)
+    kf = k
+    vf = v
+
+    m = _stabiliser(log_f, log_i, m0)                     # [b, s, H]
+    m_prev = jnp.concatenate([m0[:, None], m[:, :-1]], axis=1)
+    log_fp = log_f + m_prev - m                           # <= 0
+    log_ip = log_i - m
+
+    L = min(chunk, s)
+    n_chunks = -(-s // L)
+    sp = n_chunks * L
+    if sp != s:  # pad with identity steps (log_f'=0 -> but must keep m const)
+        padw = ((0, 0), (0, sp - s), (0, 0))
+        log_fp = jnp.pad(log_fp, padw)
+        log_ip = jnp.pad(log_ip, padw, constant_values=NEG)
+        m = jnp.pad(m, padw, mode="edge")
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+
+    def reshape_sc(a):  # [b, sp, H] -> [n_chunks, b, H, L]
+        return a.reshape(b, n_chunks, L, H).transpose(1, 0, 3, 2)
+
+    def reshape_qkv(a):  # [b, H, sp, dh] -> [n_chunks, b, H, L, dh]
+        return a.reshape(b, H, n_chunks, L, dh).transpose(2, 0, 1, 3, 4)
+
+    lf_c, li_c, m_c = map(reshape_sc, (log_fp, log_ip, m))
+    q_c, k_c, v_c = map(reshape_qkv, (qf, kf, vf))
+
+    def step(carry, blk):
+        C, n = carry
+        lf, li, mm, qq, kk, vv = blk   # [b,H,L], [b,H,L,dh]
+        f32 = jnp.float32
+        G = jnp.cumsum(lf, axis=-1)                        # [b,H,L]
+        # inter-chunk: h_inter_t = exp(G_t) * (q_t @ C_in)
+        inter = jnp.einsum("bhld,bhde->bhle", qq, C.astype(qq.dtype),
+                           preferred_element_type=f32) \
+            * jnp.exp(G)[..., None]
+        n_inter = jnp.einsum("bhld,bhd->bhl", qq, n.astype(qq.dtype),
+                             preferred_element_type=f32) * jnp.exp(G)
+        # intra-chunk: decay(τ->t) = exp(G_t − G_τ + li_τ), τ <= t
+        dec = G[:, :, :, None] - G[:, :, None, :] + li[:, :, None, :]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        dec = jnp.where(causal, dec, NEG)
+        w = jnp.exp(dec)                                   # [b,H,L,L]
+        scores = jnp.einsum("bhld,bhkd->bhlk", qq, kk,
+                            preferred_element_type=f32) * w
+        intra = jnp.einsum("bhlk,bhkd->bhld", scores, vv.astype(f32))
+        n_intra = jnp.einsum("bhlk,bhkd->bhld", w, kk.astype(f32))
+        n_t = jnp.einsum("bhld,bhld->bhl", qq, n_intra.astype(qq.dtype),
+                         preferred_element_type=f32) + n_inter
+        h_num = inter + intra
+        denom = jnp.maximum(jnp.abs(n_t), jnp.exp(-mm))[..., None]
+        h = h_num / denom
+        # chunk-final state
+        gl = G[:, :, -1]
+        wC = jnp.exp(gl[..., None] - G + li)               # [b,H,L]
+        C = C * jnp.exp(gl)[..., None, None] + jnp.einsum(
+            "bhl,bhld,bhle->bhde", wC, kk.astype(f32), vf_ := vv.astype(f32))
+        n = n * jnp.exp(gl)[..., None] + jnp.einsum(
+            "bhl,bhld->bhd", wC, kk.astype(f32))
+        return (C, n), h
+
+    (C, n), hs = jax.lax.scan(step, (C0, n0), (lf_c, li_c, m_c, q_c, k_c, v_c))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, H, sp, dh)[:, :, :s]
+    m_last = m[:, s - 1] if sp == s else m[:, s - 1]
+    return h, (C, n, m_last)
+
+
+def mlstm_apply(p, cfg, x, *, chunk: int = 256):
+    """Full mLSTM block.  x: [b, s, D] -> [b, s, D]."""
+    b, s, D = x.shape
+    H = cfg.n_heads
+    dx = int(cfg.xlstm_proj_factor * D)
+    dh = dx // H
+    up = dense(p["up"], x)
+    xm, z = jnp.split(up, 2, axis=-1)                     # [b, s, dx]
+    # causal conv(4) + silu on the mLSTM branch
+    pad = jnp.pad(xm, ((0, 0), (3, 0), (0, 0)))
+    xc = sum(pad[:, i:i + s] * p["conv_w"][i].astype(x.dtype)
+             for i in range(4)) + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+    q = dense(p["wq"], xc).reshape(b, s, H, dh).transpose(0, 2, 1, 3)
+    k = dense(p["wk"], xc).reshape(b, s, H, dh).transpose(0, 2, 1, 3)
+    v = dense(p["wv"], x).reshape(b, s, H, dh).transpose(0, 2, 1, 3)
+    log_f, log_i = _mlstm_gates(p, xc, H)
+    C0 = jnp.zeros((b, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, H, dh), jnp.float32)
+    m0 = jnp.zeros((b, H), jnp.float32)
+    h, _ = mlstm_cell(q, k, v, log_f, log_i, (C0, n0, m0), chunk=chunk)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, dx)
+    o = jax.nn.sigmoid(dense(p["w_o"], x).astype(jnp.float32))
+    h = apply_norm(p["outnorm"], h.astype(jnp.float32), "rmsnorm", 1e-5)
+    h = (h * o).astype(x.dtype) * jax.nn.silu(z)
+    return dense(p["down"], h)
+
+
+def mlstm_init_cache(cfg, batch, dtype):
+    D = cfg.d_model
+    dx = int(cfg.xlstm_proj_factor * D)
+    H = cfg.n_heads
+    dh = dx // H
+    return {
+        "conv": jnp.zeros((batch, 3, dx), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_decode(p, cfg, x1, cache):
+    b = x1.shape[0]
+    D = cfg.d_model
+    H = cfg.n_heads
+    dx = int(cfg.xlstm_proj_factor * D)
+    dh = dx // H
+    up = dense(p["up"], x1)
+    xm, z = jnp.split(up, 2, axis=-1)                     # [b, 1, dx]
+    window = jnp.concatenate([cache["conv"], xm], axis=1)  # [b, 4, dx]
+    xc = (window * p["conv_w"].astype(x1.dtype)[None]).sum(1, keepdims=True) \
+        + p["conv_b"].astype(x1.dtype)
+    xc = jax.nn.silu(xc)
+    q = dense(p["wq"], xc).reshape(b, H, dh) * dh ** -0.5
+    k = dense(p["wk"], xc).reshape(b, H, dh)
+    v = dense(p["wv"], x1[:, 0]).reshape(b, H, dh)
+    log_f, log_i = _mlstm_gates(p, xc, H)                  # [b, 1, H]
+    log_f, log_i = log_f[:, 0], log_i[:, 0]
+    m_new = jnp.maximum(cache["m"] + log_f, log_i)
+    fp = jnp.exp(log_f + cache["m"] - m_new)[..., None]
+    ip = jnp.exp(log_i - m_new)[..., None]
+    kf, vf, qf = (a.astype(jnp.float32) for a in (k, v, q))
+    C = cache["C"] * fp[..., None] + ip[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = cache["n"] * fp + ip * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).reshape(b, 1, dx)
+    o = jax.nn.sigmoid(dense(p["w_o"], x1).astype(jnp.float32))[:, 0][:, None]
+    h = apply_norm(p["outnorm"], h, "rmsnorm", 1e-5)
+    h = (h * o).astype(x1.dtype) * jax.nn.silu(z)
+    out = dense(p["down"], h)
+    return out, {"conv": window[:, 1:], "C": C, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def slstm_init(key, cfg, dtype):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    f_up = -(-int(4 * D / 3) // 128) * 128   # lane/TP aligned
+    ks = jax.random.split(key, 5)
+    return {
+        "w": truncated_normal(ks[0], (D, 4 * D), D ** -0.5, dtype),
+        "b": jnp.concatenate([jnp.zeros((D,)), jnp.zeros((D,)),
+                              3.0 * jnp.ones((D,)), jnp.zeros((D,))]
+                             ).astype(jnp.float32),
+        "r": truncated_normal(ks[1], (H, dh, 4 * dh), dh ** -0.5, jnp.float32),
+        "gnorm": norm_init(D, "rmsnorm", jnp.float32),
+        "up": dense_init(ks[2], D, 2 * f_up, dtype),
+        "down": dense_init(ks[3], f_up, D, dtype),
+    }
+
+
+def _slstm_scan(p, cfg, wx, state):
+    """wx: [b, s, 4D] input projections; state: (c, n, h, m) each [b, D].
+    Returns (h_seq [b, s, D], new_state).  Sequential over s."""
+    b, s, _ = wx.shape
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+
+    dp = ("pod", "data")
+
+    def pin(a):   # keep the recurrence replicated over 'model': a per-step
+        return constrain(a, dp, None)   # model collective would dominate
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        rh = jnp.einsum("bhd,hde->bhe", h.reshape(b, H, dh),
+                        p["r"]).reshape(b, 4 * D)
+        pre = wx_t.astype(jnp.float32) + rh + p["b"]
+        z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        log_f = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        ip = jnp.exp(i_pre - m_new)
+        fp = jnp.exp(log_f + m - m_new)
+        c = pin(fp * c + ip * z)
+        n = pin(fp * n + ip)
+        h = pin(o * (c / jnp.maximum(n, 1e-6)))
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), (c, n, h, m)
+
+
+def slstm_apply(p, cfg, x):
+    b, s, D = x.shape
+    wx = x @ p["w"].astype(x.dtype)
+    state = tuple(jnp.zeros((b, D), jnp.float32) for _ in range(4))
+    h, _ = _slstm_scan(p, cfg, wx, state)
+    h = apply_norm(p["gnorm"], h, "rmsnorm", 1e-5).astype(x.dtype)
+    up = dense(p["up"], h)
+    a, g = jnp.split(up, 2, axis=-1)
+    return dense(p["down"], jax.nn.gelu(a) * g)
+
+
+def slstm_init_cache(cfg, batch, dtype):
+    D = cfg.d_model
+    return {k: jnp.zeros((batch, D), jnp.float32) for k in "cnhm"}
+
+
+def slstm_decode(p, cfg, x1, cache):
+    b = x1.shape[0]
+    wx = x1 @ p["w"].astype(x1.dtype)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    h, (c, n, hh, m) = _slstm_scan(p, cfg, wx, state)
+    h = apply_norm(p["gnorm"], h, "rmsnorm", 1e-5).astype(x1.dtype)
+    up = dense(p["up"], h)
+    a, g = jnp.split(up, 2, axis=-1)
+    out = dense(p["down"], jax.nn.gelu(a) * g)
+    return out, {"c": c, "n": n, "h": hh, "m": m}

@@ -1,0 +1,148 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Terms (seconds, per training/serving step, per chip — the SPMD-partitioned
+module IS the per-chip program):
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = sum over collective ops of bytes_moved_per_chip / ICI_bw
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(counted per chip; bytes_moved applies the standard ring multipliers:
+all-gather/reduce-scatter/all-to-all (n-1)/n, all-reduce 2(n-1)/n,
+collective-permute 1).
+
+MODEL_FLOPS uses the 6·N·D training rule (2·N·D inference) with N = active
+params (MoE) — the useful-compute yardstick that exposes remat/duplication
+waste in HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\w.\-]*\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def parse_collectives(hlo_text: str) -> dict[str, Any]:
+    """Sum per-chip bytes moved by collectives in a partitioned HLO module."""
+    per_op: dict[str, float] = {}
+    count: dict[str, int] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, shape_str, op = m.groups()
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        result_bytes = _shape_bytes(shape_str)
+        if op == "all-gather":
+            moved = result_bytes * (n - 1) / n
+        elif op == "all-reduce":
+            moved = result_bytes * 2 * (n - 1) / n
+        elif op == "reduce-scatter":
+            moved = result_bytes * (n - 1)          # result is 1/n of operand
+        elif op == "all-to-all":
+            moved = result_bytes * (n - 1) / n
+        else:  # collective-permute
+            moved = result_bytes
+        per_op[op] = per_op.get(op, 0.0) + moved
+        count[op] = count.get(op, 0) + 1
+        total += moved
+    return {"per_op_bytes": per_op, "counts": count, "total_bytes": total}
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    model_flops: float
+    useful_ratio: float
+    bottleneck: str
+    step_s: float           # max of the three terms (overlap-ideal)
+    roofline_frac: float    # model_flops_time / step_s  (the score)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyse(cost: dict, collectives: dict, *, n_chips: int,
+            model_flops_global: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(collectives["total_bytes"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = cbytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mf_chip = model_flops_global / n_chips
+    useful = mf_chip / flops if flops else 0.0
+    ideal_s = mf_chip / PEAK_FLOPS
+    frac = ideal_s / step_s if step_s else 0.0
+    return Roofline(compute_s, memory_s, coll_s, flops, bytes_acc, cbytes,
+                    mf_chip, useful, bottleneck, step_s, frac)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference, D = global tokens
+    processed by the step (decode: batch tokens)."""
+    n = cfg.active_param_count
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token/seq

@@ -1,0 +1,417 @@
+"""Corrected per-chip FLOPs / HBM-bytes / collective-bytes from compiled HLO.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — for
+scan-over-layers models that understates compute by the layer count.  This
+module re-derives the totals by parsing the (post-SPMD-partitioning) HLO
+text, walking the call graph from ENTRY, and multiplying while-loop bodies by
+their trip counts (recovered from the `constant(N)` bound in the loop
+condition — exact for scan-lowered loops).
+
+Accounting model (per partitioned module = per chip):
+  * FLOPs: 2 * result_elements * contraction_size for every dot; descends
+    into fusions/calls/while bodies.
+  * HBM bytes: result + operand bytes of every op in a computation (fusion
+    internals excluded — their intermediates stay in registers/VMEM) —
+    a buffer-traffic proxy consistent with post-fusion materialisation.
+  * Collective bytes: ring multipliers per op type on the result size
+    ((n-1)/n for AG/A2A, 2(n-1)/n for AR, (n-1) for RS relative to its
+    per-shard result, 1 for permute), n = replica-group size.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_OPLINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLREF = re.compile(r"(?:body|to_apply|calls)=%([\w.\-]+)")
+_COND = re.compile(r"condition=%([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONSTANT = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = byts = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _first_shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    invariant_bytes: float = 0.0   # loop-invariant operand traffic: charged
+    #                                ONCE per while execution, not per trip
+    #                                (weights stay VMEM/register-resident
+    #                                across scan iterations)
+    coll: dict = field(default_factory=dict)       # op -> bytes
+    coll_counts: dict = field(default_factory=dict)
+    calls: list = field(default_factory=list)      # (callee, kind)
+    whiles: list = field(default_factory=list)     # (body, cond)
+    max_const: int = 1                              # for trip-count recovery
+    defs: dict = field(default_factory=dict)        # op name -> shape str
+    gte_idx: dict = field(default_factory=dict)     # op name -> carry index
+    view_of: dict = field(default_factory=dict)     # view op -> source name
+    root_ops: list = field(default_factory=list)    # ROOT tuple operands
+    op_operands: dict = field(default_factory=dict) # op -> (opcode, [refs])
+    param_names: dict = field(default_factory=dict) # param index -> op name
+    root_name: str = ""                              # ROOT op name
+
+
+def parse_module(txt: str) -> tuple[dict[str, Comp], str]:
+    comps: dict[str, Comp] = {}
+    cur: Comp | None = None
+    entry = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", s)
+            cur = comps.setdefault(m.group(1), Comp(m.group(1)))
+            entry = m.group(1)
+            continue
+        if s.startswith("%") and s.endswith("{") and "(" in s and "->" in s:
+            m = re.match(r"%([\w.\-]+)", s)
+            cur = comps.setdefault(m.group(1), Comp(m.group(1)))
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            continue
+        mc = _CONSTANT.search(s)
+        if mc:
+            cur.max_const = max(cur.max_const, int(mc.group(1)))
+        m = _OPLINE.match(line)
+        if not m:
+            continue
+        name, result, opcode, rest = m.groups()
+        cur.defs[name] = result
+        _, rbytes = _shape_elems_bytes(result)
+        refs = re.findall(r"%([\w.\-]+)", rest)
+        cur.op_operands[name] = (opcode, refs, rbytes)
+        if opcode == "get-tuple-element":
+            mi = re.search(r"index=(\d+)", line)
+            if mi:
+                cur.gte_idx[name] = int(mi.group(1))
+        if opcode == "parameter":
+            mi = re.search(r"parameter\((\d+)\)", line)
+            if mi:
+                cur.param_names[int(mi.group(1))] = name
+        if opcode in ("bitcast", "reshape", "copy", "transpose", "convert") \
+                and refs:
+            cur.view_of[name] = refs[0]
+        if opcode == "fusion":
+            mc2 = _CALLREF.search(line)
+            if mc2:
+                cur.op_operands[name] = (opcode,
+                                         [r for r in refs
+                                          if r != mc2.group(1)], rbytes)
+                cur.defs[name + "//callee"] = mc2.group(1)
+        if s.startswith("ROOT"):
+            cur.root_name = name
+            if opcode == "tuple":
+                cur.root_ops = refs
+
+        if opcode == "dot":
+            # operands: first two %refs in rest
+            refs = re.findall(r"%([\w.\-]+)", rest)
+            lhs_shape = cur.defs.get(refs[0], "") if refs else ""
+            cdims = _CONTRACT.search(line)
+            contraction = 1
+            if lhs_shape and cdims:
+                dims = _first_shape_dims(lhs_shape)
+                for ci in cdims.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        contraction *= dims[int(ci)]
+            relems, _ = _shape_elems_bytes(result)
+            cur.flops += 2.0 * relems * contraction
+
+        if opcode in COLLECTIVES or any(opcode.startswith(c + "-") or
+                                        opcode == c for c in COLLECTIVES):
+            base = next(c for c in COLLECTIVES
+                        if opcode == c or opcode.startswith(c))
+            mg = _GROUPS.search(line)
+            if mg:
+                n = len(mg.group(1).split(","))
+            else:
+                mg2 = _GROUPS_IOTA.search(line)
+                n = int(mg2.group(2)) if mg2 else 2
+            if n > 1:
+                if base == "all-gather":
+                    moved = rbytes * (n - 1) / n
+                elif base == "all-reduce":
+                    moved = rbytes * 2 * (n - 1) / n
+                elif base == "reduce-scatter":
+                    moved = rbytes * (n - 1)
+                elif base == "all-to-all":
+                    moved = rbytes * (n - 1) / n
+                else:
+                    moved = rbytes
+                cur.coll[base] = cur.coll.get(base, 0.0) + moved
+                cur.coll_counts[base] = cur.coll_counts.get(base, 0) + 1
+
+        if opcode == "while":
+            mb = _CALLREF.search(line)
+            mcond = _COND.search(line)
+            if mb and mcond:
+                cur.whiles.append((mb.group(1), mcond.group(1)))
+        elif opcode in ("fusion", "call", "custom-call", "reduce",
+                        "reduce-window", "scatter", "sort", "map",
+                        "all-reduce", "reduce-scatter", "select-and-scatter"):
+            for ref in _CALLREF.findall(line):
+                cur.calls.append((ref, opcode))
+        mbr = _BRANCHES.search(line)
+        if mbr:
+            branches = re.findall(r"%([\w.\-]+)", mbr.group(1))
+            if branches:
+                cur.calls.append((branches[0], "conditional"))
+    for c in comps.values():
+        _finalise_traffic(c, comps)
+    return comps, entry
+
+
+_SLICY = {"dynamic-slice", "slice", "gather", "get-tuple-element",
+          "bitcast", "reshape", "convert", "broadcast"}
+
+
+def _slice_only_charge(callee: Comp, param_idx: int) -> float | None:
+    """If the fusion callee consumes parameter ``param_idx`` only through
+    slice-like ops (including as the in-place TARGET of a
+    dynamic-update-slice), return the bytes actually touched; else None
+    (full operand is streamed)."""
+    pname = callee.param_names.get(param_idx)
+    if pname is None:
+        return None
+    frontier = {pname}
+    total = 0.0
+    for _ in range(4):                    # follow short view chains
+        nxt = set()
+        for opname, (opc, refs, rb) in callee.op_operands.items():
+            hit = frontier & set(refs)
+            if not hit:
+                continue
+            if opc in ("dynamic-slice", "slice", "gather"):
+                total += 1.0 * rb
+            elif opc == "dynamic-update-slice":
+                if refs and refs[0] in frontier:
+                    # param is the aliased target: touches only the window
+                    upd = callee.defs.get(refs[1]) if len(refs) > 1 else None
+                    total += (_shape_elems_bytes(upd)[1] if upd else rb)
+                else:                      # param is the update itself
+                    shp = callee.defs.get(next(iter(hit)))
+                    total += _shape_elems_bytes(shp)[1] if shp else rb
+            elif opc in ("bitcast", "reshape", "convert", "copy",
+                         "transpose", "get-tuple-element"):
+                nxt.add(opname)
+            else:
+                return None               # directly consumed: full read
+        if not nxt:
+            break
+        frontier = nxt
+    return total
+
+
+def _fusion_write_charge(callee: Comp, rbytes: float) -> float:
+    """Write-side bytes of a fusion: if the root is (a view of) a
+    dynamic-update-slice, only the update window is written (the target is
+    aliased in place on TPU)."""
+    root = callee.root_name
+    for _ in range(4):
+        if root in callee.view_of:
+            root = callee.view_of[root]
+        else:
+            break
+    opc, refs, _rb = callee.op_operands.get(root, (None, [], 0.0))
+    if opc == "dynamic-update-slice" and len(refs) > 1:
+        upd = callee.defs.get(refs[1])
+        if upd:
+            return 2.0 * _shape_elems_bytes(upd)[1]
+    return rbytes
+
+
+def _finalise_traffic(c: Comp, comps: dict):
+    """Per-opcode HBM traffic, splitting loop-invariant operand reads into
+    ``invariant_bytes`` (charged once per while execution: XLA keeps
+    loop-invariant buffers resident across scan iterations — e.g. an sLSTM's
+    recurrent weights across a 32k-step scan).
+
+    Invariance detection: a carry position is invariant when the body's ROOT
+    tuple passes the parameter's GTE through unchanged (modulo views).
+    """
+    inv_idx = set()
+    for i, op in enumerate(c.root_ops):
+        src = op
+        seen = set()
+        while src in c.view_of and src not in seen:
+            seen.add(src)
+            src = c.view_of[src]
+        if c.gte_idx.get(src) == i:
+            inv_idx.add(i)
+    inv_ops = {n for n, i in c.gte_idx.items() if i in inv_idx}
+    changed = True
+    while changed:
+        changed = False
+        for v, srcname in c.view_of.items():
+            if srcname in inv_ops and v not in inv_ops:
+                inv_ops.add(v)
+                changed = True
+
+    ZERO = {"get-tuple-element", "tuple", "bitcast", "reshape",
+            "parameter", "constant", "while", "conditional", "call",
+            "after-all", "partition-id", "replica-id", "iota",
+            "custom-call", "optimization-barrier", "rng-bit-generator"}
+    charged_inv: set[str] = set()
+    for name, (opcode, refs, rbytes) in c.op_operands.items():
+        if opcode in ZERO:
+            continue
+        if opcode in ("dynamic-slice", "slice", "gather", "broadcast",
+                      "copy", "transpose", "convert", "pad"):
+            c.bytes += 2.0 * rbytes          # read slice/src + write result
+            continue
+        if opcode == "dynamic-update-slice":
+            upd = c.defs.get(refs[1]) if len(refs) > 1 else None
+            c.bytes += 2.0 * (_shape_elems_bytes(upd)[1] if upd else rbytes)
+            continue
+        if any(opcode == x or opcode.startswith(x + "-")
+               for x in COLLECTIVES):
+            c.bytes += 2.0 * rbytes          # HBM side of the collective
+            continue
+        callee = comps.get(c.defs.get(name + "//callee", ""))
+        traffic = rbytes if callee is None else \
+            _fusion_write_charge(callee, rbytes)
+        for i, ref in enumerate(refs[:8]):
+            shp = c.defs.get(ref)
+            if not shp:
+                continue
+            b = _shape_elems_bytes(shp)[1]
+            if callee is not None:
+                # fusion: a parameter consumed only through slices reads
+                # just the slices (e.g. per-step dynamic-slice of stacked
+                # scan residuals), not the whole buffer
+                sliced = _slice_only_charge(callee, i)
+                if sliced is not None:
+                    b = min(b, sliced)
+            if ref in inv_ops:
+                if ref not in charged_inv:
+                    c.invariant_bytes += b
+                    charged_inv.add(ref)
+            else:
+                traffic += b
+        c.bytes += traffic
+
+
+def analyse_hlo(txt: str) -> dict:
+    comps, entry = parse_module(txt)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "collective_bytes": 0.0, "while_trips": {}}
+
+    memo: dict[str, tuple] = {}
+    trips: dict[str, int] = {}
+
+    def total(name: str, depth=0) -> tuple:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 64:
+            return (0.0, 0.0, {}, {})
+        fl, by = c.flops, c.bytes
+        coll = dict(c.coll)
+        cnts = dict(c.coll_counts)
+        for callee, kind in c.calls:
+            f2, b2, co2, cn2 = total(callee, depth + 1)
+            fl += f2
+            # fusion internals: flops yes, bytes no (registers/VMEM)
+            if kind not in ("fusion",):
+                by += b2
+            for k, v in co2.items():
+                coll[k] = coll.get(k, 0.0) + v
+            for k, v in cn2.items():
+                cnts[k] = cnts.get(k, 0) + v
+        for body, cond in c.whiles:
+            trip = comps[cond].max_const if cond in comps else 1
+            trips[body] = trip
+            f2, b2, co2, cn2 = total(body, depth + 1)
+            fl += f2 * trip
+            # loop-invariant reads: once per while execution, not per trip
+            by += b2 * trip + comps[body].invariant_bytes
+            for k, v in co2.items():
+                coll[k] = coll.get(k, 0.0) + v * trip
+            for k, v in cn2.items():
+                cnts[k] = cnts.get(k, 0) + v * trip
+        memo[name] = (fl, by, coll, cnts)
+        return memo[name]
+
+    fl, by, coll, cnts = total(entry)
+    return {"flops": fl, "bytes": by, "collectives": coll,
+            "collective_counts": cnts,
+            "collective_bytes": float(sum(coll.values())),
+            "while_trips": trips}
+
+
+def top_contributors(txt: str, n: int = 8) -> list[dict]:
+    """Debug: rank computations by (multiplicity-weighted) bytes and
+    collective traffic to localise hotspots."""
+    comps, entry = parse_module(txt)
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        c = comps.get(name)
+        if c is None:
+            continue
+        m = mult[name]
+        for callee, _ in c.calls:
+            mult[callee] = mult.get(callee, 0.0) + m
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+        for body, cond in c.whiles:
+            trip = comps[cond].max_const if cond in comps else 1
+            mult[body] = mult.get(body, 0.0) + m * trip
+            if body not in seen:
+                seen.add(body)
+                order.append(body)
+    rows = []
+    for name, m in mult.items():
+        c = comps.get(name)
+        if c is None:
+            continue
+        rows.append({"comp": name[:60], "mult": m,
+                     "bytes": c.bytes * m,
+                     "coll": sum(c.coll.values()) * m,
+                     "flops": c.flops * m})
+    rows.sort(key=lambda r: -(r["bytes"] + r["coll"]))
+    return rows[:n]

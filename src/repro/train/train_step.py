@@ -1,0 +1,89 @@
+"""Training step builder: loss -> grad -> (optional int8 compressed
+all-reduce) -> AdamW, with remat-by-period and GSPMD shardings attached.
+
+``make_train_step(cfg, mesh, ...)`` returns (step_fn, shardings) where
+step_fn(params, opt_state, batch) -> (params, opt_state, metrics) is ready to
+``jax.jit(..., in_shardings=..., out_shardings=...)``, lower and compile —
+the dry-run and the real trainer share this exact builder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.dist import sharding as shd
+from repro.dist.compression import compressed_mean_hook
+from repro.models import model as M
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, \
+    init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    opt: AdamWConfig = AdamWConfig()
+    remat: bool = True
+    moe_aux_weight: float = 0.01
+    z_loss_weight: float = 1e-3
+    grad_compression: str = "none"     # none | int8
+    attn_impl: str | None = None       # None -> models.attention.ATTN_IMPL
+    seq_parallel: bool = False         # Megatron SP on the residual stream
+
+
+def loss_and_aux(params, cfg: ArchConfig, batch, settings: TrainSettings):
+    logits, aux = M.forward(params, cfg, batch, remat=settings.remat,
+                            attn_impl=settings.attn_impl)
+    labels = batch["labels"]
+    mask = jnp.ones(labels.shape, jnp.float32)
+    loss = M.loss_fn(logits, labels, mask)
+    total = loss
+    if cfg.n_experts:
+        total = total + settings.moe_aux_weight * aux["lb_loss"] \
+            + settings.z_loss_weight * aux["z_loss"]
+    return total, {"loss": loss, **{k: jnp.asarray(v) for k, v in aux.items()}}
+
+
+def make_train_step(cfg: ArchConfig, mesh, inputs_spec: dict,
+                    settings: TrainSettings = TrainSettings()):
+    """Returns (step_fn, Shardings) for this arch on this mesh."""
+
+    def step_fn(params, opt_state: AdamWState, batch):
+        shd.set_sequence_parallel(settings.seq_parallel)
+        (total, metrics), grads = jax.value_and_grad(
+            loss_and_aux, has_aux=True)(params, cfg, batch, settings)
+        if settings.grad_compression == "int8":
+            grads = compressed_mean_hook(grads)
+        params, opt_state, opt_metrics = adamw_update(
+            settings.opt, params, grads, opt_state)
+        return params, opt_state, {**metrics, **opt_metrics,
+                                   "total_loss": total}
+
+    # shardings
+    pspecs = shd.param_pspecs(cfg, M.param_specs(cfg), mesh)
+    param_sh = shd.to_named(pspecs, mesh)
+    opt_specs = AdamWState(
+        step=P(),
+        mu=jax.tree_util.tree_map(
+            lambda s, l: shd.opt_state_pspec(s, l.shape, mesh),
+            pspecs, M.param_specs(cfg), is_leaf=lambda x: isinstance(x, P)),
+        nu=jax.tree_util.tree_map(
+            lambda s, l: shd.opt_state_pspec(s, l.shape, mesh),
+            pspecs, M.param_specs(cfg), is_leaf=lambda x: isinstance(x, P)))
+    opt_sh = shd.to_named(opt_specs, mesh)
+    in_specs = shd.input_pspecs(cfg, "train", inputs_spec, mesh)
+    batch_sh = shd.to_named(in_specs, mesh)
+    metrics_sh = NamedSharding(mesh, P())
+
+    shardings = dict(params=param_sh, opt=opt_sh, batch=batch_sh,
+                     metrics=metrics_sh, pspecs=pspecs)
+    return step_fn, shardings
+
+
+def init_all(cfg: ArchConfig, rng):
+    params = M.init_params(cfg, rng)
+    return params, init_opt_state(params)

@@ -1,0 +1,183 @@
+"""Multi-device scenarios run in a subprocess with 8 host CPU devices.
+Invoked by tests/test_distributed.py: python _dist_worker.py <scenario>.
+Prints 'PASS <scenario>' on success."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def scenario_forest_knn():
+    from repro.core.distributed import build_forest, brute_force_knn, forest_knn
+    from repro.core.metric import pairwise
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    X = np.random.default_rng(0).random((4000, 8)).astype(np.float32)
+    Q = np.random.default_rng(1).random((16, 8)).astype(np.float32)
+    forest, _ = build_forest(X, mesh, capacity=16)
+    with jax.sharding.set_mesh(mesh):
+        d, ids = forest_knn(forest, mesh, jnp.asarray(Q), k=5,
+                            max_frontier=256)
+    D = pairwise("d_inf", Q, X)
+    want = np.sort(D, axis=1)[:, :5]
+    np.testing.assert_allclose(np.asarray(d), want, atol=1e-5)
+    # ids must point at actual matching-distance objects
+    got_d = np.take_along_axis(D, np.asarray(ids), axis=1)
+    np.testing.assert_allclose(got_d, want, atol=1e-5)
+
+
+def scenario_forest_brute_matches_tree():
+    from repro.core.distributed import build_forest, brute_force_knn, forest_knn
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    X = np.random.default_rng(3).random((2048, 16)).astype(np.float32)
+    Q = np.random.default_rng(4).random((8, 16)).astype(np.float32)
+    forest, _ = build_forest(X, mesh, capacity=16)
+    with jax.sharding.set_mesh(mesh):
+        d1, _ = forest_knn(forest, mesh, jnp.asarray(Q), k=3, max_frontier=256)
+        Xs = jax.device_put(jnp.asarray(X), jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("model")))
+        d2, _ = brute_force_knn(Xs, mesh, jnp.asarray(Q), k=3)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-5)
+
+
+def scenario_forest_delete():
+    from repro.core.distributed import build_forest, forest_delete, forest_knn
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    X = np.random.default_rng(5).random((4096, 8)).astype(np.float32)
+    forest, _ = build_forest(X, mesh, capacity=16)
+    victims = np.arange(0, 256)
+    with jax.sharding.set_mesh(mesh):
+        forest, found = forest_delete(
+            forest, mesh, jnp.asarray(X[victims]),
+            jnp.asarray(victims, jnp.int32))
+        d, ids = forest_knn(forest, mesh, jnp.asarray(X[victims][:16]), k=1,
+                            max_frontier=256)
+    assert np.asarray(found).mean() > 0.9, "most deletes should hit fast path"
+    # deleted points must no longer be their own nearest neighbour at d=0
+    ids = np.asarray(ids)[:, 0]
+    found_np = np.asarray(found)[:16]
+    for i in range(16):
+        if found_np[i]:
+            assert ids[i] != victims[i], f"victim {victims[i]} still present"
+
+
+def scenario_train_step_sharded():
+    """2x4 mesh end-to-end: sharded train step runs and loss decreases."""
+    import dataclasses
+    from repro.configs.all_archs import smoke_config
+    from repro.data.pipeline import DataConfig, synth_batch
+    from repro.models import model as M
+    from repro.train.train_step import TrainSettings, make_train_step, init_all
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = dataclasses.replace(smoke_config("qwen2.5-3b"), n_layers=2,
+                              block_pattern=("attn",))
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    batch0 = synth_batch(dc, 0)
+    inputs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch0.items()}
+    settings = TrainSettings(opt=AdamWConfig(lr=1e-2, warmup_steps=2,
+                                             total_steps=50))
+    with jax.sharding.set_mesh(mesh):
+        step_fn, sh = make_train_step(cfg, mesh, inputs, settings)
+        params, opt = init_all(cfg, jax.random.PRNGKey(0))
+        params = jax.device_put(params, sh["params"])
+        opt = jax.device_put(opt, sh["opt"])
+        jitted = jax.jit(step_fn,
+                         in_shardings=(sh["params"], sh["opt"], sh["batch"]),
+                         out_shardings=(sh["params"], sh["opt"], sh["metrics"]),
+                         donate_argnums=(0, 1))
+        losses = []
+        for step in range(8):
+            batch = jax.device_put(synth_batch(dc, step), sh["batch"])
+            params, opt, metrics = jitted(params, opt, batch)
+            losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all(), losses
+    assert losses[-1] < losses[0], f"no learning: {losses}"
+
+
+def scenario_elastic_reshard():
+    """Checkpoint written under a 2x4 mesh restores onto 1x8 and 4x2."""
+    import dataclasses, tempfile
+    from repro.configs.all_archs import smoke_config
+    from repro.dist.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.dist import sharding as shd
+    from repro.models import model as M
+
+    cfg = smoke_config("qwen2.5-3b")
+    params = M.init_params(cfg, jax.random.PRNGKey(7))
+    mesh_a = jax.make_mesh((2, 4), ("data", "model"))
+    spec_a = shd.param_pspecs(cfg, params, mesh_a)
+    pa = jax.device_put(params, shd.to_named(spec_a, mesh_a))
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, {"params": pa})
+        for shape in [(1, 8), (4, 2)]:
+            mesh_b = jax.make_mesh(shape, ("data", "model"))
+            spec_b = shd.param_pspecs(cfg, params, mesh_b)
+            out, manifest = restore_checkpoint(
+                d, {"params": params},
+                shardings={"params": shd.to_named(spec_b, mesh_b)})
+            assert manifest["step"] == 3
+            for a, b in zip(jax.tree.leaves(params),
+                            jax.tree.leaves(out["params"])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def scenario_compressed_psum():
+    """int8 compressed gradient all-reduce: mean within quantisation error,
+    error feedback captures the residual."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.compression import compressed_psum_mean
+    import functools
+    mesh = jax.make_mesh((8,), ("data",))
+    g = np.random.default_rng(11).normal(size=(8, 4096)).astype(np.float32)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=P("data"),
+                       out_specs=(P("data"), P("data")), check_rep=False)
+    def run(gs):
+        mean, err = compressed_psum_mean({"g": gs}, "data")
+        return mean["g"], err["g"]
+
+    with jax.sharding.set_mesh(mesh):
+        mean, err = run(jnp.asarray(g))
+    true_mean = g.mean(0, keepdims=True)
+    got = np.asarray(mean)[0:1]
+    scale = np.abs(g).max() / 127
+    assert np.abs(got - true_mean).max() < 4 * scale, \
+        (np.abs(got - true_mean).max(), scale)
+    # error feedback residual is bounded by one quantisation step
+    assert np.abs(np.asarray(err)).max() <= scale * 1.01
+
+
+
+
+def scenario_moe_ep_equivalence():
+    """shard_map expert-parallel MoE == single-device dense-dispatch MoE
+    (same routing, dropless capacity)."""
+    import dataclasses
+    from repro.configs.all_archs import smoke_config
+    from repro.models import moe as moe_mod
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = dataclasses.replace(smoke_config("grok-1-314b"),
+                              n_experts=8, experts_per_token=2,
+                              expert_pad_to=0, capacity_factor=64.0)
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model))
+    y_ref, aux_ref = moe_mod.moe_apply(p, cfg, x)           # dense dispatch
+    cfg_ep = dataclasses.replace(cfg, moe_ep=True)
+    with jax.sharding.set_mesh(mesh):
+        y_ep, aux_ep = jax.jit(
+            lambda p, x: moe_mod.moe_apply(p, cfg_ep, x))(p, x)
+    np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    globals()[f"scenario_{name}"]()
+    print(f"PASS {name}")

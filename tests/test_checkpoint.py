@@ -1,0 +1,85 @@
+"""Fault tolerance: checkpoint atomicity, rotation, and bitwise-deterministic
+kill/resume (the core large-scale-runnability contract)."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.dist.checkpoint import (CheckpointManager, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+
+
+def test_save_restore_roundtrip():
+    import jax
+    import jax.numpy as jnp
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, {"state": tree}, extra={"note": "x"})
+        out, manifest = restore_checkpoint(d, {"state": tree})
+        assert manifest["step"] == 7 and manifest["extra"]["note"] == "x"
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out["state"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rotation_keeps_latest():
+    import jax.numpy as jnp
+    tree = {"x": jnp.zeros((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_write=False)
+        for s in [1, 2, 3, 4, 5]:
+            mgr.save(s, {"state": tree})
+        steps = sorted(int(p.split("_")[1]) for p in os.listdir(d)
+                       if p.startswith("step_"))
+        assert steps == [4, 5]
+        assert latest_step(d) == 5
+
+
+def test_kill_resume_is_deterministic():
+    """Uninterrupted N-step run == (run to k, crash, resume) bitwise."""
+    from repro.launch import train
+    N = 24
+    with tempfile.TemporaryDirectory() as d1:
+        loss_straight = train.main([
+            "--smoke", "--steps", str(N), "--seq-len", "32",
+            "--global-batch", "4", "--log-every", "100"])
+    with tempfile.TemporaryDirectory() as d2:
+        with pytest.raises(SystemExit):
+            train.main(["--smoke", "--steps", str(N), "--seq-len", "32",
+                        "--global-batch", "4", "--ckpt-dir", d2,
+                        "--ckpt-every", "8", "--fail-at", "13",
+                        "--log-every", "100"])
+        loss_resumed = train.main(["--smoke", "--steps", str(N),
+                                   "--seq-len", "32", "--global-batch", "4",
+                                   "--ckpt-dir", d2, "--resume",
+                                   "--log-every", "100"])
+    assert loss_straight == loss_resumed, \
+        f"non-deterministic restart: {loss_straight} vs {loss_resumed}"
+
+
+def test_atomic_write_never_partial():
+    """A checkpoint directory either exists completely or not at all."""
+    import jax.numpy as jnp
+    with tempfile.TemporaryDirectory() as d:
+        try:
+            save_checkpoint(d, 1, {"state": {"x": jnp.zeros((2,))},
+                                   "bad": (lambda: None)})  # unpicklable -> raises
+        except Exception:
+            pass
+        assert latest_step(d) in (None,), "partial checkpoint leaked"
+
+
+def test_data_pipeline_stateless_deterministic():
+    from repro.data.pipeline import DataConfig, synth_batch
+    dc = DataConfig(seed=3, vocab_size=1000, seq_len=16, global_batch=4)
+    a = synth_batch(dc, 5)
+    b = synth_batch(dc, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = synth_batch(dc, 6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # shard slices tile the global batch
+    full = synth_batch(dc, 5)["tokens"]
+    parts = [synth_batch(dc, 5, shard=s, n_shards=2)["tokens"]
+             for s in range(2)]
+    np.testing.assert_array_equal(full, np.concatenate(parts, axis=0))

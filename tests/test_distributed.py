@@ -1,0 +1,31 @@
+"""Multi-device integration tests (8 host CPU devices via subprocess so the
+main pytest process keeps its single-device backend)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+WORKER = os.path.join(os.path.dirname(__file__), "_dist_worker.py")
+
+SCENARIOS = [
+    "forest_knn",
+    "forest_brute_matches_tree",
+    "forest_delete",
+    "train_step_sharded",
+    "elastic_reshard",
+    "compressed_psum",
+    "moe_ep_equivalence",
+]
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_scenario(scenario):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(WORKER), "..", "src")
+    res = subprocess.run([sys.executable, WORKER, scenario],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert res.returncode == 0, \
+        f"{scenario} failed:\nSTDOUT:{res.stdout[-2000:]}\nSTDERR:{res.stderr[-4000:]}"
+    assert f"PASS {scenario}" in res.stdout

@@ -1,0 +1,171 @@
+"""JAX SM-tree engine: equivalence vs brute force + the paper-faithful ref,
+structural/SM invariants through bulk build, insert (with splits) and delete
+(with merges), plus hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import SMTreeEngine
+from repro.core.metric import pairwise
+from repro.data.datagen import clustered, uniform
+
+
+def brute_knn_dists(X, Q, k):
+    D = pairwise("d_inf", Q, X)
+    return np.sort(D, axis=1)[:, :k]
+
+
+def test_bulk_build_valid_and_knn_exact():
+    X = clustered(2000, dims=8, seed=0)
+    eng = SMTreeEngine.build(X, capacity=16)
+    eng.validate()
+    Q = uniform(32, dims=8, seed=1)
+    res = eng.knn(Q, k=5, max_frontier=256)
+    assert not np.asarray(res.overflow).any()
+    want = brute_knn_dists(X, Q, 5)
+    np.testing.assert_allclose(np.asarray(res.dists), want, atol=1e-5)
+
+
+def test_knn_ids_match_brute_force():
+    X = uniform(800, dims=4, seed=3)
+    eng = SMTreeEngine.build(X, capacity=8)
+    Q = X[:16] + 0.01
+    res = eng.knn(Q, k=1, max_frontier=256)
+    D = pairwise("d_inf", Q, X)
+    want_ids = D.argmin(axis=1)
+    got = np.asarray(res.ids)[:, 0]
+    # ties possible: compare distances
+    np.testing.assert_allclose(np.asarray(res.dists)[:, 0],
+                               D[np.arange(16), want_ids], atol=1e-5)
+    assert (got == want_ids).mean() > 0.9
+
+
+def test_range_search_matches_brute_force():
+    X = clustered(1500, dims=6, seed=5)
+    eng = SMTreeEngine.build(X, capacity=16)
+    Q = X[::300].copy()
+    r = 0.08
+    res = eng.range_search(Q, r, max_results=256, max_frontier=256)
+    assert not np.asarray(res.overflow).any()
+    D = pairwise("d_inf", Q, X)
+    for qi in range(len(Q)):
+        want = set(np.nonzero(D[qi] <= r)[0].tolist())
+        got = set(int(i) for i in np.asarray(res.ids)[qi] if i >= 0)
+        assert got == want
+
+
+def test_zero_radius_finds_self():
+    X = clustered(500, dims=8, seed=7)
+    eng = SMTreeEngine.build(X, capacity=8)
+    res = eng.range_search(X[::50], 0.0, max_results=8)
+    for row, want in zip(np.asarray(res.ids), range(0, 500, 50)):
+        assert want in row.tolist()
+
+
+def test_incremental_insert_with_splits():
+    X = uniform(400, dims=5, seed=11)
+    eng = SMTreeEngine.empty(dim=5, capacity=8, max_nodes=512)
+    for i, x in enumerate(X):
+        eng.insert(x, i)
+        if i % 130 == 0:
+            eng.validate()
+    eng.validate()
+    assert eng.n_objects == 400
+    res = eng.knn(X[:20], k=1, max_frontier=256)
+    np.testing.assert_allclose(np.asarray(res.dists)[:, 0],
+                               np.zeros(20), atol=1e-6)
+
+
+def test_delete_with_merges_and_collapse():
+    X = uniform(300, dims=4, seed=13)
+    eng = SMTreeEngine.build(X, capacity=8)
+    eng.validate()
+    for i in range(250):
+        assert eng.delete(X[i], i)
+        if i % 60 == 0:
+            eng.validate()
+    eng.validate()
+    assert eng.n_objects == 50
+    res = eng.knn(X[250:270], k=1, max_frontier=256)
+    np.testing.assert_allclose(np.asarray(res.dists)[:, 0],
+                               np.zeros(20), atol=1e-6)
+    # deleted objects are gone
+    res = eng.range_search(X[:250], 0.0, max_results=4)
+    ids = np.asarray(res.ids)
+    for i in range(250):
+        assert i not in ids[i]
+
+
+def test_delete_not_found():
+    X = uniform(100, dims=4, seed=17)
+    eng = SMTreeEngine.build(X, capacity=8)
+    assert not eng.delete(np.full(4, 0.5, np.float32), 1234)
+
+
+def test_engine_query_results_match_ref_impl():
+    """Engine and paper-faithful ref return the same kNN distances."""
+    from repro.core.ref_impl import SMTree
+    X = clustered(1200, dims=10, seed=19)
+    eng = SMTreeEngine.build(X[:, :10], capacity=16)
+    ref = SMTree(dim=10, capacity=16, n_dims=10)
+    for i, x in enumerate(X[:, :10]):
+        ref.insert(x, i)
+    Q = uniform(10, dims=10, seed=2)
+    res = eng.knn(Q, k=10, max_frontier=512)
+    for qi, q in enumerate(Q):
+        want = np.array([d for d, _ in ref.knn_query(q, 10)])
+        np.testing.assert_allclose(np.asarray(res.dists)[qi], want, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6),
+       st.sampled_from([6, 9, 16]))
+def test_property_interleaved_ops_keep_invariants(seed, dim, cap):
+    """Random interleaved insert/delete keeps every SM-tree invariant."""
+    rng = np.random.default_rng(seed)
+    n = 120
+    X = rng.random((n, dim)).astype(np.float32)
+    eng = SMTreeEngine.empty(dim=dim, capacity=cap, max_nodes=256)
+    live = {}
+    nid = 0
+    for _ in range(200):
+        if not live or rng.random() < 0.65:
+            eng.insert(X[nid % n], nid)
+            live[nid] = nid % n
+            nid += 1
+        else:
+            oid = int(rng.choice(list(live)))
+            assert eng.delete(X[live.pop(oid)], oid)
+    eng.validate()
+    assert eng.n_objects == len(live)
+    # every live object findable at distance 0
+    some = list(live.items())[:10]
+    if some:
+        Q = np.stack([X[v] for _, v in some])
+        res = eng.range_search(Q, 0.0, max_results=16, max_frontier=128)
+        ids = np.asarray(res.ids)
+        for row, (oid, _) in enumerate(some):
+            assert oid in ids[row]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_knn_exact_when_no_overflow(seed):
+    rng = np.random.default_rng(seed)
+    X = rng.random((500, 5)).astype(np.float32)
+    eng = SMTreeEngine.build(X, capacity=12, seed=seed % 1000)
+    Q = rng.random((8, 5)).astype(np.float32)
+    res = eng.knn(Q, k=3, max_frontier=512)
+    assert not np.asarray(res.overflow).any()
+    np.testing.assert_allclose(np.asarray(res.dists),
+                               brute_knn_dists(X, Q, 3), atol=1e-5)
+
+
+def test_page_hits_below_brute_force():
+    """Pruning must beat scanning: page hits per query < total leaf count."""
+    X = clustered(4000, dims=6, seed=23)
+    eng = SMTreeEngine.build(X, capacity=32)
+    n_leaves = int(np.asarray(eng.tree.is_leaf & eng.tree.alive).sum())
+    res = eng.knn(X[:32], k=1, max_frontier=512)
+    assert float(np.asarray(res.page_hits).mean()) < 0.8 * n_leaves

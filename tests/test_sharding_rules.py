@@ -1,0 +1,107 @@
+"""Unit tests for the GSPMD sharding policy (no device mesh needed beyond
+host CPU — rules are pure functions of paths/shapes/mesh shape)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.all_archs import smoke_config
+from repro.configs.base import get_config
+from repro.dist import sharding as shd
+from repro.models import model as M
+
+
+class FakeMesh:
+    """Duck-typed mesh (axis names/sizes only) for rule unit tests."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def _specs(arch, **over):
+    cfg = get_config(arch, head_pad=16, vocab_pad_to=256, **over)
+    return cfg, shd.param_pspecs(cfg, M.param_specs(cfg), MESH)
+
+
+def _flat(specs):
+    return {("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path)): s
+            for path, s in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]}
+
+
+def test_every_spec_divides_evenly():
+    """jit argument shardings demand exact divisibility for all archs."""
+    from repro.configs.base import list_archs
+    for arch in list_archs():
+        cfg = get_config(arch, head_pad=16, vocab_pad_to=256)
+        sds = M.param_specs(cfg)
+        specs = shd.param_pspecs(cfg, sds, MESH)
+        for (path, leaf), (_, spec) in zip(
+                jax.tree_util.tree_flatten_with_path(sds)[0],
+                jax.tree_util.tree_flatten_with_path(
+                    specs, is_leaf=lambda x: isinstance(x, P))[0]):
+            for i, part in enumerate(spec):
+                if part is None:
+                    continue
+                total = 1
+                for a in (part if isinstance(part, tuple) else (part,)):
+                    total *= MESH.shape[a]
+                assert leaf.shape[i] % total == 0, \
+                    (arch, path, leaf.shape, spec)
+
+
+def test_attention_rules():
+    _, specs = _specs("yi-34b")
+    flat = _flat(specs)
+    wq = next(v for k, v in flat.items() if k.endswith("attn/wq"))
+    assert wq[-2] == "model", wq                  # heads sharded
+    wk = next(v for k, v in flat.items() if k.endswith("attn/wk"))
+    assert "model" not in [a for p in wk if p for a in
+                           (p if isinstance(p, tuple) else (p,))], wk
+
+
+def test_embed_vocab_sharded_no_fsdp():
+    _, specs = _specs("qwen2.5-3b")
+    flat = _flat(specs)
+    emb = flat["embed"]
+    assert emb[0] == "model" and (len(emb) < 2 or emb[1] is None), emb
+
+
+def test_moe_ep_switches_expert_axis():
+    _, specs = _specs("grok-1-314b")
+    flat = _flat(specs)
+    wi = next(v for k, v in flat.items() if k.endswith("moe/wi"))
+    assert wi[-1] == "model" and wi[-3] != "data", wi   # TP + FSDP on D
+    _, specs_ep = _specs("grok-1-314b", moe_ep=True, expert_pad_to=16)
+    flat_ep = _flat(specs_ep)
+    wi_ep = next(v for k, v in flat_ep.items() if k.endswith("moe/wi"))
+    assert wi_ep[-3] == "data", wi_ep                    # E over data (EP)
+
+
+def test_zero1_extends_with_data():
+    spec = shd.opt_state_pspec(P(None, "model"), (4096, 1024), MESH)
+    assert spec[0] == "data" and spec[1] == "model", spec
+
+
+def test_big_params_get_fsdp():
+    _, specs = _specs("yi-34b")
+    flat = _flat(specs)
+    wq = next(v for k, v in flat.items() if k.endswith("attn/wq"))
+    used = [a for p in wq if p for a in (p if isinstance(p, tuple) else (p,))]
+    assert "data" in used, wq    # 7168x64x128 > threshold -> FSDP'd
+
+
+def test_cache_specs_seq_sharding():
+    cfg = get_config("jamba-v0.1-52b", head_pad=16, vocab_pad_to=256)
+    from repro.configs.base import SHAPES
+    cache = M.cache_specs(cfg, SHAPES["long_500k"])
+    specs = shd.cache_pspecs(cfg, cache, MESH, seq_shard=True)
+    kv_specs = [s for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)) if len(s) == 5]
+    assert kv_specs, "jamba must have KV caches"
+    for s in kv_specs:
+        assert s[3] is not None, s    # sequence axis sharded
