@@ -3,27 +3,49 @@ kernel and roofline benches.  Prints ``name,value`` CSV lines (plus readable
 tables at the end).  REPRO_BENCH_FULL=1 restores full paper scale."""
 from __future__ import annotations
 
+import importlib
+import os
 import sys
 import time
 
+if __package__ in (None, ""):   # script invocation: make repo root importable
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# (suite name, module) — modules import lazily and individually so one
+# missing dependency (e.g. the distributed stack on a minimal single-host
+# CPU image) skips its suite instead of killing the whole entrypoint
+_SUITES = [
+    ("paper_queries", "paper_queries"),   # Figs. 5-8
+    ("paper_delete", "paper_delete"),     # Fig. 10 + occupancy
+    ("bench_engine", "bench_engine"),     # JAX engine throughput
+    ("bench_kernels", "bench_kernels"),   # kernel validation/baseline
+    ("roofline", "roofline_table"),       # 40-cell dry-run table
+]
+
 
 def main() -> None:
-    from benchmarks import (bench_engine, bench_kernels, paper_delete,
-                            paper_queries, roofline_table)
     results: list[tuple[str, object]] = []
 
     def report(name, value):
         results.append((name, value))
         print(f"{name},{value}", flush=True)
 
-    suites = [
-        ("paper_queries", paper_queries.run),     # Figs. 5-8
-        ("paper_delete", paper_delete.run),       # Fig. 10 + occupancy
-        ("bench_engine", bench_engine.run),       # JAX engine throughput
-        ("bench_kernels", bench_kernels.run),     # kernel validation/baseline
-        ("roofline", roofline_table.run),         # 40-cell dry-run table
-    ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    suites = []
+    for name, mod_name in _SUITES:
+        try:
+            suites.append(
+                (name, importlib.import_module(f"benchmarks.{mod_name}").run))
+        except ImportError as e:
+            if only == name:
+                # an explicitly requested suite must not skip silently
+                raise SystemExit(f"suite {name!r} failed to import: {e}")
+            print(f"# skip {name}: unavailable on this host ({e})",
+                  flush=True)
+    if only and only not in [n for n, _ in suites]:
+        raise SystemExit(f"unknown suite {only!r}; "
+                         f"have {[n for n, _ in _SUITES]}")
     for name, fn in suites:
         if only and only != name:
             continue

@@ -16,6 +16,8 @@ from repro.core.distributed import (brute_force_knn, build_forest,
                                     forest_delete, forest_knn)
 from repro.core.metric import pairwise
 from repro.data.datagen import clustered
+from repro.dist.sharding import use_mesh as _use_mesh
+
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 X = clustered(20_000, dims=12, seed=0)[:, :12].copy()
@@ -26,7 +28,7 @@ forest, _ = build_forest(X, mesh, capacity=32)
 print(f"forest build over {mesh.shape['model']} shards: "
       f"{time.time() - t0:.2f}s ({X.shape[0]} objects)")
 
-with jax.sharding.set_mesh(mesh):
+with _use_mesh(mesh):
     t0 = time.time()
     d, ids = forest_knn(forest, mesh, jnp.asarray(Q), k=5, max_frontier=256)
     jax.block_until_ready(d)

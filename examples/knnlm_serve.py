@@ -22,6 +22,8 @@ from repro.models import model as M
 from repro.serve.knnlm import KnnLmConfig, KnnLmDatastore, mix_logits
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import TrainSettings, init_all, make_train_step
+from repro.dist.sharding import use_mesh as _use_mesh
+
 
 cfg = dataclasses.replace(smoke_config("qwen2.5-3b"), n_layers=2,
                           block_pattern=("attn",))
@@ -31,7 +33,7 @@ dc = DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
 # --- 1. brief training -------------------------------------------------------
 batch0 = synth_batch(dc, 0)
 inputs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch0.items()}
-with jax.sharding.set_mesh(mesh):
+with _use_mesh(mesh):
     step_fn, sh = make_train_step(
         cfg, mesh, inputs,
         TrainSettings(opt=AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)))

@@ -8,7 +8,6 @@ config; pass --arch/--no-smoke to scale up to the real configs on hardware
 (e.g. ``--arch yi-34b`` on a TPU pod with the 16x16 mesh).
 """
 import shutil
-import subprocess
 import sys
 import tempfile
 

@@ -9,8 +9,8 @@ keeps compile time and HLO size flat in depth.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Callable
 
 # block kinds: "attn" (GQA + dense FFN), "attn_moe" (GQA + MoE FFN),
 # "mamba" / "mamba_moe", "mlstm", "slstm"

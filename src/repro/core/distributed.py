@@ -20,16 +20,14 @@ The same code drives 8 host devices in tests and the production mesh's
 from __future__ import annotations
 
 import functools
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
 from repro.core import smtree
 from repro.core.smtree import TreeArrays, bulk_build
+from repro.dist.sharding import shard_map  # version-portable wrapper
 
 
 def build_forest(X: np.ndarray, mesh: Mesh, *, axis: str = "model",

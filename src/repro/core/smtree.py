@@ -28,13 +28,9 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro.core.split import SPLIT_POLICIES
 
 MAX_HEIGHT = 16          # supports capacity^15 objects; plenty
 _INF = jnp.inf

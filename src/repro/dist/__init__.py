@@ -1,0 +1,16 @@
+"""Distributed substrate: GSPMD sharding policy, fault-tolerant
+checkpointing, and gradient compression.
+
+Three modules, consumed by every launch/train/serve layer:
+
+  * ``sharding``    — pure-function partitioning rules (params, inputs,
+    caches, optimizer state) for a ``{data, model}`` (optionally ``pod``)
+    mesh, plus the ambient-mesh helpers (``use_mesh``, ``constrain``) the
+    model code uses to pin activation layouts.
+  * ``checkpoint``  — atomic tmp-then-rename checkpoints with ``keep=N``
+    rotation, optional async writes, and a manifest enabling
+    bitwise-deterministic kill/resume (tests/test_checkpoint.py).
+  * ``compression`` — int8 quantize/mean-reduce/dequantize gradient
+    all-reduce (with error feedback residual), no-op when disabled.
+"""
+from repro.dist import checkpoint, compression, sharding  # noqa: F401

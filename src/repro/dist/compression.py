@@ -1,0 +1,76 @@
+"""int8 gradient compression for the data-parallel all-reduce.
+
+Wire scheme (per leaf): share one f32 scale = pmax(max|g|)/127 across the
+reduction axis, quantize to int8, sum as int32 (exact — 8-bit lanes cannot
+overflow a 32-bit accumulator at any realistic DP degree), dequantize once.
+The *error-feedback residual* g - deq(q(g)) is returned alongside so callers
+can fold it into the next step's gradient (standard EF-SGD; bounded by one
+quantisation step, asserted in tests/_dist_worker.py::scenario_compressed_psum).
+
+Two entry points:
+  * ``compressed_psum_mean`` — explicit collective form for shard_map code.
+  * ``compressed_mean_hook`` — GSPMD form for jitted train steps where
+    autodiff already produced globally-reduced grads: quantize/dequantize
+    in place (same numerics the wire format would impose), passthrough when
+    compression is off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+
+
+def _scale_of(g: jax.Array, axis_name: str | None = None) -> jax.Array:
+    amax = jnp.max(jnp.abs(g))
+    if axis_name is not None:
+        amax = jax.lax.pmax(amax, axis_name)
+    return jnp.maximum(amax, jnp.finfo(jnp.float32).tiny) / _QMAX
+
+
+def _quantize(g: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(g / scale), -_QMAX, _QMAX).astype(jnp.int8)
+
+
+def compressed_mean_hook(grads, mode: str = "int8"):
+    """Quantize-dequantize every floating grad leaf (int8, shared f32 scale).
+
+    No-op passthrough for ``mode`` in (None, 'none').  Leaf dtypes are
+    preserved so the optimizer update is oblivious to compression."""
+    if mode in (None, "none", False):
+        return grads
+
+    def leaf(g):
+        if not jnp.issubdtype(g.dtype, jnp.floating):
+            return g
+        gf = g.astype(jnp.float32)
+        scale = _scale_of(gf)
+        q = _quantize(gf, scale)
+        return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+    return jax.tree.map(leaf, grads)
+
+
+def compressed_psum_mean(tree, axis_name: str):
+    """Compressed mean all-reduce over ``axis_name`` (shard_map context).
+
+    Returns (mean_tree, err_tree): the dequantized cross-rank mean per leaf,
+    and the local error-feedback residual g - deq(q(g))."""
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g):
+        gf = g.astype(jnp.float32)
+        scale = _scale_of(gf, axis_name)
+        q = _quantize(gf, scale)
+        deq = q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        mean = (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+        err = (gf - deq).astype(g.dtype)
+        return mean, err
+
+    pairs = jax.tree.map(leaf, tree)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2  # noqa: E731
+    mean = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    err = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return mean, err

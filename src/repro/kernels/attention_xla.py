@@ -8,8 +8,6 @@ is O(sq * d + chunk * d) per head instead of O(sq * sk).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

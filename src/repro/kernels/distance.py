@@ -25,6 +25,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pallas renamed TPUCompilerParams -> CompilerParams; support both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _dist_kernel(q_ref, e_ref, out_ref, *, metric: str, nk: int):
     k = pl.program_id(2)
@@ -105,7 +109,7 @@ def pairwise_distance_pallas(q: jax.Array, e: jax.Array, *, metric: str = "d_inf
         ],
         out_specs=pl.BlockSpec((bq, be), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nqp, nep), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qp, ep)
@@ -151,7 +155,7 @@ def pairwise_distance_prune_pallas(q, e, r_q, r_e, *, metric: str = "d_inf",
             jax.ShapeDtypeStruct((nqp, nep), jnp.float32),
             jax.ShapeDtypeStruct((nqp, nep), jnp.bool_),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qp, ep, rqp, rep)

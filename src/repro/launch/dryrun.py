@@ -85,6 +85,20 @@ def _cost_analysis(compiled):
         return {"error": str(e)}
 
 
+def _require_dist():
+    """Import the distributed stack with a diagnosable failure mode: dry-run
+    cells need it, but a missing/broken install should surface as one clear
+    per-cell error record, not an ImportError at entrypoint import time."""
+    try:
+        from repro.dist import sharding as shd
+        return shd
+    except ImportError as e:
+        raise RuntimeError(
+            "repro.dist unavailable — dry-run cells need the sharding/"
+            "checkpoint stack; run tier-1 smoke paths instead on minimal "
+            f"hosts ({e})") from e
+
+
 def build_cell(arch: str, shape_name: str, mesh, *, cfg_extra=None,
                ts_extra=None):
     """Returns (lower_fn, static_mem dict) for a cell.  ``cfg_extra`` /
@@ -93,7 +107,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, cfg_extra=None,
     if cfg_extra:
         cfg = dataclasses.replace(cfg, **cfg_extra)
     shape = SHAPES[shape_name]
-    from repro.dist import sharding as shd
+    shd = _require_dist()
     params_sds = M.param_specs(cfg)
     static = {}
 

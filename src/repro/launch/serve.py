@@ -2,10 +2,11 @@
 mixing from an SM-tree datastore.
 
     python -m repro.launch.serve --arch qwen2.5-3b --smoke --batch 4 \
-        --prompt-len 32 --steps 16 [--knn --lam 0.3]
+        --prompt-len 32 --steps 16 [--knn --lam 0.3] [--mesh host]
 
-On hardware the same builders serve the full configs on the production mesh
-(serve/serve_step.py is what the decode_32k / long_500k dry-run cells lower).
+``--mesh host`` runs the GSPMD-sharded decode step (serve/serve_step.py
+builders + dist/sharding policy) over all host devices — the same code path
+the decode_32k / long_500k dry-run cells lower for the production mesh.
 """
 from __future__ import annotations
 
@@ -22,6 +23,55 @@ from repro.data.pipeline import DataConfig, synth_batch
 from repro.models import model as M
 
 
+def serve_sharded(args, cfg):
+    """GSPMD-sharded greedy decode on a {data, model} mesh over all host
+    devices, using the exact serve_step builders the dry-run lowers."""
+    from repro.configs.base import ShapeSpec
+    from repro.dist import sharding as shd
+    from repro.serve.serve_step import make_decode_step
+
+    n_dev = len(jax.devices())
+    nm = 2 if n_dev % 2 == 0 else 1
+    mesh = jax.make_mesh((n_dev // nm, nm), ("data", "model"))
+    total = args.prompt_len + args.steps + 1
+    shape = ShapeSpec("serve", total, args.batch, "decode")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
+                    global_batch=args.batch)
+    prompt = jnp.asarray(synth_batch(dc, 0, with_labels=False)["tokens"])
+
+    with shd.use_mesh(mesh):
+        fn, sh = make_decode_step(cfg, mesh, shape)
+        jitted = jax.jit(fn,
+                         in_shardings=(sh["params"], sh["token"],
+                                       sh["cache"], sh["pos"]),
+                         out_shardings=(sh["token"], sh["logits"],
+                                        sh["cache"]),
+                         donate_argnums=(2,))
+        params = jax.device_put(M.init_params(cfg, jax.random.PRNGKey(0)),
+                                sh["params"])
+        cache = jax.device_put(M.init_cache(cfg, args.batch, total),
+                               sh["cache"])
+        t0 = time.time()
+        for pos in range(args.prompt_len):
+            tok, logits, cache = jitted(params, prompt[:, pos], cache,
+                                        jnp.int32(pos))
+        prefill_s = time.time() - t0
+        out = [tok]
+        t0 = time.time()
+        for step in range(args.steps):
+            tok, logits, cache = jitted(params, tok, cache,
+                                        jnp.int32(args.prompt_len + step))
+            out.append(tok)
+        jax.block_until_ready(tok)
+        decode_s = time.time() - t0
+    toks = np.stack([np.asarray(t) for t in out], axis=1)
+    print(f"[serve] mesh {dict(mesh.shape)} batch {args.batch}: "
+          f"prefill {prefill_s:.2f}s, decode {args.steps} steps in "
+          f"{decode_s:.2f}s ({decode_s / args.steps * 1e3:.1f} ms/step)")
+    print("[serve] sample:", toks[0][:12])
+    return toks
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -32,9 +82,23 @@ def main(argv=None):
     ap.add_argument("--knn", action="store_true",
                     help="mix with an SM-tree kNN-LM datastore")
     ap.add_argument("--lam", type=float, default=0.3)
+    ap.add_argument("--mesh", default="single", choices=["single", "host"],
+                    help="'host': sharded decode over all host devices")
     args = ap.parse_args(argv)
+    if args.prompt_len < 1:
+        ap.error("--prompt-len must be >= 1 (decode needs a seed token)")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.mesh == "host":
+        if args.knn:
+            ap.error("--knn is not supported with --mesh host yet; "
+                     "run the single-device path for kNN-LM mixing")
+        if len(jax.devices()) >= 2:
+            return serve_sharded(args, cfg)
+        print("[serve] --mesh host requested but only 1 device visible; "
+              "falling back to the UNSHARDED single-device path "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+              "to shard on CPU)", flush=True)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
                     global_batch=args.batch)

@@ -12,18 +12,15 @@ any step and resumed produces the same trajectory as an uninterrupted run.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.all_archs import smoke_config
 from repro.configs.base import get_config
 from repro.data.pipeline import DataConfig, synth_batch
+from repro.dist import sharding as shd
 from repro.dist.checkpoint import CheckpointManager, latest_step
-from repro.models import model as M
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import TrainSettings, init_all, make_train_step
 
@@ -64,7 +61,7 @@ def main(argv=None):
         lr=args.lr, warmup_steps=max(5, args.steps // 20),
         total_steps=args.steps))
 
-    with jax.sharding.set_mesh(mesh):
+    with shd.use_mesh(mesh):
         step_fn, sh = make_train_step(cfg, mesh, inputs, settings)
         jitted = jax.jit(step_fn,
                          in_shardings=(sh["params"], sh["opt"], sh["batch"]),
@@ -85,6 +82,11 @@ def main(argv=None):
             print(f"[train] resumed from step {start}")
         params = jax.device_put(params, sh["params"])
         opt = jax.device_put(opt, sh["opt"])
+
+        if start >= args.steps:
+            print(f"[train] nothing to do: resumed at step {start} >= "
+                  f"--steps {args.steps}")
+            return None
 
         t0 = time.time()
         for step in range(start, args.steps):

@@ -8,19 +8,16 @@ at ``max_target_len``.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import constrain_batch_seq
 from repro.kernels import ops
 from repro.kernels.attention_xla import decode_attention
 from repro.models import attention as attn_mod
-from repro.models.layers import (apply_norm, dense, dense_init, mlp_apply,
-                                 mlp_init, norm_init, sinusoidal_positions,
+from repro.models.layers import (apply_norm, mlp_apply, mlp_init,
+                                 norm_init, sinusoidal_positions,
                                  truncated_normal)
 
 

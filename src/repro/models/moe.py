@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, mlp_init, mlp_apply, truncated_normal
+from repro.models.layers import mlp_init, mlp_apply, truncated_normal
 
 
 def moe_init(key, cfg, dtype):
@@ -110,11 +110,13 @@ def moe_apply_ep(p, cfg, x, capacity: int | None = None):
                          1.0 - keep.mean()])
         return y, aux[None]
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P("data", None, None), P(), P("data"),
-                                 P("data"), P("data")),
-                       out_specs=(P("data", None, None), P("data")),
-                       axis_names={"data"}, check_vma=False)
+    from repro.dist.sharding import shard_map
+    fn = shard_map(body, mesh,
+                   (P("data", None, None), P(), P("data"),
+                    P("data"), P("data")),
+                   (P("data", None, None), P("data")),
+                   axis_names={"data"})   # manual over 'data' only: GSPMD
+    #                                       keeps the expert FFN TP-sharded
     y, aux = fn(x, p["router"], p["wi"], p["wg"], p["wo"])
     aux = aux.mean(0)
     if cfg.n_shared_experts:

@@ -8,7 +8,6 @@ period is the remat (activation-checkpoint) unit.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

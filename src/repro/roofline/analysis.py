@@ -19,7 +19,6 @@ waste in HLO_FLOPs.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Any
 

@@ -21,7 +21,6 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.engine import SMTreeEngine
-from repro.core import smtree
 from repro.models import model as M
 
 

@@ -8,9 +8,6 @@ serve/knnlm.py and is exercised by examples/knnlm_serve.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
-import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 

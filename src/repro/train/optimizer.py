@@ -6,7 +6,6 @@ so the ZeRO-1 sharding rule in dist/sharding.py applies leaf-wise.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax

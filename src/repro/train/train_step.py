@@ -9,8 +9,6 @@ the dry-run and the real trainer share this exact builder.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.sharding import use_mesh as _use_mesh  # noqa: E402
+
 
 def scenario_forest_knn():
     from repro.core.distributed import build_forest, brute_force_knn, forest_knn
@@ -18,7 +20,7 @@ def scenario_forest_knn():
     X = np.random.default_rng(0).random((4000, 8)).astype(np.float32)
     Q = np.random.default_rng(1).random((16, 8)).astype(np.float32)
     forest, _ = build_forest(X, mesh, capacity=16)
-    with jax.sharding.set_mesh(mesh):
+    with _use_mesh(mesh):
         d, ids = forest_knn(forest, mesh, jnp.asarray(Q), k=5,
                             max_frontier=256)
     D = pairwise("d_inf", Q, X)
@@ -35,7 +37,7 @@ def scenario_forest_brute_matches_tree():
     X = np.random.default_rng(3).random((2048, 16)).astype(np.float32)
     Q = np.random.default_rng(4).random((8, 16)).astype(np.float32)
     forest, _ = build_forest(X, mesh, capacity=16)
-    with jax.sharding.set_mesh(mesh):
+    with _use_mesh(mesh):
         d1, _ = forest_knn(forest, mesh, jnp.asarray(Q), k=3, max_frontier=256)
         Xs = jax.device_put(jnp.asarray(X), jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec("model")))
@@ -49,7 +51,7 @@ def scenario_forest_delete():
     X = np.random.default_rng(5).random((4096, 8)).astype(np.float32)
     forest, _ = build_forest(X, mesh, capacity=16)
     victims = np.arange(0, 256)
-    with jax.sharding.set_mesh(mesh):
+    with _use_mesh(mesh):
         forest, found = forest_delete(
             forest, mesh, jnp.asarray(X[victims]),
             jnp.asarray(victims, jnp.int32))
@@ -82,7 +84,7 @@ def scenario_train_step_sharded():
               for k, v in batch0.items()}
     settings = TrainSettings(opt=AdamWConfig(lr=1e-2, warmup_steps=2,
                                              total_steps=50))
-    with jax.sharding.set_mesh(mesh):
+    with _use_mesh(mesh):
         step_fn, sh = make_train_step(cfg, mesh, inputs, settings)
         params, opt = init_all(cfg, jax.random.PRNGKey(0))
         params = jax.device_put(params, sh["params"])
@@ -130,9 +132,9 @@ def scenario_elastic_reshard():
 def scenario_compressed_psum():
     """int8 compressed gradient all-reduce: mean within quantisation error,
     error feedback captures the residual."""
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.dist.compression import compressed_psum_mean
+    from repro.dist.sharding import shard_map
     import functools
     mesh = jax.make_mesh((8,), ("data",))
     g = np.random.default_rng(11).normal(size=(8, 4096)).astype(np.float32)
@@ -143,7 +145,7 @@ def scenario_compressed_psum():
         mean, err = compressed_psum_mean({"g": gs}, "data")
         return mean["g"], err["g"]
 
-    with jax.sharding.set_mesh(mesh):
+    with _use_mesh(mesh):
         mean, err = run(jnp.asarray(g))
     true_mean = g.mean(0, keepdims=True)
     got = np.asarray(mean)[0:1]
@@ -170,7 +172,7 @@ def scenario_moe_ep_equivalence():
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model))
     y_ref, aux_ref = moe_mod.moe_apply(p, cfg, x)           # dense dispatch
     cfg_ep = dataclasses.replace(cfg, moe_ep=True)
-    with jax.sharding.set_mesh(mesh):
+    with _use_mesh(mesh):
         y_ep, aux_ep = jax.jit(
             lambda p, x: moe_mod.moe_apply(p, cfg_ep, x))(p, x)
     np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),

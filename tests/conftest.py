@@ -1,0 +1,65 @@
+"""Shared test configuration.
+
+Provides a minimal deterministic stand-in for ``hypothesis`` when it is not
+installed (some minimal images ship only jax+numpy+pytest; CI installs the
+real library from pyproject.toml).  The stub supports exactly the subset the
+suite uses — ``given``/``settings`` and the ``integers``/``sampled_from``
+strategies — drawing seeded pseudo-random examples so the property tests
+still exercise many cases and stay reproducible.
+"""
+import inspect
+import random
+import sys
+import types
+
+
+def _install_hypothesis_stub() -> None:
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    mod.__hypothesis_stub__ = True
+
+    def integers(min_value, max_value):
+        return ("int", min_value, max_value)
+
+    def sampled_from(seq):
+        return ("sample", list(seq))
+
+    def _draw(rng, strat):
+        if strat[0] == "int":
+            return rng.randint(strat[1], strat[2])
+        return rng.choice(strat[1])
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_stub_max_examples", 20)
+                rng = random.Random(f"stub:{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    fn(*args, *(_draw(rng, s) for s in strats), **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            # strategy-filled params must be invisible to pytest's fixture
+            # resolution (real hypothesis does the same)
+            wrapper.__signature__ = inspect.Signature(parameters=[])
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return deco
+
+    st.integers = integers
+    st.sampled_from = sampled_from
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_stub()

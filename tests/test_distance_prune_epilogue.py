@@ -1,0 +1,108 @@
+"""Fused distance+prune Pallas epilogue: interpret-mode parity of the
+in-kernel triangle-inequality mask against the jnp reference, for all three
+metrics, including rows engineered to sit exactly on the prune boundary
+(the ``_EPS`` regime core/smtree.py pads for)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+METRICS = ["d_inf", "sqeuclidean", "ip"]
+
+
+def _true_dist(dist, metric):
+    """Kernel distances -> the distances the mask is defined on (the fused
+    epilogue applies sqrt in-kernel for sqeuclidean)."""
+    d = np.asarray(dist)
+    return np.sqrt(np.maximum(d, 0.0)) if metric == "sqeuclidean" else d
+
+
+@pytest.mark.parametrize("nq,ne,d", [(32, 48, 16), (100, 130, 20), (7, 257, 96)])
+@pytest.mark.parametrize("metric", METRICS)
+def test_prune_mask_matches_reference(nq, ne, d, metric):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(nq * 31 + ne), 4)
+    q = jax.random.uniform(k1, (nq, d))
+    e = jax.random.uniform(k2, (ne, d))
+    # 'ip' distances are negative inner products (~ -d/4 for uniform [0,1]
+    # vectors): centre the radii near each metric's distance range so the
+    # mask is a real mix of True/False
+    if metric == "ip":
+        lo, hi = -0.2 * d, -0.05 * d
+    elif metric == "sqeuclidean":          # true L2 dist ~ 0.41 * sqrt(d)
+        lo, hi = 0.1 * d ** 0.5, 0.35 * d ** 0.5
+    else:
+        lo, hi = 0.0, 0.6
+    r_q = jax.random.uniform(k3, (nq,), minval=lo, maxval=hi)
+    r_e = jax.random.uniform(k4, (ne,), minval=lo, maxval=hi)
+
+    got_d, got_m = ops.pairwise_distance_prune(q, e, r_q, r_e, metric=metric,
+                                               impl="interpret")
+    want_m = ref.prune_mask_ref(jnp.asarray(_true_dist(got_d, metric)),
+                                r_q, r_e)
+    assert np.asarray(got_m).dtype == np.bool_
+    # away from the float boundary the kernel mask must agree exactly
+    margin = np.abs(_true_dist(got_d, metric)
+                    - (np.asarray(r_q)[:, None] + np.asarray(r_e)[None, :]))
+    decided = margin > 1e-6
+    assert decided.mean() > 0.95, "degenerate case: almost all borderline"
+    np.testing.assert_array_equal(np.asarray(got_m)[decided],
+                                  np.asarray(want_m)[decided])
+    # both mask populations must be represented, else the test proves nothing
+    assert np.asarray(got_m)[decided].any()
+    assert (~np.asarray(got_m)[decided]).any()
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_prune_mask_exact_boundary_is_inclusive(metric):
+    """Rows constructed so d == r_q + r_e exactly: the paper's prune test is
+    inclusive (survive on equality), matching prune_mask_ref.  This is the
+    borderline the engine additionally pads with _EPS (core/smtree.py) —
+    the kernel itself must already be inclusive, the engine epsilon only
+    absorbs f32 radius-fold rounding on top."""
+    d = 32
+    q = jnp.zeros((8, d), jnp.float32)
+    # entries at exactly-representable distances from the origin
+    offsets = jnp.asarray([0.25, 0.5, 1.0, 2.0], jnp.float32)
+    e = jnp.zeros((4, d), jnp.float32).at[:, 0].set(offsets)
+    if metric == "d_inf":
+        dist = offsets                       # max |q - e|
+    elif metric == "sqeuclidean":
+        dist = offsets                       # true (sqrt'd) distance
+    else:                                    # ip: -<q, e> = 0 for q = 0
+        dist = jnp.zeros((4,), jnp.float32)
+    # split d into r_q + r_e in exactly-representable halves
+    r_q = jnp.full((8,), float(dist[0]) * 0.5, jnp.float32)
+    r_e = dist - float(dist[0]) * 0.5        # r_q + r_e == dist exactly
+
+    got_d, got_m = ops.pairwise_distance_prune(q, e, r_q, r_e, metric=metric,
+                                               impl="interpret")
+    want_d, want_m = ops.pairwise_distance_prune(q, e, r_q, r_e, metric=metric,
+                                                 impl="xla")
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6, atol=1e-6)
+    # exact boundary: d <= r_q + r_e holds with equality -> all True,
+    # in both the fused kernel and the reference
+    assert np.asarray(got_m).all(), np.asarray(got_m)
+    assert np.asarray(want_m).all()
+
+
+def test_prune_mask_eps_padding_visits_borderline_subtrees():
+    """The engine-level guarantee _EPS exists for: a distance one ulp above
+    the folded radius bound must still survive once the caller pads r_q by
+    _EPS (smtree.py queries do exactly this)."""
+    from repro.core.smtree import _EPS
+    d = 16
+    q = jnp.zeros((1, d), jnp.float32)
+    e = jnp.zeros((1, d), jnp.float32).at[0, 0].set(1.0)
+    ulp = float(np.spacing(np.float32(1.0)))
+    # radius bound sits one f32 ulp BELOW the true distance: un-padded test
+    # prunes, _EPS-padded test (the engine's form) must keep the subtree
+    r_e = jnp.asarray([1.0 - ulp - 0.5], jnp.float32)
+    strict = ops.pairwise_distance_prune(q, e, jnp.asarray([0.5]), r_e,
+                                         metric="d_inf", impl="interpret")[1]
+    padded = ops.pairwise_distance_prune(q, e, jnp.asarray([0.5 + _EPS]), r_e,
+                                         metric="d_inf", impl="interpret")[1]
+    assert not bool(np.asarray(strict)[0, 0])
+    assert bool(np.asarray(padded)[0, 0])

@@ -1,9 +1,7 @@
 """JAX SM-tree engine: equivalence vs brute force + the paper-faithful ref,
 structural/SM invariants through bulk build, insert (with splits) and delete
 (with merges), plus hypothesis property tests."""
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import SMTreeEngine

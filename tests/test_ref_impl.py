@@ -3,7 +3,7 @@ force, structural invariants, and the SM-tree's delete contract."""
 import numpy as np
 import pytest
 
-from repro.core.metric import make_metric, pairwise
+from repro.core.metric import pairwise
 from repro.core.ref_impl import MTree, SMTree
 from repro.data.datagen import clustered, uniform
 

@@ -1,11 +1,8 @@
 """Unit tests for the GSPMD sharding policy (no device mesh needed beyond
 host CPU — rules are pure functions of paths/shapes/mesh shape)."""
 import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.all_archs import smoke_config
 from repro.configs.base import get_config
 from repro.dist import sharding as shd
 from repro.models import model as M
