@@ -1,8 +1,26 @@
-"""JAX SM-tree engine benchmarks: jitted batched-query throughput, bulk
-build, engine-vs-ref page-hit comparison, insert/delete fast-path rates."""
+"""JAX SM-tree engine benchmarks.
+
+The centrepiece is the query-matrix bench: batched kNN throughput over
+b x n x metric x impl, where impl toggles the frontier-scoring engine
+(``REPRO_FRONTIER_IMPL`` semantics — 'perquery' is the legacy
+vmap(per-query) baseline, the cohort path runs as 'pallas' on TPU / 'xla'
+elsewhere).  ``speedup_cohort_vs_perquery_*`` rows record the headline
+number; the Pallas interpret path is correctness-only and excluded from
+timing off-TPU.
+
+Also: bulk build, engine-vs-ref page hits, insert/delete fast-path rates,
+and the sharded-serve-vs-single-device decode comparison (ROADMAP item) run
+as subprocesses over ``repro.launch.serve``.
+
+Scale envs: REPRO_BENCH_SMOKE=1 (tiny, CI) / REPRO_BENCH_FULL=1 (paper
+scale); default is the PR-acceptance matrix (b up to 1024, n up to 100k).
+"""
 from __future__ import annotations
 
 import os
+import re
+import subprocess
+import sys
 import time
 
 import jax
@@ -14,79 +32,159 @@ from repro.core.ref_impl import SMTree
 from repro.data.datagen import make_dataset
 
 FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
-N = 50_000 if FULL else 10_000
-BATCH = 64
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+if SMOKE:
+    NS = [2_000]
+    BATCHES = [1, 8]
+elif FULL:
+    NS = [10_000, 100_000, 500_000]
+    BATCHES = [1, 64, 1024, 4096]
+else:
+    NS = [10_000, 100_000]
+    BATCHES = [1, 64, 1024]
+METRICS = ["d_inf", "l2"]
+K = 10
+MAX_FRONTIER = 64
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cohort_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _time_knn(eng, Q, impl) -> float:
+    """Warm (compile) then time; iteration count adapts to per-call cost."""
+    res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER, impl=impl)
+    jax.block_until_ready(res.dists)
+    t0 = time.perf_counter()
+    res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER, impl=impl)
+    jax.block_until_ready(res.dists)
+    warm = time.perf_counter() - t0
+    iters = max(3, min(20, int(2.0 / max(warm, 1e-4))))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER, impl=impl)
+    jax.block_until_ready(res.dists)
+    return (time.perf_counter() - t0) / iters
+
+
+def _query_matrix(report):
+    """knn throughput: b x n x metric x {perquery, cohort}, plus speedups."""
+    rng = np.random.default_rng(8)
+    cohort = _cohort_impl()
+    for n in NS:
+        X = make_dataset("clustered", n, seed=7)[:, :10].copy()
+        for metric in METRICS:
+            t0 = time.perf_counter()
+            eng = SMTreeEngine.build(X, capacity=32, metric=metric)
+            report(f"bulk_build_n{n}_{metric}_s", round(time.perf_counter() - t0, 2))
+            for b in BATCHES:
+                Q = jnp.asarray(
+                    X[rng.integers(0, n, b)]
+                    + rng.normal(0, 0.01, (b, 10)).astype(np.float32),
+                    jnp.float32)
+                times = {}
+                for impl in ("perquery", cohort):
+                    dt = _time_knn(eng, Q, impl)
+                    times[impl] = dt
+                    report(f"knn_b{b}_n{n}_{metric}_{impl}_ms",
+                           round(dt * 1e3, 2))
+                report(f"speedup_cohort_vs_perquery_b{b}_n{n}_{metric}",
+                       round(times["perquery"] / times[cohort], 2))
+
+
+def _serve_case(report):
+    """ROADMAP item: sharded serve (--mesh host over forced host devices) vs
+    single-device decode, measured in ms/step via subprocesses (each needs
+    its own XLA_FLAGS before jax import)."""
+    steps = 4 if SMOKE else 8
+    base = [sys.executable, "-m", "repro.launch.serve", "--arch",
+            "qwen2.5-3b", "--smoke", "--batch", "8", "--prompt-len", "4",
+            "--steps", str(steps)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+
+    def run_case(name, cmd, extra_env):
+        e = dict(env, **extra_env)
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  env=e, timeout=900)
+            m = re.search(r"\(([\d.]+) ms/step", proc.stdout)
+            if m is None:
+                # surface the failure so a NaN row in CI is diagnosable
+                print(f"# serve case {name}: no ms/step in output "
+                      f"(rc={proc.returncode})\n"
+                      f"# stderr tail: {proc.stderr[-2000:]}", flush=True)
+            report(name, float(m.group(1)) if m else float("nan"))
+            return float(m.group(1)) if m else float("nan")
+        except Exception as exc:  # noqa: BLE001 — a bench row, not control flow
+            print(f"# serve case {name} failed: {exc}", flush=True)
+            report(name, float("nan"))
+            return float("nan")
+
+    single = run_case("serve_single_ms_per_step", base, {})
+    sharded = run_case(
+        "serve_sharded_ms_per_step", base + ["--mesh", "host"],
+        {"XLA_FLAGS": "--xla_force_host_platform_device_count=4"})
+    if np.isfinite(single) and np.isfinite(sharded) and sharded > 0:
+        report("serve_sharded_vs_single_ratio", round(single / sharded, 3))
 
 
 def run(report):
-    X = make_dataset("clustered", N, seed=7)[:, :10].copy()
-    t0 = time.time()
-    eng = SMTreeEngine.build(X, capacity=32)
-    report("bulk_build_seconds", round(time.time() - t0, 2))
-    report("bulk_build_objects_per_s", int(N / (time.time() - t0)))
+    _query_matrix(report)
 
+    # ref-impl page hits on a comparable workload (paper-faithful DFS order)
+    n_ref = 500 if SMOKE else 2_500
+    X = make_dataset("clustered", n_ref * 4, seed=7)[:, :10].copy()
     rng = np.random.default_rng(8)
-    Q = X[rng.integers(0, N, BATCH)] + rng.normal(0, 0.01, (BATCH, 10)) \
-        .astype(np.float32)
-    Qj = jnp.asarray(Q)
-
-    # jitted batched kNN throughput
-    res = eng.knn(Qj, k=10, max_frontier=256)      # compile + warm
-    jax.block_until_ready(res.dists)
-    t0 = time.time()
-    iters = 20
-    for _ in range(iters):
-        res = eng.knn(Qj, k=10, max_frontier=256)
-    jax.block_until_ready(res.dists)
-    dt = (time.time() - t0) / iters
-    report("engine_knn10_us_per_query", round(dt / BATCH * 1e6, 1))
-    report("engine_knn10_batch_ms", round(dt * 1e3, 2))
-    report("engine_knn10_mean_page_hits",
-           round(float(np.asarray(res.page_hits).mean()), 1))
-    report("engine_knn10_mean_dist_evals",
-           round(float(np.asarray(res.dist_evals).mean()), 1))
-
-    # ref-impl page hits on the same workload (paper-faithful DFS order)
     ref = SMTree(dim=10, capacity=32, n_dims=10)
-    for i, x in enumerate(X[:N // 4]):              # smaller ref for time
+    for i, x in enumerate(X[:n_ref]):
         ref.insert(x, i)
     tot = 0
-    for q in Q[:16]:
+    for q in X[:16]:
         ref.reset_counters()
-        ref.knn_query(q, 10)
+        ref.knn_query(q, K)
         tot += ref.ios
-    report("ref_knn10_mean_page_hits_quarter_tree", round(tot / 16, 1))
+    report("ref_knn10_mean_page_hits", round(tot / 16, 1))
 
     # insert/delete fast-path hit rates (amortised split/merge frequency)
-    extra = make_dataset("uniform", 1000, seed=9)[:, :10].copy()
+    eng = SMTreeEngine.build(X, capacity=32)
+    n_base = len(X)
+    extra = make_dataset("uniform", 200 if SMOKE else 1000, seed=9)[:, :10].copy()
+    from repro.core.smtree import delete_fast, insert_fast
     n_split = 0
     t0 = time.time()
-    from repro.core.smtree import insert_fast
     tree = eng.tree
     for i, x in enumerate(extra):
-        new_tree, fits, _ = insert_fast(tree, jnp.asarray(x), jnp.int32(N + i))
+        new_tree, fits, _ = insert_fast(tree, jnp.asarray(x),
+                                        jnp.int32(n_base + i))
         if bool(fits):
             tree = new_tree
         else:
             n_split += 1
             eng.tree = tree
-            eng.insert(x, N + i)
+            eng.insert(x, n_base + i)
             tree = eng.tree
     eng.tree = tree
     report("insert_fastpath_rate", round(1 - n_split / len(extra), 3))
-    report("insert_us_per_op", round((time.time() - t0) / len(extra) * 1e6, 0))
+    report("insert_us_per_op",
+           round((time.time() - t0) / len(extra) * 1e6, 0))
 
+    n_del = len(extra) // 2
     n_under = 0
     t0 = time.time()
-    from repro.core.smtree import delete_fast
-    for i, x in enumerate(extra[:500]):
+    for i, x in enumerate(extra[:n_del]):
         new_tree, found, underflow, _ = delete_fast(
-            eng.tree, jnp.asarray(x), jnp.int32(N + i))
+            eng.tree, jnp.asarray(x), jnp.int32(n_base + i))
         assert bool(found)
         if bool(underflow):
             n_under += 1
-            eng.delete(x, N + i)
+            eng.delete(x, n_base + i)
         else:
             eng.tree = new_tree
-    report("delete_fastpath_rate", round(1 - n_under / 500, 3))
-    report("delete_us_per_op", round((time.time() - t0) / 500 * 1e6, 0))
+    report("delete_fastpath_rate", round(1 - n_under / n_del, 3))
+    report("delete_us_per_op", round((time.time() - t0) / n_del * 1e6, 0))
+
+    _serve_case(report)

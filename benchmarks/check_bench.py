@@ -1,0 +1,63 @@
+"""Validate a BENCH_<tag>.json artifact (CI bench-smoke gate).
+
+Fails (exit 1) when the file is missing/unreadable, a ``--require``'d suite
+is absent or empty, or any recorded value is missing/NaN/inf — so the perf
+plumbing cannot silently rot into a benchmark that "runs" but records
+nothing.
+
+    python benchmarks/check_bench.py benchmarks/BENCH_ci.json \
+        --require bench_engine [--require-row bench_engine:serve_single_ms_per_step]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def check(path: str, require: list[str], require_rows: list[str]) -> list[str]:
+    problems: list[str] = []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        return [f"cannot read {path}: {e}"]
+    except json.JSONDecodeError as e:
+        return [f"invalid JSON in {path}: {e}"]
+
+    suites = data.get("suites", {})
+    for s in require:
+        if s not in suites or not suites[s]:
+            problems.append(f"required suite {s!r} missing or empty")
+    for spec in require_rows:
+        s, _, row = spec.partition(":")
+        if row not in suites.get(s, {}):
+            problems.append(f"required row {spec!r} missing")
+    for s, rows in suites.items():
+        for name, v in rows.items():
+            if v is None:
+                problems.append(f"{s}:{name} is null")
+            elif isinstance(v, float) and not math.isfinite(v):
+                problems.append(f"{s}:{name} is {v}")
+    return problems
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path")
+    ap.add_argument("--require", action="append", default=[],
+                    help="suite that must be present and non-empty")
+    ap.add_argument("--require-row", action="append", default=[],
+                    help="suite:row that must be present")
+    args = ap.parse_args(argv)
+    problems = check(args.path, args.require, args.require_row)
+    if problems:
+        for p in problems:
+            print(f"BENCH CHECK FAIL: {p}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"bench artifact ok: {args.path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,16 @@
 """Benchmark orchestrator: one module per paper table/figure + engine,
-kernel and roofline benches.  Prints ``name,value`` CSV lines (plus readable
-tables at the end).  REPRO_BENCH_FULL=1 restores full paper scale."""
+kernel and roofline benches.  Prints ``name,value`` CSV lines and, with
+``--tag``, writes a machine-readable ``benchmarks/BENCH_<tag>.json``
+artifact (suite -> name -> value plus host/backend metadata) — the bench
+trajectory the repo tracks across PRs.  REPRO_BENCH_FULL=1 restores full
+paper scale; REPRO_BENCH_SMOKE=1 is the tiny CI preset."""
 from __future__ import annotations
 
+import argparse
 import importlib
+import json
 import os
+import platform
 import sys
 import time
 
@@ -24,14 +30,44 @@ _SUITES = [
 ]
 
 
-def main() -> None:
-    results: list[tuple[str, object]] = []
+def _meta() -> dict:
+    meta = {
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "env": {k: v for k, v in os.environ.items()
+                if k.startswith("REPRO_")},
+    }
+    try:
+        import jax
+        meta["jax"] = jax.__version__
+        meta["backend"] = jax.default_backend()
+        meta["device_count"] = jax.device_count()
+    except Exception as e:  # noqa: BLE001 — metadata only
+        meta["jax"] = f"unavailable ({e})"
+    return meta
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("suite", nargs="?", default=None,
+                    help="run a single suite (default: all importable)")
+    ap.add_argument("--tag", default=None,
+                    help="write benchmarks/BENCH_<tag>.json")
+    args = ap.parse_args(argv)
+
+    results: dict[str, dict[str, object]] = {}
+    current = {"suite": None}
+    n_rows = 0
 
     def report(name, value):
-        results.append((name, value))
+        nonlocal n_rows
+        results.setdefault(current["suite"], {})[name] = value
+        n_rows += 1
         print(f"{name},{value}", flush=True)
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = args.suite
     suites = []
     for name, mod_name in _SUITES:
         try:
@@ -51,9 +87,29 @@ def main() -> None:
             continue
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
+        current["suite"] = name
         fn(report)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
-    print(f"# total rows: {len(results)}")
+    print(f"# total rows: {n_rows}")
+
+    if args.tag:
+        def _jsonable(v):
+            # bare NaN/inf tokens are not valid JSON; null keeps the
+            # artifact strict and still trips check_bench.py
+            if isinstance(v, float) and (v != v or v in (float("inf"),
+                                                         float("-inf"))):
+                return None
+            return v
+
+        clean = {s: {k: _jsonable(v) for k, v in rows.items()}
+                 for s, rows in results.items()}
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            f"BENCH_{args.tag}.json")
+        with open(path, "w") as f:
+            json.dump({"meta": _meta(), "suites": clean}, f, indent=2,
+                      sort_keys=True, allow_nan=False)
+            f.write("\n")
+        print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

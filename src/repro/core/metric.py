@@ -9,8 +9,17 @@ truncating the metric (NOT the stored vectors) to the first ``n_dims``
 components.  We mirror that: every metric takes an optional ``n_dims``.
 
 All functions here are pure and work on numpy or jax arrays (they only use
-ufuncs + reductions), so the same definitions back the numpy reference
-implementation, the JAX engine, and the Pallas kernel oracle.
+ufuncs, slicing and elementwise ops), so the same definitions back the numpy
+reference implementation, the JAX engine's cohort descent, and the fused
+Pallas frontier kernel (three call sites, one definition — they cannot
+drift).
+
+Summing reductions go through ``_sum_last``, a fixed-association pairwise
+tree fold: the reduction tree depends only on the axis length, never on the
+leading shape or backend, so l1/l2 distances are *bitwise identical* whether
+evaluated on a ``[cap, dim]`` Pallas block, a ``[b, F, cap, dim]`` XLA
+gather, or a numpy array.  The engine's xla-vs-pallas parity guarantee
+(tests/test_cohort_descent.py) rests on this.
 """
 from __future__ import annotations
 
@@ -45,6 +54,62 @@ def _truncate(x, y, n_dims):
     return x, y
 
 
+def _sum_last(x):
+    """Sum over the last axis with a fixed pairwise-tree association.
+
+    Floating-point addition is not associative, and XLA's reduce grouping
+    varies with the operand's leading shape — the same row summed inside a
+    ``[cap, dim]`` kernel block and a ``[b, F, cap, dim]`` gather can differ
+    in the last ulp.  This fold's association is a function of ``dim`` alone
+    (halve, add, carry the odd tail), so every call site produces bitwise
+    identical sums.  Works on numpy and jax arrays (slicing + ``+`` only).
+    """
+    n = x.shape[-1]
+    if n == 0:
+        return x.sum(axis=-1)   # empty sum: zeros, association irrelevant
+    if n == 1:
+        return x[..., 0]
+    h = n // 2
+    s = _sum_last(x[..., :h] + x[..., h:2 * h])
+    if n % 2:
+        s = s + x[..., -1]
+    return s
+
+
+_JAX_BARRIER = None
+
+
+def _jax_barrier():
+    """Lazily built vmap-compatible optimization barrier (jax's own
+    primitive has no batching rule; batching is shape-preserving here, so a
+    pass-through custom_vmap is sound)."""
+    global _JAX_BARRIER
+    if _JAX_BARRIER is None:
+        import jax
+
+        @jax.custom_batching.custom_vmap
+        def barrier(x):
+            return jax.lax.optimization_barrier(x)
+
+        @barrier.def_vmap
+        def _barrier_vmap(axis_size, in_batched, x):
+            return barrier(x), in_batched[0]
+
+        _JAX_BARRIER = barrier
+    return _JAX_BARRIER
+
+
+def _pin_rounding(x):
+    """Keep XLA:CPU from contracting the squares into the fold's adds as
+    FMAs — contraction is fusion-context-dependent, so without this barrier
+    the same l2 distance can differ by an ulp between e.g. a Pallas
+    interpret-mode kernel and a plain gather (breaking bitwise parity).
+    No-op on numpy."""
+    if isinstance(x, np.ndarray):
+        return x
+    return _jax_barrier()(x)
+
+
 @register_metric("d_inf")
 def d_inf(x, y, n_dims: int | None = None):
     """Chebyshev metric; broadcasting pairwise over leading axes."""
@@ -56,13 +121,20 @@ def d_inf(x, y, n_dims: int | None = None):
 def l2(x, y, n_dims: int | None = None):
     x, y = _truncate(x, y, n_dims)
     d = x - y
-    return np.sqrt((d * d).sum(axis=-1)) if isinstance(d, np.ndarray) else ((d * d).sum(axis=-1)) ** 0.5
+    s = _sum_last(_pin_rounding(d * d))
+    if isinstance(s, np.ndarray):
+        return np.sqrt(s)
+    # true sqrt, not s ** 0.5: pow goes through libm whose rounding varies
+    # with vectorisation context (another cross-shape parity breaker); IEEE
+    # sqrt is correctly rounded everywhere
+    import jax.numpy as jnp
+    return jnp.sqrt(s)
 
 
 @register_metric("l1")
 def l1(x, y, n_dims: int | None = None):
     x, y = _truncate(x, y, n_dims)
-    return abs(x - y).sum(axis=-1)
+    return _sum_last(abs(x - y))
 
 
 def pairwise(metric: str | MetricFn, X, Y, n_dims: int | None = None):

@@ -3,10 +3,19 @@
 The paper's pointer-machine structure is re-expressed as a fixed-capacity
 structure-of-arrays (one row per node / one lane per entry) so traversal is
 frontier-at-a-time: every level of the descent scores *all entries of all
-frontier nodes* in one batched metric evaluation (VPU/MXU work via the Pallas
-distance kernel on TPU, the identical jnp math elsewhere), prunes with the
-triangle inequality, and compacts the surviving children into the next
-frontier with a fixed-size top-F selection.
+frontier nodes* of *all queries in the cohort* in one batched metric
+evaluation, prunes with the triangle inequality, and compacts the surviving
+children into the next frontier with a fixed-size top-F selection.
+
+On TPU the per-level scoring runs through the fused Pallas frontier kernel
+(kernels/frontier.py): frontier node ids are scalar-prefetched, node pages
+stream HBM→VMEM double-buffered, and distances + d_max bounds + prune scores
+are emitted in one VMEM-resident pass.  ``REPRO_FRONTIER_IMPL=xla`` is the
+escape hatch forcing the plain-XLA gather path (bitwise identical results —
+the shared fixed-association metric in core/metric.py guarantees it);
+``=perquery`` selects the legacy vmap(per-query) engine kept as a benchmark
+baseline.  On non-TPU backends the default is the XLA path, and
+``=pallas`` runs the kernel through the Pallas interpreter (CI parity).
 
 Roles (mirrors production vector-store engines):
   * data plane  — ``knn``, ``range_search``, ``insert`` fast path, ``delete``
@@ -28,9 +37,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.metric import get_metric
 
 MAX_HEIGHT = 16          # supports capacity^15 objects; plenty
 _INF = jnp.inf
@@ -99,12 +112,16 @@ def empty_tree(*, dim: int, capacity: int = 32, max_nodes: int = 1024,
 
 
 def _metric_eval(metric: str, q, e):
-    """q: [..., d]; e: [..., d] broadcast; returns distances [...]."""
-    if metric == "d_inf":
-        return jnp.max(jnp.abs(q - e), axis=-1)
-    if metric == "l2":
-        return jnp.sqrt(jnp.sum((q - e) ** 2, axis=-1))
-    raise ValueError(metric)
+    """q: [..., d]; e: [..., d] broadcast; returns distances [...].
+
+    Thin shim over the core/metric.py registry — the single metric
+    definition shared with the numpy reference implementation and the fused
+    Pallas frontier kernel, so the three call sites cannot drift."""
+    try:
+        fn = get_metric(metric)
+    except KeyError:
+        raise ValueError(metric) from None
+    return fn(q, e)
 
 
 # --------------------------------------------------------------------------
@@ -123,16 +140,20 @@ def bulk_build(X: np.ndarray, ids: np.ndarray | None = None, *,
     n, dim = X.shape
     ids = np.arange(n, dtype=np.int64) if ids is None else np.asarray(ids)
     target = max(2, int(capacity * fill_frac))
+    min_fill = max(1, math.ceil(min_fill_frac * capacity))
     rng = np.random.default_rng(seed)
 
     def group(indices: np.ndarray, tgt: int, pts: np.ndarray) -> list[np.ndarray]:
-        """Partition `indices` into ceil(n/tgt) groups of near-equal size via
-        recursive 2-pivot bisection.  Sizes land in [floor(n/parts),
-        ceil(n/parts)] — close to tgt, never near the min-fill floor (naive
-        halving would produce power-of-two sizes ~tgt/2 and leave freshly
-        built leaves one delete away from underflow)."""
+        """Partition `indices` into groups of near-equal size via recursive
+        2-pivot bisection.  Sizes land in [floor(n/parts), ceil(n/parts)];
+        parts is capped at n // min_fill so every group meets the min-fill
+        floor (a group below it would violate the non-root invariant the
+        engine's validate() and the cohort descent's d_max bound rely on —
+        e.g. n=23 at capacity 32 must stay one node, not split 11/12).
+        The cap can only force parts to 1 when n < 2*min_fill <= capacity,
+        so single groups always fit a node."""
         n_idx = len(indices)
-        parts = -(-n_idx // tgt)
+        parts = min(-(-n_idx // tgt), n_idx // min_fill)
         if parts <= 1:
             return [indices]
         P = pts[indices]
@@ -246,26 +267,57 @@ class QueryResult:
     overflow: jax.Array  # [b] bool — frontier truncated (result approximate)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_frontier"))
+_IMPLS = ("pallas", "xla", "perquery")
+
+
+def _resolve_impl(impl: str | None) -> str:
+    """Resolve the frontier-scoring implementation.
+
+    None → the ``REPRO_FRONTIER_IMPL`` env var (default 'auto': the fused
+    Pallas kernel on TPU, the XLA gather path elsewhere).  On non-TPU
+    backends 'pallas' means the interpret-mode kernel — identical code,
+    exercised by CPU CI."""
+    if impl is None:
+        impl = os.environ.get("REPRO_FRONTIER_IMPL", "auto")
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in _IMPLS:
+        raise ValueError(
+            f"impl must be one of {_IMPLS} or 'auto'; got {impl!r}")
+    return impl
+
+
 def knn(tree: TreeArrays, queries: jax.Array, *, k: int = 1,
-        max_frontier: int = 64) -> QueryResult:
-    """Batched k-NN: level-synchronous descent with dynamic search radius.
+        max_frontier: int = 64, impl: str | None = None) -> QueryResult:
+    """Batched k-NN: level-synchronous cohort descent with dynamic radius.
 
     queries: [b, dim].  Exact when ``overflow`` is False (frontier never
-    truncated); otherwise best-effort (closest-first truncation).
+    truncated); otherwise best-effort (closest-first truncation).  ``impl``
+    overrides the frontier-scoring backend (see ``_resolve_impl``).
     """
-    return _knn_impl(tree, queries, k, max_frontier, jnp.float32(_INF))
+    queries = jnp.asarray(queries, jnp.float32)
+    return _query(tree, queries, k, max_frontier, jnp.float32(_INF),
+                  _resolve_impl(impl))
 
 
-@functools.partial(jax.jit, static_argnames=("max_results", "max_frontier"))
 def range_search(tree: TreeArrays, queries: jax.Array, radius: jax.Array, *,
-                 max_results: int = 128, max_frontier: int = 64) -> QueryResult:
+                 max_results: int = 128, max_frontier: int = 64,
+                 impl: str | None = None) -> QueryResult:
     """Batched range query: all objects within ``radius`` (per-query scalar or
-    broadcast).  Returns the closest ``max_results`` matches (overflow flag
-    set if more matched)."""
+    broadcast).  Returns the closest ``max_results`` matches.  The overflow
+    flag is conservative: it is set whenever ``max_results`` rows are
+    returned — at *exactly* ``max_results`` matches the engine cannot know no
+    further object matched, so the flag reads "results may be truncated"."""
+    queries = jnp.asarray(queries, jnp.float32)
     radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32),
                               (queries.shape[0],))
-    res = _knn_impl(tree, queries, max_results, max_frontier, radius)
+    res = _query(tree, queries, max_results, max_frontier, radius,
+                 _resolve_impl(impl))
+    return _range_filter(res, radius, max_results)
+
+
+@functools.partial(jax.jit, static_argnames=("max_results",))
+def _range_filter(res: QueryResult, radius, max_results: int) -> QueryResult:
     keep = res.dists <= radius[:, None]
     return QueryResult(jnp.where(keep, res.dists, _INF),
                        jnp.where(keep, res.ids, -1),
@@ -273,10 +325,143 @@ def range_search(tree: TreeArrays, queries: jax.Array, radius: jax.Array, *,
                        res.overflow | (jnp.sum(keep, 1) == max_results))
 
 
-def _knn_impl(tree: TreeArrays, queries: jax.Array, k: int, F: int,
-              r_cap) -> QueryResult:
-    """Shared engine: kNN with dynamic radius additionally capped at r_cap
-    (inf for pure kNN; the query radius for range search)."""
+def _query(tree: TreeArrays, queries: jax.Array, k: int, F: int, r_cap,
+           impl: str) -> QueryResult:
+    """Dispatch: the cohort engine unrolls the descent over the concrete tree
+    height (leaves are all at one depth, so each level is statically either
+    internal or leaf).  In traced contexts (e.g. the sharded forest's
+    shard_map, where ``height`` is abstract) fall back to the per-query
+    engine, which carries dynamic control flow."""
+    if impl == "perquery":
+        return _knn_perquery(tree, queries, k, F, r_cap)
+    try:
+        height = int(tree.height)
+    except jax.errors.ConcretizationTypeError:
+        return _knn_perquery(tree, queries, k, F, r_cap)
+    interpret = jax.default_backend() != "tpu"
+    return _knn_cohort(tree, queries, r_cap, k=k, F=F, height=height,
+                       impl=impl, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "F", "height", "impl", "interpret"))
+def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
+                F: int, height: int, impl: str,
+                interpret: bool) -> QueryResult:
+    """Level-synchronous query-cohort descent (the fast path).
+
+    All ``b`` queries advance one level per step, sharing one fused frontier
+    scoring (Pallas kernel or XLA gather) and one batched top-k compaction
+    per level.  The loop is unrolled over the static tree height with
+    per-level frontier widths ``w(0)=1, w(l+1)=min(F, w(l)*cap)`` — early
+    levels touch only the pages that exist, and because every leaf sits at
+    the same depth (balance invariant), each level is statically a pure
+    internal level (bound + prune + compact) or the leaf level (candidate
+    merge); the other phase's work is not emitted at all.
+
+    Exactness argument under batched truncation: the d_max bound ``ub`` is
+    the j-th smallest d + r seen so far (+_EPS, j = ceil(k / min_fill^rem),
+    usually 1) — r covers the entry's whole disjoint subtree of >=
+    min_fill^rem objects, so ub is a true upper bound on the kth-NN distance
+    for *this* query regardless of which frontier slots other queries keep.
+    Truncation to w_out slots
+    keeps the w_out smallest d - r; a dropped subtree can only matter if its
+    d - r exceeds every kept one AND ≤ r_q — exactly the case the per-query
+    ``overflow`` flag reports (DESIGN.md §8).
+    """
+    b = queries.shape[0]
+    cap = tree.capacity
+    r_cap = jnp.broadcast_to(jnp.asarray(r_cap, jnp.float32), (b,))
+
+    widths = [1]
+    for _ in range(height - 1):
+        widths.append(min(F, widths[-1] * cap))
+
+    internal_valid = tree.valid & ~tree.is_leaf[:, None]
+    leaf_valid = tree.valid & tree.is_leaf[:, None]
+
+    frontier = jnp.full((b, 1), tree.root, jnp.int32)
+    topk_d = jnp.full((b, k), _INF, jnp.float32)
+    topk_i = jnp.full((b, k), -1, jnp.int32)
+    ub = jnp.full((b,), _INF, jnp.float32)
+    page_hits = jnp.zeros((b,), jnp.int32)
+    dist_evals = jnp.zeros((b,), jnp.int32)
+    overflow = jnp.zeros((b,), bool)
+
+    for lvl in range(height):
+        w = widths[lvl]
+        fvalid = frontier >= 0                              # [b, w]
+        nodes = jnp.maximum(frontier, 0)
+        evalid = tree.valid[nodes] & fvalid[:, :, None]     # [b, w, cap]
+        page_hits += jnp.sum(fvalid, axis=1, dtype=jnp.int32)
+        dist_evals += jnp.sum(evalid, axis=(1, 2), dtype=jnp.int32)
+
+        if impl == "pallas":
+            from repro.kernels.frontier import frontier_scores_pallas
+            dmax, score, leaf_d = frontier_scores_pallas(
+                frontier, queries, tree.vecs, tree.radius, internal_valid,
+                leaf_valid, metric=tree.metric, interpret=interpret)
+        else:
+            from repro.kernels.frontier import frontier_scores_xla
+            dmax, score, leaf_d = frontier_scores_xla(
+                frontier, queries, tree.vecs, tree.radius, internal_valid,
+                leaf_valid, metric=tree.metric)
+
+        if lvl < height - 1:
+            # --- internal level: d_max bound, prune, compact the frontier
+            # r covers the *whole* subtree, and every non-root node holds at
+            # least min_fill entries, so an entry at this level covers >=
+            # min_fill^rem objects — the j-th smallest d + r with
+            # j = ceil(k / min_fill^rem) already bounds the kth-NN distance.
+            # Usually j == 1: a plain min, no top_k (tighter than the
+            # per-query engine's kth-smallest bound, and ~free).
+            dmax = dmax.reshape(b, w * cap)
+            rem = height - 1 - lvl
+            cover = max(1, tree.min_fill) ** rem
+            j = -(-k // cover)
+            if j == 1:
+                ub = jnp.minimum(ub, jnp.min(dmax, axis=1) + _EPS)
+            elif j <= w * cap:
+                jth_dmax = -jax.lax.top_k(-dmax, j)[0][:, j - 1] + _EPS
+                ub = jnp.minimum(ub, jth_dmax)
+            # (fewer than j subtree bounds visible: no update possible)
+            r_q = jnp.minimum(jnp.minimum(topk_d[:, k - 1], r_cap), ub)
+            score = score.reshape(b, w * cap)
+            # score is +inf at masked entries; the explicit < _INF term keeps
+            # them out of imask when r_q itself is still infinite
+            imask = (score <= r_q[:, None] + _EPS) & (score < _INF)
+            sc = jnp.where(imask, score, _INF)
+            childs = tree.child[nodes].reshape(b, w * cap)
+            w_out = widths[lvl + 1]
+            neg_s, order = jax.lax.top_k(-sc, w_out)
+            sel_ok = -neg_s < _INF
+            frontier = jnp.where(
+                sel_ok, jnp.take_along_axis(childs, order, axis=1), -1)
+            overflow |= jnp.sum(imask, axis=1) > w_out
+        else:
+            # --- leaf level: merge candidates into the running top-k
+            r_q = jnp.minimum(jnp.minimum(topk_d[:, k - 1], r_cap), ub)
+            leaf_d = leaf_d.reshape(b, w * cap)
+            cd = jnp.where(leaf_d <= r_q[:, None], leaf_d, _INF)
+            eoid = tree.oid[nodes].reshape(b, w * cap)
+            ci = jnp.where(cd < _INF, eoid, -1)
+            all_d = jnp.concatenate([topk_d, cd], axis=1)
+            all_i = jnp.concatenate([topk_i, ci], axis=1)
+            neg, sel = jax.lax.top_k(-all_d, k)
+            topk_d = -neg
+            topk_i = jnp.take_along_axis(all_i, sel, axis=1)
+
+    return QueryResult(topk_d, topk_i, page_hits, dist_evals, overflow)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "F"))
+def _knn_perquery(tree: TreeArrays, queries: jax.Array, k: int, F: int,
+                  r_cap) -> QueryResult:
+    """Legacy vmap(per-query) engine: dynamic while_loop descent.
+
+    Kept as (a) the fallback for traced-height contexts (sharded forest)
+    and (b) the benchmark baseline the cohort path is measured against
+    (benchmarks/bench_engine.py)."""
     b = queries.shape[0]
     cap = tree.capacity
     r_cap = jnp.broadcast_to(jnp.asarray(r_cap, jnp.float32), (b,))

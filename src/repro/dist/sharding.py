@@ -346,6 +346,15 @@ def logits_pspec(mesh) -> P:
     return P(batch_dp(mesh), None, "model")
 
 
+def query_pspecs(mesh, batch_size: int) -> P:
+    """SM-tree query-cohort sharding: [b, dim] batches split over the dp
+    axes (divisibility-guarded), tree pages replicated.  The cohort descent
+    (core/smtree.py) is batched over b in every op, so GSPMD runs each
+    query shard's descent locally with zero collectives — the serving fast
+    path for the kNN-LM datastore and ``launch/serve.py --mesh host``."""
+    return P(_dp_entry(mesh, batch_size), None)
+
+
 # ---------------------------------------------------------------------------
 # activation constraints (used inside model code)
 # ---------------------------------------------------------------------------

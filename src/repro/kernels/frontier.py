@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: fused frontier scoring for the SM-tree cohort descent.
+
+Every level of the level-synchronous kNN descent must evaluate the metric
+between each query of the cohort and every entry of every node on that
+query's frontier, then derive three per-entry quantities (DESIGN.md §8):
+
+  * ``dmax``   = d + r          for valid internal entries (the d_max bound:
+                                 each subtree holds an object within d + r)
+  * ``score``  = d - r          for valid internal entries (the triangle-
+                                 inequality prune test / closest-first key)
+  * ``leaf_d`` = d              for valid leaf entries (exact candidates)
+
+XLA expresses this as a ``[b, F, cap, dim]`` gather followed by the metric
+reduction — one full materialisation of every touched node page *per query*
+in HBM.  This kernel instead keys the pipeline on the frontier itself: the
+``[b, F]`` node-id table is a *scalar-prefetch* operand
+(``pltpu.PrefetchScalarGridSpec``), so the BlockSpec index maps read the ids
+before the body runs and the Pallas pipeline streams exactly the referenced
+node pages (``vecs``/``radius``/validity rows) HBM→VMEM, double-buffered
+across grid steps.  Distances and all three outputs are computed in one
+VMEM-resident pass; nothing of size ``[b, F, cap, dim]`` ever exists.
+
+Grid: ``(b, F)`` — one step per (query, frontier-slot) pair.  Invalid slots
+(node id < 0, the frontier padding) emit +inf rows; the metric itself is the
+shared definition in ``core/metric.py`` whose fixed-association tree-fold
+makes the kernel bitwise identical to the XLA path (``frontier_scores_xla``)
+— asserted by tests/test_frontier_kernel.py in interpret mode, which runs
+this exact kernel code on CPU CI.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.metric import get_metric
+
+# python literal (not a jnp scalar): kernels may not capture traced consts
+_INF = float("inf")
+
+
+def _frontier_kernel(fids_ref, q_ref, vecs_ref, rad_ref, ival_ref, lval_ref,
+                     dmax_ref, score_ref, leafd_ref, *, metric: str):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    ok = fids_ref[i, j] >= 0
+    q = q_ref[0, :]                      # [dim]
+    e = vecs_ref[0, :, :]                # [cap, dim] — the streamed node page
+    d = get_metric(metric)(q[None, :], e)            # [cap]
+    r = rad_ref[0, :]
+    iv = (ival_ref[0, :] != 0) & ok
+    lv = (lval_ref[0, :] != 0) & ok
+    dmax_ref[0, 0, :] = jnp.where(iv, d + r, _INF)
+    score_ref[0, 0, :] = jnp.where(iv, d - r, _INF)
+    leafd_ref[0, 0, :] = jnp.where(lv, d, _INF)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def frontier_scores_pallas(fids, queries, vecs, radius, internal_valid,
+                           leaf_valid, *, metric: str, interpret: bool = False):
+    """Fused frontier scoring.
+
+    fids           [b, F] i32  — frontier node ids (-1 = empty slot)
+    queries        [b, dim] f32
+    vecs           [N, cap, dim] f32 — node pages (entry reference values)
+    radius         [N, cap] f32      — entry covering radii
+    internal_valid [N, cap] — nonzero where a valid internal entry
+    leaf_valid     [N, cap] — nonzero where a valid leaf entry
+
+    Returns (dmax, score, leaf_d), each [b, F, cap] f32 with +inf at masked
+    positions.  ``interpret=True`` runs the identical kernel through the
+    Pallas interpreter (the CPU CI path).
+    """
+    b, w = fids.shape
+    _, cap, dim = vecs.shape
+    internal_valid = internal_valid.astype(jnp.int8)
+    leaf_valid = leaf_valid.astype(jnp.int8)
+
+    def node_row(ndim_tail):
+        # block index for a [N, ...] page row selected by the prefetched id;
+        # empty slots clamp to row 0 and are masked in the kernel body
+        return lambda i, j, fids: (jnp.maximum(fids[i, j], 0),) + (0,) * ndim_tail
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, w),
+        in_specs=[
+            pl.BlockSpec((1, dim), lambda i, j, fids: (i, 0)),
+            pl.BlockSpec((1, cap, dim), node_row(2)),
+            pl.BlockSpec((1, cap), node_row(1)),
+            pl.BlockSpec((1, cap), node_row(1)),
+            pl.BlockSpec((1, cap), node_row(1)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, cap), lambda i, j, fids: (i, j, 0)),
+            pl.BlockSpec((1, 1, cap), lambda i, j, fids: (i, j, 0)),
+            pl.BlockSpec((1, 1, cap), lambda i, j, fids: (i, j, 0)),
+        ],
+    )
+    out_shape = [jax.ShapeDtypeStruct((b, w, cap), jnp.float32)] * 3
+    return pl.pallas_call(
+        functools.partial(_frontier_kernel, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(fids, queries, vecs, radius, internal_valid, leaf_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def frontier_scores_xla(fids, queries, vecs, radius, internal_valid,
+                        leaf_valid, *, metric: str):
+    """Reference/escape-hatch implementation: the gather the kernel avoids.
+
+    Materialises the [b, F, cap, dim] entry gather and reduces with the same
+    shared metric definition — bitwise identical outputs to the kernel: the
+    tree-fold + rounding pins in core/metric.py fix the value up to op
+    rounding, and jitting keeps both paths whole-program-compiled (eager
+    per-op execution rounds sqrt/fusions differently on CPU)."""
+    nodes = jnp.maximum(fids, 0)
+    ok = (fids >= 0)[:, :, None]
+    d = get_metric(metric)(queries[:, None, None, :], vecs[nodes])
+    r = radius[nodes]
+    iv = (internal_valid[nodes] != 0) & ok
+    lv = (leaf_valid[nodes] != 0) & ok
+    return (jnp.where(iv, d + r, _INF),
+            jnp.where(iv, d - r, _INF),
+            jnp.where(lv, d, _INF))

@@ -23,12 +23,28 @@ from repro.data.pipeline import DataConfig, synth_batch
 from repro.models import model as M
 
 
+def _build_store(args, cfg, mesh=None):
+    """Synthetic kNN-LM datastore (keys near the embedding scale); with a
+    mesh the tree pages replicate and query cohorts shard over 'data'."""
+    from repro.serve.knnlm import KnnLmConfig, KnnLmDatastore
+    rng = np.random.default_rng(0)
+    keys = rng.standard_normal((2048, cfg.d_model)).astype(np.float32)
+    vals = rng.integers(0, cfg.vocab_size, 2048).astype(np.int32)
+    store = KnnLmDatastore(KnnLmConfig(lam=args.lam, metric="l2"),
+                           cfg.d_model, mesh=mesh)
+    store.build(keys, vals)
+    return store
+
+
 def serve_sharded(args, cfg):
     """GSPMD-sharded greedy decode on a {data, model} mesh over all host
-    devices, using the exact serve_step builders the dry-run lowers."""
+    devices, using the exact serve_step builders the dry-run lowers.  With
+    ``--knn`` the SM-tree datastore rides along: the query cohort shards
+    over 'data' (dist.sharding.query_pspecs) and retrieval runs the fused
+    frontier fast path against replicated tree pages."""
     from repro.configs.base import ShapeSpec
     from repro.dist import sharding as shd
-    from repro.serve.serve_step import make_decode_step
+    from repro.serve.serve_step import make_decode_step, make_knnlm_mixer
 
     n_dev = len(jax.devices())
     nm = 2 if n_dev % 2 == 0 else 1
@@ -51,6 +67,11 @@ def serve_sharded(args, cfg):
                                 sh["params"])
         cache = jax.device_put(M.init_cache(cfg, args.batch, total),
                                sh["cache"])
+        mix_fn = None
+        if args.knn:
+            store = _build_store(args, cfg, mesh=mesh)
+            mix_fn, _ = make_knnlm_mixer(cfg, mesh, shape, store,
+                                         lam=args.lam)
         t0 = time.time()
         for pos in range(args.prompt_len):
             tok, logits, cache = jitted(params, prompt[:, pos], cache,
@@ -59,15 +80,20 @@ def serve_sharded(args, cfg):
         out = [tok]
         t0 = time.time()
         for step in range(args.steps):
-            tok, logits, cache = jitted(params, tok, cache,
+            fed = tok   # the step's input token (matches single-device path)
+            tok, logits, cache = jitted(params, fed, cache,
                                         jnp.int32(args.prompt_len + step))
+            if mix_fn is not None:
+                h = params["embed"][fed].astype(jnp.float32)
+                tok = jnp.argmax(mix_fn(logits, h), -1).astype(jnp.int32)
             out.append(tok)
         jax.block_until_ready(tok)
         decode_s = time.time() - t0
     toks = np.stack([np.asarray(t) for t in out], axis=1)
     print(f"[serve] mesh {dict(mesh.shape)} batch {args.batch}: "
           f"prefill {prefill_s:.2f}s, decode {args.steps} steps in "
-          f"{decode_s:.2f}s ({decode_s / args.steps * 1e3:.1f} ms/step)")
+          f"{decode_s:.2f}s ({decode_s / args.steps * 1e3:.1f} ms/step"
+          f"{', kNN-LM mixed' if mix_fn else ''})")
     print("[serve] sample:", toks[0][:12])
     return toks
 
@@ -90,9 +116,6 @@ def main(argv=None):
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.mesh == "host":
-        if args.knn:
-            ap.error("--knn is not supported with --mesh host yet; "
-                     "run the single-device path for kNN-LM mixing")
         if len(jax.devices()) >= 2:
             return serve_sharded(args, cfg)
         print("[serve] --mesh host requested but only 1 device visible; "
@@ -104,15 +127,7 @@ def main(argv=None):
                     global_batch=args.batch)
     prompt = jnp.asarray(synth_batch(dc, 0, with_labels=False)["tokens"])
 
-    store = None
-    if args.knn:
-        from repro.serve.knnlm import KnnLmConfig, KnnLmDatastore
-        rng = np.random.default_rng(0)
-        keys = rng.standard_normal((2048, cfg.d_model)).astype(np.float32)
-        vals = rng.integers(0, cfg.vocab_size, 2048).astype(np.int32)
-        store = KnnLmDatastore(KnnLmConfig(lam=args.lam, metric="l2"),
-                               cfg.d_model)
-        store.build(keys, vals)
+    store = _build_store(args, cfg) if args.knn else None
 
     cache = M.init_cache(cfg, args.batch, args.prompt_len + args.steps + 1)
     step_fn = jax.jit(M.decode_step, static_argnums=1)
@@ -136,6 +151,7 @@ def main(argv=None):
                 h, logits.shape[-1]), args.lam)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         out.append(tok)
+    jax.block_until_ready(tok)   # async dispatch: sync before timing
     decode_s = time.time() - t0
     toks = np.stack([np.asarray(t) for t in out], axis=1)
     print(f"[serve] batch {args.batch}: prefill {prefill_s:.2f}s, "

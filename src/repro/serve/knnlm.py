@@ -37,14 +37,36 @@ class KnnLmConfig:
 class KnnLmDatastore:
     """Single-host datastore over the JAX SM-tree engine (the sharded-forest
     variant lives in core/distributed.py and examples/distributed_index.py).
-    Keys: hidden states [n, D]; values: next-token ids [n]."""
+    Keys: hidden states [n, D]; values: next-token ids [n].
 
-    def __init__(self, cfg: KnnLmConfig, dim: int):
+    With ``mesh`` set, tree pages are replicated over the mesh and query
+    cohorts are sharded over the data axes (``dist.sharding.query_pspecs``),
+    so the cohort descent runs data-parallel inside the same GSPMD program
+    as the sharded decode step (``launch/serve.py --mesh host --knn``)."""
+
+    def __init__(self, cfg: KnnLmConfig, dim: int, mesh=None):
         self.cfg = cfg
         self.dim = dim
+        self.mesh = mesh
         self.keys = np.zeros((0, dim), np.float32)
         self.values = np.zeros((0,), np.int32)
         self.engine: SMTreeEngine | None = None
+
+    def _place(self):
+        """Replicate tree pages over the mesh (queries shard, pages don't)."""
+        if self.mesh is not None and self.engine is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self.engine.tree = jax.device_put(
+                self.engine.tree, NamedSharding(self.mesh, P()))
+
+    def shard_queries(self, h: jax.Array) -> jax.Array:
+        """Place a [b, D] query cohort according to ``query_pspecs``."""
+        if self.mesh is None:
+            return h
+        from jax.sharding import NamedSharding
+        from repro.dist.sharding import query_pspecs
+        return jax.device_put(
+            h, NamedSharding(self.mesh, query_pspecs(self.mesh, h.shape[0])))
 
     def build(self, keys: np.ndarray, values: np.ndarray):
         self.keys = np.asarray(keys, np.float32)
@@ -52,12 +74,14 @@ class KnnLmDatastore:
         self.engine = SMTreeEngine.build(
             self.keys, ids=np.arange(len(values)),
             capacity=self.cfg.capacity, metric=self.cfg.metric)
+        self._place()
 
     def add(self, key: np.ndarray, value: int):
         oid = len(self.values)
         self.keys = np.vstack([self.keys, key[None]])
         self.values = np.append(self.values, np.int32(value))
         self.engine.insert(key, oid)
+        self._place()   # host-side split paths rebuild arrays off-mesh
 
     def evict(self, oid: int) -> bool:
         """Online deletion — the paper's contribution at work."""
@@ -73,7 +97,7 @@ class KnnLmDatastore:
 
     def knn_logits(self, h: jax.Array, vocab: int) -> jax.Array:
         """h: [b, D] query hidden states -> kNN log-probs [b, vocab]."""
-        res = self.engine.knn(h, k=self.cfg.k,
+        res = self.engine.knn(self.shard_queries(h), k=self.cfg.k,
                               max_frontier=self.cfg.max_frontier)
         d = res.dists                                     # [b, k]
         ids = np.asarray(res.ids)                          # [b, k]

@@ -58,6 +58,31 @@ def make_decode_step(cfg: ArchConfig, mesh, shape: ShapeSpec,
     return decode_fn, shardings
 
 
+def make_knnlm_mixer(cfg: ArchConfig, mesh, shape: ShapeSpec, store,
+                     lam: float | None = None):
+    """Returns (mix_fn, query_sharding) wiring an SM-tree kNN-LM datastore
+    into the sharded decode loop.
+
+    ``mix_fn(logits, h)`` runs the [b, D] hidden-state cohort through the
+    datastore's kNN — the store itself shards queries over the data axes
+    (``KnnLmDatastore.shard_queries`` / ``shd.query_pspecs``, the same
+    sharding the token batch carries) against replicated tree pages — and
+    returns the interpolated logits.  Pairs with ``make_decode_step``; the
+    returned query sharding is for wiring into jit in/out shardings."""
+    from repro.serve.knnlm import mix_logits
+
+    query_sh = NamedSharding(mesh, shd.query_pspecs(mesh, shape.global_batch))
+    store.mesh = mesh          # ensure the store shards its query cohorts
+    store._place()             # ...and replicates tree pages on this mesh
+    lam = store.cfg.lam if lam is None else lam
+
+    def mix_fn(logits, h):
+        knn_logp = store.knn_logits(h.astype(jnp.float32), logits.shape[-1])
+        return mix_logits(logits, knn_logp, lam)
+
+    return mix_fn, query_sh
+
+
 def make_prefill_step(cfg: ArchConfig, mesh, shape: ShapeSpec,
                       settings: ServeSettings = ServeSettings()):
     """Full-sequence forward producing logits (inference, no labels)."""

@@ -1,0 +1,239 @@
+"""Cohort-descent engine: parity across frontier implementations, parity vs
+the paper-faithful reference, and adversarial data (ISSUE 2 satellite).
+
+The bitwise tests here are the PR's acceptance parity suite: knn and
+range_search results must be identical between ``REPRO_FRONTIER_IMPL=xla``
+and ``=pallas`` (interpret mode on CPU), down to stats and tie-broken ids.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import SMTreeEngine
+from repro.core.metric import pairwise
+from repro.data.datagen import clustered, uniform
+
+FIELDS = ("dists", "ids", "page_hits", "dist_evals", "overflow")
+
+
+def assert_results_equal(a, b, msg=""):
+    for f in FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}:{f}")
+
+
+def brute_knn_dists(metric, X, Q, k):
+    return np.sort(pairwise(metric, Q, X), axis=1)[:, :k]
+
+
+# --------------------------------------------------------------------------
+# xla vs pallas bitwise parity (the acceptance suite)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("metric", ["d_inf", "l2"])
+def test_knn_bitwise_xla_vs_pallas(metric):
+    X = clustered(1500, dims=8, seed=3)
+    eng = SMTreeEngine.build(X, capacity=16, metric=metric)
+    Q = uniform(24, dims=8, seed=4)
+    for k, F in ((1, 64), (10, 64), (10, 256)):
+        a = eng.knn(Q, k=k, max_frontier=F, impl="xla")
+        b = eng.knn(Q, k=k, max_frontier=F, impl="pallas")
+        assert_results_equal(a, b, f"knn k={k} F={F} {metric}")
+
+
+@pytest.mark.parametrize("metric", ["d_inf", "l2"])
+def test_range_search_bitwise_xla_vs_pallas(metric):
+    X = clustered(1500, dims=8, seed=5)
+    eng = SMTreeEngine.build(X, capacity=16, metric=metric)
+    Q = X[::100].copy()
+    for r in (0.0, 0.05, 0.5):
+        a = eng.range_search(Q, r, max_results=64, impl="xla")
+        b = eng.range_search(Q, r, max_results=64, impl="pallas")
+        assert_results_equal(a, b, f"range r={r} {metric}")
+
+
+def test_env_toggle_routes_impl(monkeypatch):
+    X = clustered(600, dims=6, seed=6)
+    eng = SMTreeEngine.build(X, capacity=8)
+    Q = uniform(8, dims=6, seed=7)
+    explicit = eng.knn(Q, k=3, impl="pallas")
+    monkeypatch.setenv("REPRO_FRONTIER_IMPL", "pallas")
+    via_env = eng.knn(Q, k=3)
+    assert_results_equal(explicit, via_env, "env routing")
+    monkeypatch.setenv("REPRO_FRONTIER_IMPL", "bogus")
+    with pytest.raises(ValueError):
+        eng.knn(Q, k=3)
+
+
+# --------------------------------------------------------------------------
+# cohort vs legacy per-query engine (results, not stats — the cohort path's
+# min-fill-aware d_max bound prunes tighter, so page_hits legitimately
+# differ; distances and ids may not)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("metric", ["d_inf", "l2"])
+def test_cohort_matches_perquery_results(metric):
+    X = clustered(1200, dims=8, seed=9)
+    eng = SMTreeEngine.build(X, capacity=16, metric=metric)
+    Q = uniform(16, dims=8, seed=10)
+    a = eng.knn(Q, k=8, max_frontier=256, impl="xla")
+    p = eng.knn(Q, k=8, max_frontier=256, impl="perquery")
+    assert not np.asarray(a.overflow).any()
+    assert not np.asarray(p.overflow).any()
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(p.dists))
+    # ids may tie-break differently only between equal distances; verify
+    # every returned id really sits at the reported distance
+    D = pairwise(metric, Q, X)
+    ids = np.asarray(a.ids)
+    dists = np.asarray(a.dists)
+    for qi in range(len(Q)):
+        for j, (i, d) in enumerate(zip(ids[qi], dists[qi])):
+            if i >= 0:
+                np.testing.assert_allclose(D[qi, i], d, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# adversarial data (vs brute force and the paper-faithful reference)
+# --------------------------------------------------------------------------
+def test_duplicate_points():
+    rng = np.random.default_rng(11)
+    base = rng.random((200, 6)).astype(np.float32)
+    X = np.repeat(base, 4, axis=0)          # every point appears 4 times
+    eng = SMTreeEngine.build(X, capacity=8)
+    Q = base[:16] + 0.001
+    for impl in ("xla", "pallas", "perquery"):
+        res = eng.knn(Q, k=8, max_frontier=512, impl=impl)
+        assert not np.asarray(res.overflow).any()
+        np.testing.assert_allclose(np.asarray(res.dists),
+                                   brute_knn_dists("d_inf", X, Q, 8),
+                                   atol=1e-5, err_msg=impl)
+
+
+def test_all_points_equidistant():
+    """One-hot points scaled by c: every pairwise d_inf distance is exactly
+    c, and the origin sees every point at distance c — maximal tie stress
+    for the d_max bound and top-k tie-breaking."""
+    n = dim = 48
+    c = 0.7
+    X = (np.eye(n, dim) * c).astype(np.float32)
+    eng = SMTreeEngine.build(X, capacity=8)
+    Q = np.zeros((1, dim), np.float32)
+    for impl in ("xla", "pallas", "perquery"):
+        res = eng.knn(Q, k=5, max_frontier=512, impl=impl)
+        assert not np.asarray(res.overflow).any()
+        np.testing.assert_allclose(np.asarray(res.dists), np.full((1, 5), c),
+                                   atol=1e-6, err_msg=impl)
+        ids = np.asarray(res.ids)[0]
+        assert len(set(ids.tolist())) == 5 and (ids >= 0).all()
+    # a query at one of the points: itself at 0, the rest at c
+    res = eng.knn(X[:1], k=5, max_frontier=512, impl="xla")
+    d = np.asarray(res.dists)[0]
+    np.testing.assert_allclose(d, [0.0, c, c, c, c], atol=1e-6)
+
+
+def test_k_exceeds_n_objects():
+    X = uniform(10, dims=5, seed=13)
+    eng = SMTreeEngine.build(X, capacity=8)
+    Q = uniform(4, dims=5, seed=14)
+    for impl in ("xla", "pallas", "perquery"):
+        res = eng.knn(Q, k=32, max_frontier=64, impl=impl)
+        d = np.asarray(res.dists)
+        ids = np.asarray(res.ids)
+        np.testing.assert_allclose(d[:, :10], brute_knn_dists("d_inf", X, Q, 10),
+                                   atol=1e-5, err_msg=impl)
+        assert np.isposinf(d[:, 10:]).all()
+        assert (ids[:, 10:] == -1).all()
+        assert (np.sort(ids[:, :10], axis=1) == np.arange(10)).all()
+
+
+def test_parity_vs_ref_impl_on_clustered_and_duplicates():
+    """Engine (all impls) returns the same kNN distances as the
+    paper-faithful reference on clustered data salted with duplicates."""
+    from repro.core.ref_impl import SMTree
+    X = clustered(900, dims=10, seed=15)
+    X = np.vstack([X, X[:60]])               # salt with duplicates
+    eng = SMTreeEngine.build(X, capacity=16)
+    ref = SMTree(dim=10, capacity=16, n_dims=10)
+    for i, x in enumerate(X):
+        ref.insert(x, i)
+    Q = uniform(8, dims=10, seed=16)
+    for impl in ("xla", "pallas", "perquery"):
+        res = eng.knn(Q, k=10, max_frontier=512, impl=impl)
+        assert not np.asarray(res.overflow).any()
+        for qi, q in enumerate(Q):
+            want = np.array([d for d, _ in ref.knn_query(q, 10)])
+            np.testing.assert_allclose(np.asarray(res.dists)[qi], want,
+                                       atol=1e-5, err_msg=impl)
+
+
+# --------------------------------------------------------------------------
+# range_search overflow-flag semantics at exactly max_results
+# --------------------------------------------------------------------------
+def test_range_overflow_flag_at_exact_capacity():
+    """Cluster of exactly m in-radius points: max_results == m sets the
+    (conservative) overflow flag, max_results > m does not; the returned id
+    set is exact either way and identical across impls."""
+    rng = np.random.default_rng(17)
+    m = 12
+    near = (rng.random((m, 6)) * 0.02).astype(np.float32)         # within 0.1
+    far = (rng.random((120, 6)) * 0.5 + 5.0).astype(np.float32)   # way outside
+    X = np.vstack([near, far])
+    eng = SMTreeEngine.build(X, capacity=8)
+    q = np.zeros((1, 6), np.float32)
+    want_ids = set(range(m))
+
+    for impl in ("xla", "pallas", "perquery"):
+        # exactly max_results matches -> flag set (cannot rule out truncation)
+        res = eng.range_search(q, 0.1, max_results=m, max_frontier=256,
+                               impl=impl)
+        assert bool(np.asarray(res.overflow)[0]), impl
+        got = set(int(i) for i in np.asarray(res.ids)[0] if i >= 0)
+        assert got == want_ids, impl
+        # headroom -> no flag, same ids
+        res = eng.range_search(q, 0.1, max_results=m + 1, max_frontier=256,
+                               impl=impl)
+        assert not bool(np.asarray(res.overflow)[0]), impl
+        got = set(int(i) for i in np.asarray(res.ids)[0] if i >= 0)
+        assert got == want_ids, impl
+
+    a = eng.range_search(q, 0.1, max_results=m, impl="xla")
+    b = eng.range_search(q, 0.1, max_results=m, impl="pallas")
+    assert_results_equal(a, b, "range exact-capacity")
+
+
+def test_small_awkward_builds_keep_min_fill_and_exactness():
+    """bulk_build sizes that used to split below min_fill (e.g. 23 points at
+    capacity 32 -> 11/12-entry leaves vs floor 13) broke the cohort d_max
+    bound's coverage premise, silently dropping neighbors with
+    overflow=False.  Non-root nodes must meet min_fill and knn must stay
+    exact for every k up to n."""
+    rng = np.random.default_rng(21)
+    for n in (5, 13, 23, 24, 25, 33, 47):
+        # two well-separated clusters: the adversarial case for a bound
+        # that overestimates a subtree's coverage
+        a = rng.random((n // 2, 4)).astype(np.float32)
+        b2 = rng.random((n - n // 2, 4)).astype(np.float32) + 200.0
+        X = np.vstack([a, b2])
+        eng = SMTreeEngine.build(X, capacity=32)
+        eng.validate()
+        q = X[:2]
+        for k in (1, n // 2 + 1, n):
+            for impl in ("xla", "perquery"):
+                res = eng.knn(q, k=k, max_frontier=256, impl=impl)
+                assert not np.asarray(res.overflow).any()
+                np.testing.assert_allclose(
+                    np.asarray(res.dists), brute_knn_dists("d_inf", X, q, k),
+                    atol=1e-5, err_msg=f"n={n} k={k} {impl}")
+
+
+# --------------------------------------------------------------------------
+# l1 rides the shared metric registry through all three call sites
+# --------------------------------------------------------------------------
+def test_l1_metric_end_to_end():
+    X = clustered(500, dims=6, seed=19)
+    eng = SMTreeEngine.build(X, capacity=8, metric="l1")
+    Q = uniform(8, dims=6, seed=20)
+    a = eng.knn(Q, k=4, max_frontier=256, impl="xla")
+    b = eng.knn(Q, k=4, max_frontier=256, impl="pallas")
+    assert_results_equal(a, b, "l1")
+    assert not np.asarray(a.overflow).any()
+    np.testing.assert_allclose(np.asarray(a.dists),
+                               brute_knn_dists("l1", X, Q, 4), atol=1e-5)

@@ -1,0 +1,78 @@
+"""Interpret-mode parity for the fused frontier-scoring Pallas kernel.
+
+The kernel (kernels/frontier.py) must be *bitwise* identical to the XLA
+gather path on every output — the cohort descent's xla-vs-pallas parity
+guarantee reduces to this plus determinism of top_k.  Runs the real kernel
+code through the Pallas interpreter on CPU.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.frontier import frontier_scores_pallas, frontier_scores_xla
+
+METRICS = ["d_inf", "l2", "l1"]
+
+
+def _random_tree_pages(rng, N=40, cap=16, dim=10):
+    vecs = rng.normal(size=(N, cap, dim)).astype(np.float32)
+    radius = np.abs(rng.normal(size=(N, cap))).astype(np.float32)
+    valid = rng.random((N, cap)) < 0.8
+    is_leaf = rng.random(N) < 0.5
+    internal_valid = valid & ~is_leaf[:, None]
+    leaf_valid = valid & is_leaf[:, None]
+    return (jnp.asarray(vecs), jnp.asarray(radius),
+            jnp.asarray(internal_valid), jnp.asarray(leaf_valid))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_kernel_matches_xla_bitwise(metric):
+    rng = np.random.default_rng(0)
+    vecs, radius, iv, lv = _random_tree_pages(rng)
+    b, w = 8, 5
+    queries = jnp.asarray(rng.normal(size=(b, vecs.shape[-1])).astype(np.float32))
+    # frontier includes empty (-1) slots, duplicates, and boundary ids
+    fids = rng.integers(-1, vecs.shape[0], size=(b, w)).astype(np.int32)
+    fids[0, :] = -1                      # fully-done query
+    fids[1, :] = 0                       # duplicated node
+    fids[2, 0] = vecs.shape[0] - 1       # last row
+    fids = jnp.asarray(fids)
+
+    got = frontier_scores_pallas(fids, queries, vecs, radius, iv, lv,
+                                 metric=metric, interpret=True)
+    want = frontier_scores_xla(fids, queries, vecs, radius, iv, lv,
+                               metric=metric)
+    for g, wv, name in zip(got, want, ("dmax", "score", "leaf_d")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wv),
+                                      err_msg=f"{metric}/{name}")
+
+
+@pytest.mark.parametrize("metric", ["d_inf", "l2"])
+def test_empty_frontier_emits_inf(metric):
+    rng = np.random.default_rng(1)
+    vecs, radius, iv, lv = _random_tree_pages(rng, N=8, cap=4, dim=6)
+    fids = jnp.full((3, 4), -1, jnp.int32)
+    queries = jnp.asarray(rng.normal(size=(3, 6)).astype(np.float32))
+    out = frontier_scores_pallas(fids, queries, vecs, radius, iv, lv,
+                                 metric=metric, interpret=True)
+    for arr in out:
+        assert np.isposinf(np.asarray(arr)).all()
+
+
+def test_masks_partition_outputs():
+    """An entry is internal xor leaf xor invalid: dmax/score finite exactly
+    where internal-valid, leaf_d finite exactly where leaf-valid."""
+    rng = np.random.default_rng(2)
+    vecs, radius, iv, lv = _random_tree_pages(rng)
+    b, w = 4, 6
+    queries = jnp.asarray(rng.normal(size=(b, vecs.shape[-1])).astype(np.float32))
+    fids = jnp.asarray(rng.integers(0, vecs.shape[0], size=(b, w)).astype(np.int32))
+    dmax, score, leaf_d = frontier_scores_pallas(
+        fids, queries, vecs, radius, iv, lv, metric="d_inf", interpret=True)
+    iv_g = np.asarray(iv)[np.asarray(fids)]
+    lv_g = np.asarray(lv)[np.asarray(fids)]
+    assert (np.isfinite(np.asarray(dmax)) == iv_g).all()
+    assert (np.isfinite(np.asarray(score)) == iv_g).all()
+    assert (np.isfinite(np.asarray(leaf_d)) == lv_g).all()
+    # no entry is both internal and leaf
+    assert not (iv_g & lv_g).any()
