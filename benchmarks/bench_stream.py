@@ -1,0 +1,236 @@
+"""Stream-subsystem benchmarks: sustained mutation throughput.
+
+The matrix the PR-3 acceptance tracks: ops/sec through the WAL-backed
+cohort batcher for insert-only, delete-only and 90/10-skewed streams at
+batch >= 256, against the one-at-a-time ``insert_fast``/``delete_fast``
+Python loop (the pre-stream write path, kept as the baseline).  Also
+records WAL append cost (buffered and fsync'd), the checkpoint
+``fsync_dir`` durability premium (ROADMAP/DESIGN.md §9 satellite), the
+rebalance pass, and the evict-while-serving composite (queries against a
+pinned epoch while the writer streams mutations).
+
+Scale envs: REPRO_BENCH_SMOKE=1 (tiny, CI) / REPRO_BENCH_FULL=1.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.engine import SMTreeEngine
+from repro.core.smtree import OP_DELETE, OP_INSERT, bulk_build
+from repro.data.datagen import make_dataset
+
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+if SMOKE:
+    N = 2_000
+    N_OPS = 1_024
+    BATCHES = [256]
+    N_LOOP = 192
+elif FULL:
+    N = 100_000
+    N_OPS = 16_384
+    BATCHES = [256, 1024, 4096]
+    N_LOOP = 2_048
+else:
+    N = 20_000
+    N_OPS = 8_192
+    BATCHES = [256, 1024]
+    N_LOOP = 1_024
+DIM = 10
+CAPACITY = 32
+
+
+def _make_stream(rng, kind: str, n_ops: int, n_live: int, base_id: int):
+    """(ops, xs, oids) with unique ids per stream (single cohort)."""
+    X = make_dataset("clustered", n_live, seed=7)[:, :DIM].copy()
+    if kind == "insert":
+        ops = np.full(n_ops, OP_INSERT, np.int32)
+        oids = base_id + np.arange(n_ops)
+        xs = make_dataset("uniform", n_ops, seed=11)[:, :DIM].copy()
+    elif kind == "delete":
+        ops = np.full(n_ops, OP_DELETE, np.int32)
+        oids = rng.permutation(n_live)[:n_ops]
+        xs = X[oids]
+    else:   # mixed: frac deletes, rest inserts
+        frac = float(kind)
+        n_del = int(n_ops * frac)
+        victims = rng.permutation(n_live)[:n_del]
+        ins_ids = base_id + np.arange(n_ops - n_del)
+        ops = np.concatenate([np.full(n_del, OP_DELETE, np.int32),
+                              np.full(n_ops - n_del, OP_INSERT, np.int32)])
+        oids = np.concatenate([victims, ins_ids])
+        xs = np.concatenate([X[victims],
+                             make_dataset("uniform", n_ops - n_del,
+                                          seed=13)[:, :DIM]])
+        perm = rng.permutation(n_ops)
+        ops, oids, xs = ops[perm], oids[perm], xs[perm]
+    return (ops.astype(np.int32), np.asarray(xs, np.float32),
+            oids.astype(np.int32))
+
+
+def _fresh_tree():
+    X = make_dataset("clustered", N, seed=7)[:, :DIM].copy()
+    return bulk_build(X, capacity=CAPACITY)
+
+
+def _time_stream(tree, ops, xs, oids, batch: int) -> float:
+    """ops/sec through the batched pipeline (first batch warms the jit)."""
+    from repro.stream import StreamingEngine
+    eng = StreamingEngine(tree)
+    eng.apply(ops[:batch], xs[:batch], oids[:batch])   # compile + warm
+    n = (len(ops) - batch) // batch * batch
+    t0 = time.perf_counter()
+    for s in range(batch, batch + n, batch):
+        eng.apply(ops[s:s + batch], xs[s:s + batch], oids[s:s + batch])
+    dt = time.perf_counter() - t0
+    return n / dt
+
+
+def _time_loop(tree, ops, xs, oids) -> float:
+    """ops/sec through the pre-stream write path: one jitted fast-path call
+    + host sync per mutation, engine escalation on overflow/underflow."""
+    eng = SMTreeEngine(tree)
+    n = min(N_LOOP, len(ops))
+    # warm both fast-path compilations outside the timed window
+    eng.insert(xs[0] + 17.0, 1 << 30)
+    eng.delete(xs[0] + 17.0, 1 << 30)
+    t0 = time.perf_counter()
+    for i in range(n):
+        if ops[i] == OP_INSERT:
+            eng.insert(xs[i], int(oids[i]))
+        else:
+            eng.delete(xs[i], int(oids[i]))
+    return n / (time.perf_counter() - t0)
+
+
+def _wal_rows(report):
+    from repro.stream import WriteAheadLog
+    rng = np.random.default_rng(3)
+    ops, xs, oids = _make_stream(rng, "0.5", 2048, N, base_id=10 * N)
+    for sync, name in ((False, "wal_append_us_per_batch_b256"),
+                       (True, "wal_fsync_append_us_per_batch_b256")):
+        d = tempfile.mkdtemp(prefix="walbench")
+        try:
+            wal = WriteAheadLog(d, segment_max_records=256, sync=sync)
+            t0 = time.perf_counter()
+            n_batches = len(ops) // 256
+            for s in range(0, n_batches * 256, 256):
+                wal.append_batch(ops[s:s + 256].astype(np.int8),
+                                 xs[s:s + 256], oids[s:s + 256])
+            dt = time.perf_counter() - t0
+            wal.close()
+            report(name, round(dt / n_batches * 1e6, 1))
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+def _ckpt_rows(report, tree):
+    """The fsync_dir durability premium (DESIGN.md §9)."""
+    from repro.dist.checkpoint import save_checkpoint
+    for fsync, name in ((False, "ckpt_ms"), (True, "ckpt_fsync_dir_ms")):
+        d = tempfile.mkdtemp(prefix="ckbench")
+        try:
+            save_checkpoint(d, 0, {"tree": tree}, fsync_dir=fsync)  # warm fs
+            iters = 3
+            t0 = time.perf_counter()
+            for i in range(1, 1 + iters):
+                save_checkpoint(d, i, {"tree": tree}, fsync_dir=fsync)
+            report(name,
+                   round((time.perf_counter() - t0) / iters * 1e3, 2))
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+def _rebalance_rows(report):
+    from repro.core.distributed import build_forest_trees
+    from repro.stream import StreamingForest, collect_stats
+    n = min(N, 8_192)
+    X = make_dataset("clustered", n, seed=7)[:, :DIM].copy()
+    sf = StreamingForest(build_forest_trees(X, 4, capacity=CAPACITY),
+                         min_objects=64)
+    # drain shards 0/1: the heavily-skewed delete stream (80% of their
+    # objects — skew lands well above the 1.5x trigger)
+    victims = np.array([o for o in range(n) if o % 4 < 2][:2 * n // 5])
+    sf.delete_batch(X[victims], victims)
+    before = collect_stats(sf.trees).skew
+    t0 = time.perf_counter()
+    fired = sf.maintenance()
+    dt = time.perf_counter() - t0
+    after = collect_stats(sf.trees).skew
+    report("rebalance_skew_before", round(before, 3))
+    report("rebalance_fired", int(fired))
+    report("rebalance_skew_after", round(after, 3))
+    report("rebalance_ms", round(dt * 1e3, 1))
+
+
+def _serve_rows(report):
+    """Evict-while-serving: queries pinned to an epoch while the writer
+    applies sliding-window add/evict batches."""
+    from repro.core import smtree
+    from repro.stream import StreamingEngine
+    import jax
+    rng = np.random.default_rng(5)
+    n = min(N, 8_192)
+    X = make_dataset("clustered", n, seed=7)[:, :DIM].copy()
+    eng = StreamingEngine(bulk_build(X, capacity=CAPACITY))
+    Q = X[rng.integers(0, n, 64)] + 0.01
+    B = 128
+    rounds = 4 if SMOKE else 12
+    # warm compiles
+    jax.block_until_ready(smtree.knn(eng.tree, Q, k=8).dists)
+    cursor, nid = 0, n
+    t_q = t_m = 0.0
+    fresh = make_dataset("uniform", rounds * B, seed=100)[:, :DIM].copy()
+    for r in range(rounds):
+        e, tree = eng.epochs.acquire()
+        t0 = time.perf_counter()
+        res = smtree.knn(tree, Q, k=8, max_frontier=64)
+        jax.block_until_ready(res.dists)
+        t_q += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        eng.insert_batch(fresh[r * B:(r + 1) * B], nid + np.arange(B))
+        eng.delete_batch(X[cursor:cursor + B],
+                         np.arange(cursor, cursor + B))
+        t_m += time.perf_counter() - t0
+        cursor += B
+        nid += B
+        eng.epochs.release(e)
+    report("serve_knn_qps_under_mutation", round(rounds * 64 / t_q, 0))
+    report("serve_mutation_ops_per_s", round(rounds * 2 * B / t_m, 0))
+
+
+def run(report):
+    import gc
+    rng = np.random.default_rng(1)
+    tree = _fresh_tree()
+
+    # -- headline speedup first, in a clean process state: timing the loop
+    # after the stream stages understates it ~3x (allocator/cache pressure
+    # from the earlier stages' buffers), which would flatter the speedup
+    ops, xs, oids = _make_stream(rng, "0.5", N_OPS, N, base_id=4 * N)
+    loop_rate = _time_loop(tree, ops, xs, oids)
+    report("loop_mixed_ops_per_s", round(loop_rate, 0))
+    gc.collect()
+    mixed_rate = _time_stream(tree, ops, xs, oids, 256)
+    report("stream_mixed50_b256_ops_per_s", round(mixed_rate, 0))
+    report("speedup_batched_vs_loop_b256", round(mixed_rate / loop_rate, 2))
+
+    # -- mutation-throughput matrix --------------------------------------
+    for kind, label in (("insert", "insert"), ("delete", "delete"),
+                        ("0.9", "mixed90d")):
+        ops, xs, oids = _make_stream(rng, kind, N_OPS, N, base_id=2 * N)
+        for b in BATCHES:
+            gc.collect()
+            rate = _time_stream(tree, ops, xs, oids, b)
+            report(f"stream_{label}_b{b}_ops_per_s", round(rate, 0))
+
+    _wal_rows(report)
+    _ckpt_rows(report, tree)
+    _rebalance_rows(report)
+    _serve_rows(report)

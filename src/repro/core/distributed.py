@@ -19,6 +19,7 @@ The same code drives 8 host devices in tests and the production mesh's
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import jax
 import jax.numpy as jnp
@@ -29,6 +30,71 @@ from repro.core import smtree
 from repro.core.smtree import TreeArrays, bulk_build
 from repro.dist.sharding import shard_map  # version-portable wrapper
 
+_DATA_FIELDS = ("vecs", "radius", "pdist", "child", "oid", "valid", "count",
+                "is_leaf", "alive", "parent", "pslot", "root", "n_nodes",
+                "height")
+
+
+def stack_trees(trees: list[TreeArrays]) -> TreeArrays:
+    """Stack per-shard SM-trees into one forest TreeArrays with a leading
+    [n_shards] axis, padding every node table to the largest shard's size.
+    Padded rows are dead (``alive`` False) so no traversal touches them."""
+    max_nodes = max(t.max_nodes for t in trees)
+
+    def pad_leaf(leaf, axis0_pad):
+        pad = [(0, axis0_pad)] + [(0, 0)] * (leaf.ndim - 1)
+        return jnp.pad(leaf, pad)
+
+    stacked = {}
+    for name in _DATA_FIELDS:
+        leaves = []
+        for t in trees:
+            leaf = getattr(t, name)
+            if leaf.ndim and leaf.shape[:1] == (t.max_nodes,):
+                leaf = pad_leaf(leaf, max_nodes - t.max_nodes)
+            leaves.append(leaf)
+        stacked[name] = jnp.stack(leaves)
+    proto = trees[0]
+    return TreeArrays(capacity=proto.capacity, dim=proto.dim,
+                      metric=proto.metric, max_nodes=max_nodes,
+                      min_fill=proto.min_fill, **stacked)
+
+
+def unstack_forest(forest: TreeArrays,
+                   max_nodes: list[int] | None = None) -> list[TreeArrays]:
+    """Split a stacked forest back into per-shard trees (inverse of
+    ``stack_trees``).  ``max_nodes`` optionally re-slices each shard's node
+    table to its original, pre-padding size (stream snapshot restore needs
+    this so replay reproduces the straight-line run bitwise)."""
+    n_shards = forest.root.shape[0]
+    out = []
+    for s in range(n_shards):
+        n = forest.max_nodes if max_nodes is None else int(max_nodes[s])
+        fields = {}
+        for name in _DATA_FIELDS:
+            leaf = getattr(forest, name)[s]
+            if leaf.ndim and leaf.shape[:1] == (forest.max_nodes,):
+                leaf = leaf[:n]
+            fields[name] = leaf
+        out.append(TreeArrays(capacity=forest.capacity, dim=forest.dim,
+                              metric=forest.metric, max_nodes=n,
+                              min_fill=forest.min_fill, **fields))
+    return out
+
+
+def build_forest_trees(X: np.ndarray, n_shards: int, *, capacity: int = 32,
+                       metric: str = "d_inf",
+                       seed: int = 0) -> list[TreeArrays]:
+    """Partition X round-robin over ``n_shards`` (object i -> shard i mod S,
+    ids global) and bulk-build one SM-tree per shard.  Mesh-free: this is
+    the host-side forest the stream subsystem mutates shard-at-a-time."""
+    trees = []
+    for s in range(n_shards):
+        idx = np.arange(s, X.shape[0], n_shards)
+        trees.append(bulk_build(X[idx], ids=idx, capacity=capacity,
+                                metric=metric, seed=seed + s))
+    return trees
+
 
 def build_forest(X: np.ndarray, mesh: Mesh, *, axis: str = "model",
                  capacity: int = 32, metric: str = "d_inf",
@@ -36,52 +102,37 @@ def build_forest(X: np.ndarray, mesh: Mesh, *, axis: str = "model",
     """Partition X round-robin over the mesh axis and bulk-build one SM-tree
     per shard.  Returns a TreeArrays whose leaves carry a leading [n_shards]
     axis sharded over ``axis`` (ids are global)."""
-    n_shards = mesh.shape[axis]
-    n = X.shape[0]
-    per = -(-n // n_shards)
-    trees = []
-    max_nodes = 0
-    for s in range(n_shards):
-        idx = np.arange(s, n, n_shards)
-        t = bulk_build(X[idx], ids=idx, capacity=capacity, metric=metric,
-                       seed=seed + s)
-        trees.append(t)
-        max_nodes = max(max_nodes, t.max_nodes)
-    # pad every shard's node table to the same size, stack
-    def pad_leaf(leaf, target, axis0_pad):
-        pad = [(0, axis0_pad)] + [(0, 0)] * (leaf.ndim - 1)
-        return jnp.pad(leaf, pad)
-
-    stacked = {}
-    import dataclasses
-    fields = [f.name for f in dataclasses.fields(TreeArrays)
-              if f.name not in ("capacity", "dim", "metric", "max_nodes",
-                                "min_fill")]
-    for name in fields:
-        leaves = []
-        for t in trees:
-            leaf = getattr(t, name)
-            if leaf.ndim and leaf.shape[:1] == (t.max_nodes,):
-                leaf = pad_leaf(leaf, max_nodes, max_nodes - t.max_nodes)
-            leaves.append(leaf)
-        stacked[name] = jnp.stack(leaves)
-    proto = trees[0]
-    forest = TreeArrays(capacity=proto.capacity, dim=proto.dim,
-                        metric=proto.metric, max_nodes=max_nodes,
-                        min_fill=proto.min_fill, **stacked)
+    forest = stack_trees(build_forest_trees(
+        X, mesh.shape[axis], capacity=capacity, metric=metric, seed=seed))
     spec = jax.tree.map(lambda _: P(axis), forest)
     return jax.device_put(forest, NamedSharding(mesh, P(axis))), spec
 
 
 def _local_tree(forest_slice: TreeArrays) -> TreeArrays:
     """Strip the leading length-1 shard axis inside shard_map."""
-    import dataclasses
     return dataclasses.replace(
-        forest_slice,
-        **{f: getattr(forest_slice, f)[0]
-           for f in ("vecs", "radius", "pdist", "child", "oid", "valid",
-                     "count", "is_leaf", "alive", "parent", "pslot", "root",
-                     "n_nodes", "height")})
+        forest_slice, **{f: getattr(forest_slice, f)[0]
+                         for f in _DATA_FIELDS})
+
+
+def _restack(forest_slice: TreeArrays, tree: TreeArrays) -> TreeArrays:
+    """Re-add the length-1 shard axis inside shard_map (inverse of
+    ``_local_tree``)."""
+    return dataclasses.replace(
+        forest_slice, **{f: getattr(tree, f)[None] for f in _DATA_FIELDS})
+
+
+def common_static_height(forest: TreeArrays) -> int | None:
+    """Concrete tree height shared by every shard, or None when shards
+    disagree (the cohort descent's static unroll needs one height; unequal
+    shards fall back to the per-query engine)."""
+    try:
+        heights = np.asarray(jax.device_get(forest.height))
+    except Exception:  # noqa: BLE001 — abstract/traced forest: no fast path
+        return None
+    if heights.size and (heights == heights.flat[0]).all():
+        return int(heights.flat[0])
+    return None
 
 
 def forest_knn(forest: TreeArrays, mesh: Mesh, queries: jax.Array, *,
@@ -91,7 +142,14 @@ def forest_knn(forest: TreeArrays, mesh: Mesh, queries: jax.Array, *,
 
     queries: [b, dim] (replicated or sharded over ``batch_axis``).
     Returns (dists [b, k], ids [b, k]) with globally merged results.
+
+    The concrete per-shard heights are read *before* entering shard_map and
+    plumbed through as a static argument, so each shard runs the PR-2
+    cohort fast path (fused frontier scoring) instead of the per-query
+    fallback whenever all shards share one height — which balanced
+    round-robin bulk builds guarantee in practice.
     """
+    static_height = common_static_height(forest)
     in_specs = (P(axis), P(batch_axis))
     out_specs = (P(batch_axis), P(batch_axis))
 
@@ -99,7 +157,8 @@ def forest_knn(forest: TreeArrays, mesh: Mesh, queries: jax.Array, *,
                        out_specs=out_specs, check_rep=False)
     def run(forest_slice, q):
         tree = _local_tree(forest_slice)
-        res = smtree.knn(tree, q, k=k, max_frontier=max_frontier)
+        res = smtree.knn(tree, q, k=k, max_frontier=max_frontier,
+                         static_height=static_height)
         # k-way merge across shards: gather candidates, top-k
         all_d = jax.lax.all_gather(res.dists, axis)            # [S, b, k]
         all_i = jax.lax.all_gather(res.ids, axis)
@@ -137,16 +196,52 @@ def forest_delete(forest: TreeArrays, mesh: Mesh, xs: jax.Array,
 
         tree, found = jax.lax.scan(body, tree, (xs, oids))
         found = jax.lax.psum(found.astype(jnp.int32), axis) > 0
-        import dataclasses
-        out = dataclasses.replace(
-            forest_slice,
-            **{f: getattr(tree, f)[None]
-               for f in ("vecs", "radius", "pdist", "child", "oid", "valid",
-                         "count", "is_leaf", "alive", "parent", "pslot",
-                         "root", "n_nodes", "height")})
-        return out, found
+        return _restack(forest_slice, tree), found
 
     return run(forest, xs, oids)
+
+
+def forest_apply_mutations(forest: TreeArrays, mesh: Mesh, ops: jax.Array,
+                           xs: jax.Array, oids: jax.Array,
+                           owner: jax.Array, *, axis: str = "model"):
+    """Broadcast a mixed insert/delete batch; each shard applies the rows it
+    owns (``owner[i]`` = shard index) through the fused ``apply_mutations``
+    scan in one collective step.  Non-owned rows become OP_NOP locally, so
+    the psum of masked statuses reconstructs the global per-row outcome
+    (ST_NOP is 0).  Returns (forest, statuses [B]) — escalation statuses
+    (overflow/underflow) are resolved host-side by the stream control plane
+    (repro.stream.pipeline).
+
+    The batch must be a *conflict-free cohort* — no object id twice
+    (``apply_mutations`` pre-locates delete targets against the pre-batch
+    tree, which is unsound across same-id rows).  Cut arbitrary logs with
+    ``repro.stream.batcher.cut_cohorts`` first."""
+    try:
+        oids_np = np.asarray(jax.device_get(oids))
+        if len(np.unique(oids_np)) != len(oids_np):
+            raise ValueError(
+                "forest_apply_mutations requires unique oids per batch "
+                "(conflict-free cohort); cut the log with "
+                "repro.stream.batcher.cut_cohorts")
+    except jax.errors.ConcretizationTypeError:
+        pass   # traced call sites take responsibility for the contract
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(axis), P(None), P(None), P(None), P(None)),
+                       out_specs=(P(axis), P(None)), check_rep=False)
+    def run(forest_slice, ops, xs, oids, owner):
+        tree = _local_tree(forest_slice)
+        me = jax.lax.axis_index(axis)
+        mine = owner == me
+        local_ops = jnp.where(mine, ops, smtree.OP_NOP)
+        tree, status = smtree.apply_mutations(tree, local_ops, xs, oids,
+                                              donate=False)
+        status = jax.lax.psum(jnp.where(mine, status, 0), axis)
+        return _restack(forest_slice, tree), status
+
+    return run(forest, jnp.asarray(ops, jnp.int32),
+               jnp.asarray(xs, jnp.float32), jnp.asarray(oids, jnp.int32),
+               jnp.asarray(owner, jnp.int32))
 
 
 def brute_force_knn(X: jax.Array, mesh: Mesh, queries: jax.Array, *,

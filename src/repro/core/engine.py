@@ -164,6 +164,16 @@ class _HostView:
             m = int(self.count[node])
             d = self.metric(x[None, :], self.vecs[node, :m])
             node = int(self.child[node, int(np.argmin(d))])
+        if int(self.count[node]) < self.cap:
+            # leaf has room after all — the stream batcher escalates against
+            # a *scan-time* overflow verdict, and earlier escalated ops may
+            # have freed space by now; splitting a non-full leaf would
+            # produce undersized sides.  Plain append + radius fold.
+            pv = self.routing_vec_of(node)
+            pd = 0.0 if pv is None else float(self.metric(x, pv))
+            self.append_entry(node, x, 0.0, pd, -1, obj_id)
+            self.fold_up(node)
+            return
         # pending entry set at the current level
         vecs, radius, child, oid = self.entries(node)
         vecs = np.vstack([vecs, x[None, :]])

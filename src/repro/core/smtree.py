@@ -87,8 +87,16 @@ class TreeArrays:
 
     @property
     def n_objects(self) -> int:
-        return int(jnp.sum(jnp.where(self.is_leaf[:, None] & self.valid,
-                                     1, 0)))
+        # dead (freed) node slots may keep stale valid bits — e.g. a batched
+        # merge that marks the donor dead on device without scrubbing its
+        # rows — so the alive mask must gate the count
+        live = self.alive[..., None] & self.is_leaf[..., None] & self.valid
+        return int(jnp.sum(live))
+
+    @property
+    def n_free_nodes(self) -> int:
+        """Unallocated node slots (free-list headroom for splits)."""
+        return int(jnp.sum(~self.alive))
 
 
 def empty_tree(*, dim: int, capacity: int = 32, max_nodes: int = 1024,
@@ -288,16 +296,21 @@ def _resolve_impl(impl: str | None) -> str:
 
 
 def knn(tree: TreeArrays, queries: jax.Array, *, k: int = 1,
-        max_frontier: int = 64, impl: str | None = None) -> QueryResult:
+        max_frontier: int = 64, impl: str | None = None,
+        static_height: int | None = None) -> QueryResult:
     """Batched k-NN: level-synchronous cohort descent with dynamic radius.
 
     queries: [b, dim].  Exact when ``overflow`` is False (frontier never
     truncated); otherwise best-effort (closest-first truncation).  ``impl``
     overrides the frontier-scoring backend (see ``_resolve_impl``).
+    ``static_height`` supplies the concrete tree height in traced contexts
+    (the sharded forest's shard_map) where ``tree.height`` is abstract, so
+    the cohort fast path can unroll instead of falling back to the
+    per-query engine.
     """
     queries = jnp.asarray(queries, jnp.float32)
     return _query(tree, queries, k, max_frontier, jnp.float32(_INF),
-                  _resolve_impl(impl))
+                  _resolve_impl(impl), static_height)
 
 
 def range_search(tree: TreeArrays, queries: jax.Array, radius: jax.Array, *,
@@ -326,18 +339,23 @@ def _range_filter(res: QueryResult, radius, max_results: int) -> QueryResult:
 
 
 def _query(tree: TreeArrays, queries: jax.Array, k: int, F: int, r_cap,
-           impl: str) -> QueryResult:
+           impl: str, static_height: int | None = None) -> QueryResult:
     """Dispatch: the cohort engine unrolls the descent over the concrete tree
     height (leaves are all at one depth, so each level is statically either
     internal or leaf).  In traced contexts (e.g. the sharded forest's
     shard_map, where ``height`` is abstract) fall back to the per-query
-    engine, which carries dynamic control flow."""
+    engine, which carries dynamic control flow — unless the caller plumbed
+    the concrete height through as ``static_height``
+    (core/distributed.py:forest_knn)."""
     if impl == "perquery":
         return _knn_perquery(tree, queries, k, F, r_cap)
-    try:
-        height = int(tree.height)
-    except jax.errors.ConcretizationTypeError:
-        return _knn_perquery(tree, queries, k, F, r_cap)
+    if static_height is not None:
+        height = int(static_height)
+    else:
+        try:
+            height = int(tree.height)
+        except jax.errors.ConcretizationTypeError:
+            return _knn_perquery(tree, queries, k, F, r_cap)
     interpret = jax.default_backend() != "tpu"
     return _knn_cohort(tree, queries, r_cap, k=k, F=F, height=height,
                        impl=impl, interpret=interpret)
@@ -536,8 +554,7 @@ def _knn_perquery(tree: TreeArrays, queries: jax.Array, k: int, F: int,
 # --------------------------------------------------------------------------
 # Jitted insert fast path + host-side split fallback
 # --------------------------------------------------------------------------
-@jax.jit
-def _descend(tree: TreeArrays, x: jax.Array):
+def _descend_path(tree: TreeArrays, x: jax.Array):
     """SM-tree choose-subtree (closest entry) from root to leaf.
     Returns (path_nodes [MAX_HEIGHT], path_slots [MAX_HEIGHT], leaf_id)."""
     def body(state):
@@ -557,6 +574,9 @@ def _descend(tree: TreeArrays, x: jax.Array):
     ps = jnp.full((MAX_HEIGHT,), -1, jnp.int32)
     leaf, _, pn, ps = jax.lax.while_loop(cond, body, (tree.root, 0, pn, ps))
     return pn, ps, leaf
+
+
+_descend = jax.jit(_descend_path)
 
 
 def _refresh_path_radii(tree: TreeArrays, pn: jax.Array, ps: jax.Array) -> TreeArrays:
@@ -580,8 +600,7 @@ def _refresh_path_radii(tree: TreeArrays, pn: jax.Array, ps: jax.Array) -> TreeA
     return jax.lax.fori_loop(0, MAX_HEIGHT, body, tree)
 
 
-@jax.jit
-def insert_fast(tree: TreeArrays, x: jax.Array, obj_id: jax.Array):
+def _insert_fast_impl(tree: TreeArrays, x: jax.Array, obj_id: jax.Array):
     """No-split insert.  Returns (tree, fits: bool, leaf_id).  When the leaf
     is full the tree is returned UNCHANGED with fits=False — the caller runs
     the host-side split path."""
@@ -613,6 +632,9 @@ def insert_fast(tree: TreeArrays, x: jax.Array, obj_id: jax.Array):
     return new_tree, fits, leaf
 
 
+insert_fast = jax.jit(_insert_fast_impl)
+
+
 @jax.jit
 def path_to_root(tree: TreeArrays, leaf: jax.Array):
     """Climb parent pointers: returns (path_nodes, path_slots) root-first,
@@ -640,8 +662,7 @@ def path_to_root(tree: TreeArrays, leaf: jax.Array):
     return pn, ps
 
 
-@jax.jit
-def delete_fast(tree: TreeArrays, x: jax.Array, obj_id: jax.Array):
+def _delete_fast_impl(tree: TreeArrays, x: jax.Array, obj_id: jax.Array):
     """No-underflow delete.  Returns (tree, found, underflow, leaf_id).
     On underflow the tree is returned UNCHANGED with underflow=True — caller
     runs the host-side merge path.  Locates the object by exact id match and
@@ -677,3 +698,188 @@ def delete_fast(tree: TreeArrays, x: jax.Array, obj_id: jax.Array):
     ok = found & ~underflow
     new_tree = jax.lax.cond(ok, apply, lambda t: t, tree)
     return new_tree, found, underflow, leaf
+
+
+delete_fast = jax.jit(_delete_fast_impl)
+
+
+# --------------------------------------------------------------------------
+# Batched mutation apply (the repro.stream data plane)
+# --------------------------------------------------------------------------
+# Mutation opcodes for ``apply_mutations`` / the stream batcher.  OP_NOP is 0
+# so padding rows are all-zeros and masked statuses psum cleanly in the
+# sharded forest (core/distributed.py).
+OP_NOP, OP_INSERT, OP_DELETE = 0, 1, 2
+# Per-row outcomes.  ST_NOP must stay 0 (same psum argument).
+ST_NOP, ST_APPLIED, ST_OVERFLOW, ST_UNDERFLOW, ST_NOTFOUND = 0, 1, 2, 3, 4
+
+
+def _apply_row(t: TreeArrays, vecs0: jax.Array, op, x, oid, leaf0, found0):
+    """One mutation as a branch-free masked update (the scan body of
+    ``apply_mutations``).
+
+    Semantically identical to dispatching to ``insert_fast``/``delete_fast``
+    per row, but shaped so XLA:CPU keeps the scan carry **in place** and
+    each step's work stays O(h·cap); every deviation below is load-bearing
+    for that (each was worth 2-4x on the batch throughput at n=100k):
+
+      * no ``lax.cond``/``switch`` on tree state — branches returning whole
+        trees materialise both versions of every array per step.  Rows that
+        do not apply redirect their scatters out of bounds instead
+        (``mode="drop"``), so no masking read of the current cell is needed.
+      * the choose-subtree descent and the parent-routing-vector gather read
+        ``vecs0`` — the *loop-invariant* pre-batch vecs.  Both only ever
+        touch internal-node rows, which the fast path never writes, so the
+        values are identical; reading the carried ``t.vecs`` instead would
+        put a gather and a scatter on the same buffer in one fusion, which
+        XLA resolves by copying all of ``vecs`` every step.
+      * the delete target's leaf (``leaf0``/``found0``) is located once,
+        vectorised, before the scan (``_locate_oids``): within a
+        conflict-free batch nothing moves an object across leaves, so only
+        the *slot* must be re-derived per step — an O(cap) row probe
+        instead of an O(N·cap) table scan.
+      * leaf ``child`` rows are always -1 and leaf ``radius`` rows always
+        0.0 (bulk build, host splits and this fast path all maintain that),
+        so the insert/swap writes to them are dropped outright.
+    """
+    cap = t.capacity
+    is_ins_op = op == OP_INSERT
+    is_del_op = op == OP_DELETE
+    N = t.max_nodes   # out-of-bounds scatter target for inactive rows
+
+    # --- insert probe: choose-subtree descent (invariant routing pages)
+    t_inv = dataclasses.replace(t, vecs=vecs0)
+    pn_i, ps_i, leaf_i = _descend_path(t_inv, x)
+    cnt_i = t.count[leaf_i]
+    fits = cnt_i < cap
+    slot_i = jnp.minimum(cnt_i, cap - 1)
+    has_parent = pn_i[0] >= 0
+    plast = jnp.argmax(jnp.where(pn_i >= 0, jnp.arange(MAX_HEIGHT), -1))
+    pvec = vecs0[jnp.maximum(pn_i[plast], 0), jnp.maximum(ps_i[plast], 0)]
+    pd = jnp.where(has_parent, _metric_eval(t.metric, x, pvec), 0.0)
+
+    # --- delete probe: pre-located leaf, slot re-derived from the live row
+    # (earlier swap-removes may have moved the target within its leaf)
+    found = found0 & is_del_op
+    leaf_d = jnp.maximum(leaf0, 0)
+    row_hit = (t.oid[leaf_d] == oid) & t.valid[leaf_d]      # [cap]
+    slot_d = jnp.argmax(row_hit).astype(jnp.int32)
+    cnt_d = t.count[leaf_d]
+    underflow = found & (cnt_d - 1 < t.min_fill) & (leaf_d != t.root)
+    last_d = jnp.maximum(cnt_d - 1, 0)
+    pn_d, ps_d = path_to_root(t, leaf_d)
+
+    do_ins = is_ins_op & fits
+    do_del = found & ~underflow
+    act = do_ins | do_del
+
+    # --- write 1: the edited slot (insert target / swap-remove fill);
+    # inactive rows scatter out of bounds and are dropped
+    n1 = jnp.where(act, jnp.where(do_ins, leaf_i, leaf_d), N)
+    s1 = jnp.where(do_ins, slot_i, slot_d)
+
+    _flags = dict(mode="drop", unique_indices=True, indices_are_sorted=True)
+
+    def w1(arr, ins_val):
+        src = arr[leaf_d, last_d]
+        return arr.at[n1, s1].set(jnp.where(do_ins, ins_val, src), **_flags)
+
+    vecs = w1(t.vecs, x)
+    pdist = w1(t.pdist, pd)
+    oid_a = w1(t.oid, oid.astype(jnp.int32))
+    valid = t.valid.at[n1, s1].set(True, **_flags)
+
+    # --- write 2: clear the delete tail slot (after write 1, matching the
+    # swap-remove order — handles slot == last)
+    n2 = jnp.where(do_del, leaf_d, N)
+    valid = valid.at[n2, last_d].set(False, **_flags)
+    oid_a = oid_a.at[n2, last_d].set(-1, **_flags)
+
+    delta = jnp.where(do_ins, 1, -1).astype(jnp.int32)
+    count = t.count.at[n1].add(delta, **_flags)
+
+    t = dataclasses.replace(t, vecs=vecs, pdist=pdist, oid=oid_a,
+                            valid=valid, count=count)
+
+    # --- radius fold along the touched path (no-op rows fold nothing)
+    pn = jnp.where(do_ins, pn_i, jnp.where(do_del, pn_d, -1))
+    ps = jnp.where(do_ins, ps_i, jnp.where(do_del, ps_d, -1))
+    t = _refresh_path_radii(t, pn, ps)
+
+    status = jnp.where(
+        is_ins_op, jnp.where(fits, ST_APPLIED, ST_OVERFLOW),
+        jnp.where(is_del_op,
+                  jnp.where(found, jnp.where(underflow, ST_UNDERFLOW,
+                                             ST_APPLIED), ST_NOTFOUND),
+                  ST_NOP)).astype(jnp.int32)
+    return t, status
+
+
+def _locate_oids(tree: TreeArrays, oids: jax.Array):
+    """Vectorised exact-id lookup: for each requested oid, the node holding
+    it in ``tree`` (or -1).  One O(N·cap·log B) sorted-join pass replaces B
+    sequential O(N·cap) table scans; first-hit semantics (lowest flat slot
+    wins) match the scan the fast path used to do.  Requires the batch's
+    oids to be unique (the conflict-free-cohort contract)."""
+    B = oids.shape[0]
+    N, cap = tree.oid.shape
+    order = jnp.argsort(oids)
+    sorted_oids = oids[order]
+    pos = jnp.searchsorted(sorted_oids, tree.oid)            # [N, cap]
+    pos_c = jnp.minimum(pos, B - 1)
+    match = (sorted_oids[pos_c] == tree.oid) & tree.valid
+    row = jnp.where(match, order[pos_c], B)                  # B → dropped
+    flat = jnp.arange(N * cap, dtype=jnp.int32).reshape(N, cap)
+    first = jnp.full((B,), N * cap, jnp.int32).at[row].min(flat, mode="drop")
+    found = first < N * cap
+    return jnp.where(found, first // cap, -1).astype(jnp.int32), found
+
+
+def _apply_mutations_impl(tree: TreeArrays, ops: jax.Array, xs: jax.Array,
+                          oids: jax.Array):
+    """One fused ``lax.scan`` over a mutation log: per row the branch-free
+    insert/delete fast path (``_apply_row``) plus a status.
+
+    The log must be a *conflict-free cohort* — no object id appears twice
+    (deletes are pre-located against the pre-batch tree, which is only
+    sound when no earlier row in the same batch touches the same id).  The
+    stream batcher (repro.stream.batcher) cuts arbitrary logs into such
+    cohorts.
+
+    Rows the fast path cannot absorb leave the tree untouched and report
+    ST_OVERFLOW / ST_UNDERFLOW / ST_NOTFOUND — the stream batcher escalates
+    them to the host control plane.  The whole batch is one device dispatch
+    with an in-place carry, which is where the throughput over a Python
+    insert_fast/delete_fast loop comes from (benchmarks/bench_stream.py).
+    """
+    vecs0 = tree.vecs   # invariant routing pages (see _apply_row)
+    leaf0, found0 = _locate_oids(tree, oids)
+
+    def step(t, row):
+        op, x, oid, l0, f0 = row
+        return _apply_row(t, vecs0, op, x, oid, l0, f0)
+
+    return jax.lax.scan(step, tree, (ops, xs, oids, leaf0, found0),
+                        unroll=2)
+
+
+@functools.cache
+def _apply_mutations_jit(donate: bool):
+    return jax.jit(_apply_mutations_impl,
+                   donate_argnums=(0,) if donate else ())
+
+
+def apply_mutations(tree: TreeArrays, ops, xs, oids, *,
+                    donate: bool | None = None):
+    """Batched insert/delete apply.  Returns (tree, statuses [B] int32).
+
+    ops: [B] int32 opcodes, xs: [B, dim] f32, oids: [B] int32.  Ops apply in
+    log order; see ``_apply_mutations_impl`` for escalation statuses.  With
+    ``donate`` (default: on accelerators) the input tree's buffers are
+    donated — callers must treat the argument as consumed."""
+    if donate is None:
+        donate = jax.default_backend() not in ("cpu",)
+    ops = jnp.asarray(ops, jnp.int32)
+    xs = jnp.asarray(xs, jnp.float32)
+    oids = jnp.asarray(oids, jnp.int32)
+    return _apply_mutations_jit(bool(donate))(tree, ops, xs, oids)

@@ -53,17 +53,23 @@ def minmax_split(D: np.ndarray, child_radii: np.ndarray, is_leaf: bool,
     Returns (pi, pj, members_i, members_j, r_i, r_j) — promoted indices, the
     member index arrays (including the promoted entries themselves) and the
     covering radii of the two routing entries.
+
+    All m(m-1)/2 candidate pairs are scored in one vectorised pass
+    (``np.argmin`` keeps the first minimal pair, matching the original
+    lexicographic loop's strict-< tie-breaking exactly); this is the stream
+    batcher's escalation hot path, where the per-pair Python loop dominated
+    sustained mutation throughput.
     """
     m = D.shape[0]
     C = D if is_leaf else D + np.asarray(child_radii)[None, :]
-    best = None
-    for i in range(m):
-        for j in range(i + 1, m):
-            to_i, r_i, r_j = _assign_and_radii(D, C, i, j)
-            score = max(r_i, r_j)
-            if best is None or score < best[0]:
-                best = (score, i, j, to_i)
-    _, pi, pj, to_i = best
+    ii, jj = np.triu_indices(m, k=1)
+    to_i = D[ii] <= D[jj]                           # [P, m]: hyperplane side
+    r_i = np.where(to_i, C[ii], -np.inf).max(axis=1)
+    r_j = np.where(to_i, -np.inf, C[jj]).max(axis=1)
+    r_i = np.where(np.isfinite(r_i), r_i, 0.0)      # empty side covers 0
+    r_j = np.where(np.isfinite(r_j), r_j, 0.0)
+    best = int(np.argmin(np.maximum(r_i, r_j)))
+    pi, pj, to_i = int(ii[best]), int(jj[best]), to_i[best]
     idx = np.arange(m)
     side_i, side_j = _rebalance(D, pi, pj, idx[to_i], idx[~to_i], min_side)
     r_i = float(C[pi, side_i].max())

@@ -61,8 +61,25 @@ def _to_host(tree) -> list[np.ndarray]:
     return host
 
 
+def fsync_directory(path: str) -> None:
+    """fsync a directory fd so a just-committed rename survives power loss.
+
+    The tmp-then-rename commit is atomic per POSIX, but the *directory
+    entry* for the renamed name only becomes durable once the parent
+    directory is synced (DESIGN.md §9).  Windows has no directory fds;
+    there the call is a no-op."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return   # platform without directory fds
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _write(directory: str, step: int, host: list[np.ndarray],
-           extra: dict | None) -> None:
+           extra: dict | None, fsync_dir: bool = False) -> None:
     os.makedirs(directory, exist_ok=True)
     final = _step_dir(directory, step)
     tmp = os.path.join(directory,
@@ -82,18 +99,34 @@ def _write(directory: str, step: int, host: list[np.ndarray],
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump({"step": step, "extra": extra or {},
                        "n_leaves": len(host), "leaves": dtypes}, f)
+            if fsync_dir:
+                f.flush()
+                os.fsync(f.fileno())
+        if fsync_dir:
+            # file contents must hit disk before the rename that publishes
+            # them, else the commit point can expose empty files after a crash
+            with open(os.path.join(tmp, _ARRAYS), "rb") as f:
+                os.fsync(f.fileno())
+            fsync_directory(tmp)
         if os.path.isdir(final):
             shutil.rmtree(final)
         os.rename(tmp, final)               # atomic commit
+        if fsync_dir:
+            fsync_directory(directory)
     finally:
         if os.path.isdir(tmp):
             shutil.rmtree(tmp, ignore_errors=True)
 
 
 def save_checkpoint(directory: str, step: int, tree,
-                    extra: dict | None = None) -> str:
-    """Write ``tree`` as checkpoint ``step``; returns the committed path."""
-    _write(directory, step, _to_host(tree), extra)
+                    extra: dict | None = None, *,
+                    fsync_dir: bool = False) -> str:
+    """Write ``tree`` as checkpoint ``step``; returns the committed path.
+
+    ``fsync_dir`` adds the directory fsync after the rename commit
+    (durability across power loss, at a measurable latency cost — see the
+    ``ckpt_fsync_dir_ms`` row in benchmarks/BENCH_PR3.json)."""
+    _write(directory, step, _to_host(tree), extra, fsync_dir)
     return _step_dir(directory, step)
 
 
@@ -118,6 +151,21 @@ def latest_step(directory: str) -> int | None:
     """Highest committed checkpoint step, or None."""
     steps = _complete_steps(directory)
     return steps[-1] if steps else None
+
+
+def read_manifest(directory: str, step: int | None = None) -> dict:
+    """Load a committed checkpoint's manifest without touching the arrays.
+
+    The stream subsystem restores in two phases: the manifest's ``extra``
+    carries the tree geometry (max_nodes, capacity, ...) needed to build
+    the restore *template*, plus the WAL sequence number where tail replay
+    must resume (repro.stream.pipeline)."""
+    if step is None:
+        step = latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint found in {directory!r}")
+    with open(os.path.join(_step_dir(directory, step), _MANIFEST)) as f:
+        return json.load(f)
 
 
 def _sharding_leaves(template, shardings) -> list[Any]:
@@ -186,9 +234,10 @@ class CheckpointManager:
     deferred.  ``wait()`` drains pending writes (call before exit)."""
 
     def __init__(self, directory: str, *, keep: int = 3,
-                 async_write: bool = True):
+                 async_write: bool = True, fsync_dir: bool = False):
         self.directory = directory
         self.keep = keep
+        self.fsync_dir = fsync_dir
         self._lock = threading.Lock()
         self._pending: list[Future] = []
         self._pool = (ThreadPoolExecutor(max_workers=1,
@@ -198,7 +247,7 @@ class CheckpointManager:
     def save(self, step: int, tree, extra: dict | None = None) -> None:
         host = _to_host(tree)
         if self._pool is None:
-            _write(self.directory, step, host, extra)
+            _write(self.directory, step, host, extra, self.fsync_dir)
             self._rotate()
             return
         with self._lock:
@@ -213,7 +262,7 @@ class CheckpointManager:
                 self._pool.submit(self._write_and_rotate, step, host, extra))
 
     def _write_and_rotate(self, step, host, extra):
-        _write(self.directory, step, host, extra)
+        _write(self.directory, step, host, extra, self.fsync_dir)
         self._rotate()
 
     def _rotate(self) -> None:

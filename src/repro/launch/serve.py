@@ -33,7 +33,32 @@ def _build_store(args, cfg, mesh=None):
     store = KnnLmDatastore(KnnLmConfig(lam=args.lam, metric="l2"),
                            cfg.d_model, mesh=mesh)
     store.build(keys, vals)
+    if getattr(args, "knn_mutate", False):
+        store.enable_stream()   # batched add/evict via repro.stream
     return store
+
+
+class _WindowMutator:
+    """Sliding-window live mutation under serving: every decode step adds
+    the step's (hidden-state, next-token) pairs to the datastore and evicts
+    the same number of oldest entries — the evict-while-serving workload
+    the paper's O(h) Delete makes possible, batched through the stream
+    pipeline (one WAL-able apply per step instead of per entry)."""
+
+    def __init__(self, store):
+        self.store = store
+        self.evict_cursor = 0
+        self.n_ops = 0
+
+    def step(self, h, toks):
+        h = np.asarray(h, np.float32)
+        toks = np.asarray(toks, np.int32)
+        self.store.add_batch(h, toks)
+        b = len(toks)
+        self.store.evict_batch(np.arange(self.evict_cursor,
+                                         self.evict_cursor + b))
+        self.evict_cursor += b
+        self.n_ops += 2 * b
 
 
 def serve_sharded(args, cfg):
@@ -68,10 +93,13 @@ def serve_sharded(args, cfg):
         cache = jax.device_put(M.init_cache(cfg, args.batch, total),
                                sh["cache"])
         mix_fn = None
+        mutator = None
         if args.knn:
             store = _build_store(args, cfg, mesh=mesh)
             mix_fn, _ = make_knnlm_mixer(cfg, mesh, shape, store,
                                          lam=args.lam)
+            if args.knn_mutate:
+                mutator = _WindowMutator(store)
         t0 = time.time()
         for pos in range(args.prompt_len):
             tok, logits, cache = jitted(params, prompt[:, pos], cache,
@@ -86,14 +114,18 @@ def serve_sharded(args, cfg):
             if mix_fn is not None:
                 h = params["embed"][fed].astype(jnp.float32)
                 tok = jnp.argmax(mix_fn(logits, h), -1).astype(jnp.int32)
+                if mutator is not None:
+                    mutator.step(h, tok)
             out.append(tok)
         jax.block_until_ready(tok)
         decode_s = time.time() - t0
     toks = np.stack([np.asarray(t) for t in out], axis=1)
+    mut = (f", {mutator.n_ops} live mutations "
+           f"({mutator.n_ops / decode_s:.0f} ops/s)" if mutator else "")
     print(f"[serve] mesh {dict(mesh.shape)} batch {args.batch}: "
           f"prefill {prefill_s:.2f}s, decode {args.steps} steps in "
           f"{decode_s:.2f}s ({decode_s / args.steps * 1e3:.1f} ms/step"
-          f"{', kNN-LM mixed' if mix_fn else ''})")
+          f"{', kNN-LM mixed' if mix_fn else ''}{mut})")
     print("[serve] sample:", toks[0][:12])
     return toks
 
@@ -107,6 +139,10 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--knn", action="store_true",
                     help="mix with an SM-tree kNN-LM datastore")
+    ap.add_argument("--knn-mutate", action="store_true",
+                    help="with --knn: live sliding-window add/evict of "
+                         "datastore entries each decode step (batched "
+                         "through the repro.stream pipeline)")
     ap.add_argument("--lam", type=float, default=0.3)
     ap.add_argument("--mesh", default="single", choices=["single", "host"],
                     help="'host': sharded decode over all host devices")
@@ -128,6 +164,8 @@ def main(argv=None):
     prompt = jnp.asarray(synth_batch(dc, 0, with_labels=False)["tokens"])
 
     store = _build_store(args, cfg) if args.knn else None
+    mutator = (_WindowMutator(store)
+               if store is not None and args.knn_mutate else None)
 
     cache = M.init_cache(cfg, args.batch, args.prompt_len + args.steps + 1)
     step_fn = jax.jit(M.decode_step, static_argnums=1)
@@ -150,14 +188,18 @@ def main(argv=None):
             logits = mix_logits(logits, store.knn_logits(
                 h, logits.shape[-1]), args.lam)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        if store is not None and mutator is not None:
+            mutator.step(h, tok)
         out.append(tok)
     jax.block_until_ready(tok)   # async dispatch: sync before timing
     decode_s = time.time() - t0
     toks = np.stack([np.asarray(t) for t in out], axis=1)
+    mut = (f", {mutator.n_ops} live mutations "
+           f"({mutator.n_ops / decode_s:.0f} ops/s)" if mutator else "")
     print(f"[serve] batch {args.batch}: prefill {prefill_s:.2f}s, "
           f"decode {args.steps} steps in {decode_s:.2f}s "
           f"({decode_s / args.steps * 1e3:.1f} ms/step"
-          f"{', kNN-LM mixed' if store else ''})")
+          f"{', kNN-LM mixed' if store else ''}{mut})")
     print("[serve] sample:", toks[0][:12])
     return toks
 

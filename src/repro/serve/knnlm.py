@@ -50,7 +50,10 @@ class KnnLmDatastore:
         self.mesh = mesh
         self.keys = np.zeros((0, dim), np.float32)
         self.values = np.zeros((0,), np.int32)
+        self._keys_buf = self.keys    # growth buffers (_append_history)
+        self._vals_buf = self.values
         self.engine: SMTreeEngine | None = None
+        self.stream = None   # repro.stream.StreamingEngine when enabled
 
     def _place(self):
         """Replicate tree pages over the mesh (queries shard, pages don't)."""
@@ -71,6 +74,9 @@ class KnnLmDatastore:
     def build(self, keys: np.ndarray, values: np.ndarray):
         self.keys = np.asarray(keys, np.float32)
         self.values = np.asarray(values, np.int32)
+        # invalidate any growth buffer from a previous build
+        self._keys_buf = self.keys
+        self._vals_buf = self.values
         self.engine = SMTreeEngine.build(
             self.keys, ids=np.arange(len(values)),
             capacity=self.cfg.capacity, metric=self.cfg.metric)
@@ -78,8 +84,8 @@ class KnnLmDatastore:
 
     def add(self, key: np.ndarray, value: int):
         oid = len(self.values)
-        self.keys = np.vstack([self.keys, key[None]])
-        self.values = np.append(self.values, np.int32(value))
+        self._append_history(np.asarray(key, np.float32)[None],
+                             np.asarray([value], np.int32))
         self.engine.insert(key, oid)
         self._place()   # host-side split paths rebuild arrays off-mesh
 
@@ -93,6 +99,69 @@ class KnnLmDatastore:
         for oid in range(oid_bound):
             if self.evict(oid):
                 n += 1
+        return n
+
+    # -- batched online mutation (repro.stream) -------------------------
+    def enable_stream(self, wal_dir: str | None = None, **kw):
+        """Route ``add_batch``/``evict_batch`` through the repro.stream
+        write pipeline: conflict-free cohort batching (one device dispatch
+        per batch instead of one per entry) with optional WAL durability.
+        Call after ``build``."""
+        from repro.stream import StreamingEngine, WriteAheadLog
+        wal = WriteAheadLog(wal_dir) if wal_dir else None
+        self.stream = StreamingEngine(self.engine.tree, wal=wal, **kw)
+        return self.stream
+
+    def _append_history(self, keys: np.ndarray, values: np.ndarray) -> None:
+        """Amortised-O(1) append to the oid-indexed key/value history.
+
+        ``self.keys``/``self.values`` stay plain dense arrays (oid indexes
+        directly into them — evicted rows keep their slot), but growth goes
+        through capacity doubling: a per-step ``np.vstack`` over the full
+        history would make sustained ``--knn-mutate`` serving quadratic."""
+        n, b = len(self.values), len(values)
+        cap = len(self._keys_buf)
+        if n + b > cap:
+            new_cap = max(2 * cap, n + b, 1024)
+            kb = np.zeros((new_cap, self.dim), np.float32)
+            vb = np.zeros((new_cap,), np.int32)
+            kb[:n] = self.keys
+            vb[:n] = self.values
+            self._keys_buf, self._vals_buf = kb, vb
+        self._keys_buf[n:n + b] = keys
+        self._vals_buf[n:n + b] = values
+        self.keys = self._keys_buf[:n + b]
+        self.values = self._vals_buf[:n + b]
+
+    def add_batch(self, keys: np.ndarray, values: np.ndarray) -> np.ndarray:
+        """Insert a batch of (key, next-token) pairs; returns their oids.
+        Under serving this is the live-growth path: each decode step's
+        [b, D] hidden-state cohort lands in one batched apply."""
+        keys = np.asarray(keys, np.float32)
+        values = np.asarray(values, np.int32)
+        oids = (len(self.values) + np.arange(len(values))).astype(np.int32)
+        self._append_history(keys, values)
+        if self.stream is not None:
+            self.stream.insert_batch(keys, oids)
+            self.engine.tree = self.stream.tree
+        else:
+            for k, o in zip(keys, oids):
+                self.engine.insert(k, int(o))
+        self._place()
+        return oids
+
+    def evict_batch(self, oids: np.ndarray) -> int:
+        """Batched online eviction (sliding-window memory); returns the
+        number of entries actually removed."""
+        from repro.core.smtree import ST_APPLIED
+        oids = np.asarray(oids, np.int32)
+        if self.stream is not None:
+            res = self.stream.delete_batch(self.keys[oids], oids)
+            self.engine.tree = self.stream.tree
+            n = int((res.statuses == ST_APPLIED).sum())
+        else:
+            n = sum(self.evict(int(o)) for o in oids)
+        self._place()
         return n
 
     def knn_logits(self, h: jax.Array, vocab: int) -> jax.Array:

@@ -1,0 +1,23 @@
+"""repro.stream — the online-mutation subsystem (DESIGN.md §10).
+
+Turns the SM-tree's O(h) insert/delete fast paths into a serving-grade
+write pipeline:
+
+  * ``batcher``   — conflict-free mutation cohorts applied by one jitted
+    ``lax.scan`` per cohort; overflow/underflow rows escalate to the host
+    control plane.
+  * ``wal``       — append-only write-ahead log (segment rotation, strict
+    JSON manifest); every acknowledged batch is replayable.
+  * ``epoch``     — epoch-based snapshot handoff: readers pin immutable
+    tree versions while the writer advances.
+  * ``rebalance`` — skew detection + shard rebuilds after heavy delete
+    streams (the ROADMAP forest-rebalancing item).
+  * ``pipeline``  — ``StreamingEngine`` / ``StreamingForest`` orchestrators
+    with snapshot + WAL-tail restore (bitwise-deterministic).
+"""
+from repro.stream.batcher import MutationBatcher, cut_cohorts  # noqa: F401
+from repro.stream.epoch import EpochManager  # noqa: F401
+from repro.stream.pipeline import StreamingEngine, StreamingForest  # noqa: F401
+from repro.stream.rebalance import (collect_stats, needs_rebalance,  # noqa: F401
+                                    rebalance_shards)
+from repro.stream.wal import WriteAheadLog, iter_wal  # noqa: F401

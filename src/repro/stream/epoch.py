@@ -1,0 +1,88 @@
+"""Epoch-based snapshot handoff between one writer and many readers.
+
+JAX arrays are immutable, so every published tree version is already a
+consistent snapshot — what the epoch layer adds is the *protocol*: readers
+(``forest_knn`` cohorts, the kNN-LM serving mixer) pin the epoch they are
+querying so the version they hold is never retired out from under a
+long-running descent, while the writer keeps advancing the next epoch
+through the batcher.  Handoff is O(1) (a dict insert); no copy, no lock on
+the data plane (DESIGN.md §10).
+
+    mgr = EpochManager(tree0)
+    e, t = mgr.acquire()          # reader pins the current version
+    ...query t...                 # immutable, whatever the writer does
+    mgr.release(e)                # retirement happens here if superseded
+    mgr.publish(new_tree)         # writer hands off the next epoch
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+__all__ = ["EpochManager"]
+
+
+class EpochManager:
+    """Versioned publish/acquire/release bookkeeping for immutable trees.
+
+    ``keep`` bounds how many *unpinned* superseded versions stay resident
+    (0 = only the latest); pinned versions always survive until their last
+    reader releases them."""
+
+    def __init__(self, tree: Any, *, epoch: int = 0, keep: int = 0):
+        self.keep = int(keep)
+        self._lock = threading.Lock()
+        self._versions: dict[int, Any] = {epoch: tree}
+        self._refs: dict[int, int] = {epoch: 0}
+        self._latest = epoch
+
+    # -- reader side -------------------------------------------------------
+    @property
+    def epoch(self) -> int:
+        return self._latest
+
+    def current(self) -> tuple[int, Any]:
+        """Borrow the latest version without pinning (single-threaded
+        readers that finish before the next retire)."""
+        with self._lock:
+            return self._latest, self._versions[self._latest]
+
+    def acquire(self) -> tuple[int, Any]:
+        """Pin and return the latest (epoch, tree)."""
+        with self._lock:
+            e = self._latest
+            self._refs[e] += 1
+            return e, self._versions[e]
+
+    def release(self, epoch: int) -> None:
+        with self._lock:
+            if epoch not in self._refs:
+                raise KeyError(f"epoch {epoch} was never published")
+            if self._refs[epoch] <= 0:
+                raise ValueError(f"epoch {epoch} release without acquire")
+            self._refs[epoch] -= 1
+            self._retire_locked()
+
+    # -- writer side -------------------------------------------------------
+    def publish(self, tree: Any) -> int:
+        """Install ``tree`` as the next epoch; returns its number."""
+        with self._lock:
+            self._latest += 1
+            self._versions[self._latest] = tree
+            self._refs[self._latest] = 0
+            self._retire_locked()
+            return self._latest
+
+    # -- retirement --------------------------------------------------------
+    def _retire_locked(self) -> None:
+        stale = sorted(e for e in self._versions
+                       if e != self._latest and self._refs[e] == 0)
+        for e in stale[:max(0, len(stale) - self.keep)]:
+            del self._versions[e]
+            del self._refs[e]
+
+    @property
+    def resident(self) -> list[int]:
+        """Epoch numbers currently held (diagnostics)."""
+        with self._lock:
+            return sorted(self._versions)

@@ -1,0 +1,312 @@
+"""Serving-grade write pipelines: WAL ▸ batcher ▸ epochs ▸ snapshots.
+
+Two orchestrators over the stream primitives:
+
+  * ``StreamingEngine``  — one SM-tree (the kNN-LM datastore case): every
+    mutation batch is framed into the WAL *before* it is applied (write-
+    ahead), applied through the conflict-free-cohort batcher, and the
+    resulting immutable tree version is published as the next epoch for
+    concurrent readers.
+  * ``StreamingForest``  — a sharded SM-forest: rows are routed to their
+    owner shard (round-robin hash for new ids, ownership map — maintained
+    across rebalances — for deletes), applied shard-at-a-time through the
+    same batcher, with background ``maintenance()`` firing the rebalancer
+    when delete skew builds up.
+
+Both support ``snapshot()`` (atomic checkpoint carrying the tree geometry
+and the WAL high-water mark) and ``restore()`` = snapshot + WAL tail
+replay.  Replay routes every record back through the identical code paths
+— batch records through the batcher, rebalance records through
+``rebalance_shards`` with the recorded seed — so the restored state is
+**bitwise identical** to the straight-line run (tests/test_stream_e2e.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import smtree
+from repro.core.smtree import OP_DELETE, OP_INSERT, TreeArrays, empty_tree
+from repro.stream.batcher import BatchResult, MutationBatcher
+from repro.stream.epoch import EpochManager
+from repro.stream.rebalance import (collect_stats, live_objects,
+                                    needs_rebalance, rebalance_shards)
+from repro.stream.wal import KIND_BATCH, WriteAheadLog
+
+__all__ = ["StreamingEngine", "StreamingForest"]
+
+
+def _mutation_log(xs, oids, op: int):
+    xs = np.asarray(xs, np.float32)
+    oids = np.asarray(oids, np.int32)
+    return np.full(len(oids), op, np.int32), xs, oids
+
+
+class StreamingEngine:
+    """WAL-backed batched mutation pipeline over a single SM-tree."""
+
+    def __init__(self, tree: TreeArrays, *, wal: WriteAheadLog | None = None,
+                 ckpt=None, max_batch: int = 4096, donate: bool = False):
+        # donation would consume the buffers published as the previous
+        # epoch out from under pinned readers — see MutationBatcher
+        self.batcher = MutationBatcher(tree, max_batch=max_batch,
+                                       donate=donate)
+        self.wal = wal
+        self.ckpt = ckpt          # dist.checkpoint.CheckpointManager
+        self.epochs = EpochManager(tree)
+        self._step = 0
+
+    @property
+    def tree(self) -> TreeArrays:
+        return self.batcher.tree
+
+    # -- mutations ---------------------------------------------------------
+    def apply(self, ops, xs, oids, *, log: bool = True) -> BatchResult:
+        """Apply one mutation batch; frames it into the WAL first so an
+        acknowledged batch is always replayable."""
+        if log and self.wal is not None:
+            self.wal.append_batch(np.asarray(ops, np.int8), xs, oids)
+        res = self.batcher.apply(ops, xs, oids)
+        self.epochs.publish(self.tree)
+        return res
+
+    def insert_batch(self, xs, oids, **kw) -> BatchResult:
+        ops, xs, oids = _mutation_log(xs, oids, OP_INSERT)
+        return self.apply(ops, xs, oids, **kw)
+
+    def delete_batch(self, xs, oids, **kw) -> BatchResult:
+        ops, xs, oids = _mutation_log(xs, oids, OP_DELETE)
+        return self.apply(ops, xs, oids, **kw)
+
+    # -- snapshots ---------------------------------------------------------
+    def _extra(self) -> dict:
+        t = self.tree
+        return {"kind": "smtree", "capacity": t.capacity, "dim": t.dim,
+                "metric": t.metric, "max_nodes": t.max_nodes,
+                "min_fill": t.min_fill,
+                "wal_seq": (self.wal.next_seq - 1 if self.wal is not None
+                            else -1)}
+
+    def snapshot(self, step: int | None = None) -> int:
+        """Checkpoint the current tree + WAL high-water mark."""
+        if self.ckpt is None:
+            raise ValueError("no CheckpointManager configured")
+        step = self._step if step is None else step
+        self.ckpt.save(step, {"tree": self.tree}, extra=self._extra())
+        self._step = step + 1
+        return step
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, *, wal: WriteAheadLog | None = None,
+                ckpt=None, **kw) -> "StreamingEngine":
+        """Last snapshot + WAL tail replay (bitwise-deterministic)."""
+        from repro.dist.checkpoint import read_manifest, restore_checkpoint
+        manifest = read_manifest(ckpt_dir)
+        extra = manifest["extra"]
+        template = _tree_template(extra)
+        state, _ = restore_checkpoint(ckpt_dir, {"tree": template},
+                                      step=manifest["step"])
+        eng = cls(state["tree"], wal=wal, ckpt=ckpt, **kw)
+        eng._step = manifest["step"] + 1
+        if wal is not None:
+            for rec in wal.replay(after_seq=extra["wal_seq"]):
+                if rec.kind == KIND_BATCH:
+                    eng.apply(rec.ops.astype(np.int32), rec.xs, rec.oids,
+                              log=False)
+        return eng
+
+
+def _tree_template(extra: dict, max_nodes: int | None = None) -> TreeArrays:
+    t = empty_tree(dim=extra["dim"], capacity=extra["capacity"],
+                   max_nodes=max_nodes or extra["max_nodes"],
+                   metric=extra["metric"],
+                   min_fill_frac=extra["min_fill"] / extra["capacity"])
+    return t
+
+
+class StreamingForest:
+    """WAL-backed batched mutation pipeline over a sharded SM-forest.
+
+    Host-centric control plane: shards are held as per-shard TreeArrays and
+    mutated shard-at-a-time (the mesh-resident stacked form for shard_map
+    serving is materialised on demand via ``stacked()`` /
+    ``core.distributed.forest_apply_mutations``)."""
+
+    def __init__(self, trees: list[TreeArrays], *,
+                 wal: WriteAheadLog | None = None, ckpt=None,
+                 max_batch: int = 4096, max_skew: float = 1.5,
+                 min_objects: int = 64):
+        self.batchers = [MutationBatcher(t, max_batch=max_batch)
+                         for t in trees]
+        self.wal = wal
+        self.ckpt = ckpt
+        self.max_skew = max_skew
+        self.min_objects = min_objects
+        self.epochs = EpochManager(tuple(self.trees))
+        self.owner: dict[int, int] = {}
+        self._step = 0
+        self.n_rebalances = 0
+        self._rebuild_ownership()
+
+    @property
+    def trees(self) -> list[TreeArrays]:
+        return [b.tree for b in self.batchers]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.batchers)
+
+    @property
+    def n_objects(self) -> int:
+        return sum(t.n_objects for t in self.trees)
+
+    def _rebuild_ownership(self) -> None:
+        self.owner = {}
+        for s, t in enumerate(self.trees):
+            _, oids = live_objects(t)
+            for o in oids:
+                self.owner[int(o)] = s
+
+    # -- routing -----------------------------------------------------------
+    def route(self, ops, oids) -> np.ndarray:
+        """Owner shard per row.  Deletes follow the ownership map (objects
+        migrate under rebalancing); new inserts hash round-robin
+        (oid mod S, matching ``build_forest``'s initial partition).  The
+        map is scanned in log order so same-batch insert→delete pairs
+        route consistently."""
+        S = self.n_shards
+        pending = dict(self.owner)
+        out = np.empty(len(oids), np.int32)
+        for i, (op, oid) in enumerate(zip(ops, oids)):
+            o = int(oid)
+            s = pending.get(o, o % S)
+            out[i] = s
+            if op == OP_INSERT:
+                pending[o] = s
+            elif op == OP_DELETE:
+                pending.pop(o, None)
+        return out
+
+    # -- mutations ---------------------------------------------------------
+    def apply(self, ops, xs, oids, *, log: bool = True) -> BatchResult:
+        ops = np.asarray(ops, np.int32)
+        xs = np.asarray(xs, np.float32)
+        oids = np.asarray(oids, np.int32)
+        if log and self.wal is not None:
+            self.wal.append_batch(ops.astype(np.int8), xs, oids)
+        owner = self.route(ops, oids)
+        statuses = np.zeros(len(ops), np.int32)
+        n_fast = n_esc = n_coh = 0
+        for s in range(self.n_shards):
+            rows = np.nonzero(owner == s)[0]
+            if not len(rows):
+                continue
+            r = self.batchers[s].apply(ops[rows], xs[rows], oids[rows])
+            statuses[rows] = r.statuses
+            n_fast += r.n_fast
+            n_esc += r.n_escalated
+            n_coh += r.n_cohorts
+        applied = statuses == smtree.ST_APPLIED
+        for i in np.nonzero(applied)[0]:
+            if ops[i] == OP_INSERT:
+                self.owner[int(oids[i])] = int(owner[i])
+            else:
+                self.owner.pop(int(oids[i]), None)
+        self.epochs.publish(tuple(self.trees))
+        return BatchResult(statuses, n_fast, n_esc, n_coh)
+
+    def insert_batch(self, xs, oids, **kw) -> BatchResult:
+        ops, xs, oids = _mutation_log(xs, oids, OP_INSERT)
+        return self.apply(ops, xs, oids, **kw)
+
+    def delete_batch(self, xs, oids, **kw) -> BatchResult:
+        ops, xs, oids = _mutation_log(xs, oids, OP_DELETE)
+        return self.apply(ops, xs, oids, **kw)
+
+    # -- queries (host-side scatter-gather; mesh serving uses forest_knn) --
+    def knn(self, queries, *, k: int = 8, max_frontier: int = 64):
+        """Global kNN over the current epoch's shards: per-shard cohort
+        descent + host top-k merge.  Returns (dists [b, k], ids [b, k])."""
+        _, trees = self.epochs.current()
+        ds, ids = [], []
+        for t in trees:
+            res = smtree.knn(t, queries, k=k, max_frontier=max_frontier)
+            ds.append(np.asarray(res.dists))
+            ids.append(np.asarray(res.ids))
+        d = np.concatenate(ds, axis=1)
+        i = np.concatenate(ids, axis=1)
+        order = np.argsort(d, axis=1, kind="stable")[:, :k]
+        return np.take_along_axis(d, order, 1), np.take_along_axis(i, order, 1)
+
+    # -- maintenance -------------------------------------------------------
+    def maintenance(self, *, log: bool = True) -> bool:
+        """Detect skew and rebalance; returns True when a rebuild fired."""
+        stats = collect_stats(self.trees)
+        if not needs_rebalance(stats, max_skew=self.max_skew,
+                               min_objects=self.min_objects):
+            return False
+        seed = (self.wal.next_seq if self.wal is not None
+                else self.n_rebalances)
+        self._run_rebalance(int(seed), log=log)
+        return True
+
+    def _run_rebalance(self, seed: int, *, log: bool) -> None:
+        if log and self.wal is not None:
+            self.wal.append_rebalance({"seed": seed})
+        trees, moved, _ = rebalance_shards(self.trees, seed=seed)
+        for b, t in zip(self.batchers, trees):
+            b.tree = t
+        self.n_rebalances += 1
+        self._rebuild_ownership()
+        self.epochs.publish(tuple(self.trees))
+
+    # -- snapshots ---------------------------------------------------------
+    def stacked(self) -> TreeArrays:
+        from repro.core.distributed import stack_trees
+        return stack_trees(self.trees)
+
+    def _extra(self) -> dict:
+        proto = self.trees[0]
+        return {"kind": "smforest", "n_shards": self.n_shards,
+                "capacity": proto.capacity, "dim": proto.dim,
+                "metric": proto.metric, "min_fill": proto.min_fill,
+                "shard_max_nodes": [t.max_nodes for t in self.trees],
+                "n_rebalances": self.n_rebalances,
+                "wal_seq": (self.wal.next_seq - 1 if self.wal is not None
+                            else -1)}
+
+    def snapshot(self, step: int | None = None) -> int:
+        if self.ckpt is None:
+            raise ValueError("no CheckpointManager configured")
+        step = self._step if step is None else step
+        self.ckpt.save(step, {"forest": self.stacked()},
+                       extra=self._extra())
+        self._step = step + 1
+        return step
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, *, wal: WriteAheadLog | None = None,
+                ckpt=None, **kw) -> "StreamingForest":
+        """Last snapshot + WAL tail replay (bitwise-deterministic: batch
+        records re-run the batcher, rebalance records re-run the rebuild
+        with the recorded seed)."""
+        from repro.core.distributed import stack_trees, unstack_forest
+        from repro.dist.checkpoint import read_manifest, restore_checkpoint
+        manifest = read_manifest(ckpt_dir)
+        extra = manifest["extra"]
+        shard_nodes = extra["shard_max_nodes"]
+        template = stack_trees([_tree_template(extra, max_nodes=m)
+                                for m in shard_nodes])
+        state, _ = restore_checkpoint(ckpt_dir, {"forest": template},
+                                      step=manifest["step"])
+        trees = unstack_forest(state["forest"], max_nodes=shard_nodes)
+        forest = cls(trees, wal=wal, ckpt=ckpt, **kw)
+        forest._step = manifest["step"] + 1
+        forest.n_rebalances = extra.get("n_rebalances", 0)
+        if wal is not None:
+            for rec in wal.replay(after_seq=extra["wal_seq"]):
+                if rec.kind == KIND_BATCH:
+                    forest.apply(rec.ops.astype(np.int32), rec.xs, rec.oids,
+                                 log=False)
+                else:
+                    forest._run_rebalance(int(rec.params["seed"]), log=False)
+        return forest

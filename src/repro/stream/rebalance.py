@@ -1,0 +1,161 @@
+"""Background forest rebalancing after skewed mutation streams.
+
+A sharded SM-forest degrades under skew: a delete stream concentrated on a
+few shards leaves them underfull (every query still pays their descent,
+and their nodes sit near min-fill) while insert-heavy shards deepen.  This
+module closes the ROADMAP item: it tracks per-shard live-object counts and
+node fill-factor histograms, detects skew, and redistributes objects by
+**rebuilding only the affected shards with ``bulk_build`` over donor
+ranges** — donors shed their highest-id surplus, receivers absorb it, and
+untouched shards keep their arrays bitwise intact.
+
+Everything here is deterministic given the input trees and a seed: the
+decision to rebalance is recorded in the WAL (``append_rebalance``) so a
+snapshot + tail replay re-executes the identical rebuild at the identical
+point in the mutation order (repro.stream.pipeline, DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.smtree import TreeArrays, bulk_build, empty_tree
+
+__all__ = ["ShardStats", "collect_stats", "needs_rebalance",
+           "rebalance_shards", "live_objects"]
+
+_FILL_BINS = np.array([0.0, 0.25, 0.5, 0.75, 1.0 + 1e-9])
+
+
+@dataclasses.dataclass
+class ShardStats:
+    live_counts: np.ndarray    # [S] live objects per shard
+    fill_hist: np.ndarray      # [S, 4] alive-node fill-fraction histogram
+    free_nodes: np.ndarray     # [S] unallocated node slots
+
+    @property
+    def total(self) -> int:
+        return int(self.live_counts.sum())
+
+    @property
+    def skew(self) -> float:
+        """Most-loaded vs least-loaded shard, add-one smoothed
+        (1.0 = perfectly balanced).  max/min rather than max/mean: a
+        single shard drained by a skewed delete stream barely moves the
+        mean of S shards but collapses the min — exactly the case the
+        rebalancer exists for."""
+        if self.live_counts.size == 0:
+            return 1.0
+        return float((self.live_counts.max() + 1)
+                     / (self.live_counts.min() + 1))
+
+
+def live_objects(tree: TreeArrays) -> tuple[np.ndarray, np.ndarray]:
+    """(vectors [m, dim], ids [m]) of every live object, in deterministic
+    node-major order."""
+    valid = np.asarray(tree.valid)
+    mask = (valid & np.asarray(tree.is_leaf)[:, None]
+            & np.asarray(tree.alive)[:, None])
+    return np.asarray(tree.vecs)[mask], np.asarray(tree.oid)[mask]
+
+
+def collect_stats(trees: list[TreeArrays]) -> ShardStats:
+    counts, hists, free = [], [], []
+    for t in trees:
+        alive = np.asarray(t.alive)
+        cnt = np.asarray(t.count)
+        counts.append(t.n_objects)
+        fills = cnt[alive] / t.capacity
+        hists.append(np.histogram(fills, bins=_FILL_BINS)[0])
+        free.append(int((~alive).sum()))
+    return ShardStats(np.asarray(counts, np.int64),
+                      np.stack(hists).astype(np.int64),
+                      np.asarray(free, np.int64))
+
+
+def needs_rebalance(stats: ShardStats, *, max_skew: float = 1.5,
+                    min_objects: int = 64) -> bool:
+    """Trigger policy: fire when the most loaded shard holds ``max_skew``×
+    the least loaded one.  Tiny forests never trigger — rebuilding them
+    costs more than the skew."""
+    if stats.total < min_objects:
+        return False
+    return stats.skew > max_skew
+
+
+def _targets(counts: np.ndarray) -> np.ndarray:
+    """Balanced per-shard targets: total split as evenly as integers allow
+    (first ``total mod S`` shards take the extra object)."""
+    S = len(counts)
+    total = int(counts.sum())
+    base = total // S
+    t = np.full(S, base, np.int64)
+    t[:total - base * S] += 1
+    return t
+
+
+def rebalance_shards(trees: list[TreeArrays], *, seed: int = 0,
+                     ) -> tuple[list[TreeArrays], int, dict]:
+    """Redistribute live objects toward balanced shard sizes.
+
+    Donors (above target) shed their highest-id objects; the pooled
+    surplus fills receivers (below target) in shard order.  Every affected
+    shard is rebuilt with ``bulk_build`` over its new object set (seeded
+    ``seed + shard``); unaffected shards are returned as-is (bitwise).
+    Returns (trees, n_moved, params) where ``params`` round-trips through
+    the WAL for deterministic replay."""
+    S = len(trees)
+    per_shard = [live_objects(t) for t in trees]
+    counts = np.asarray([len(oids) for _, oids in per_shard], np.int64)
+    targets = _targets(counts)
+
+    pool_vecs: list[np.ndarray] = []
+    pool_oids: list[np.ndarray] = []
+    keep: list[tuple[np.ndarray, np.ndarray]] = []
+    touched = [False] * S
+    for s in range(S):
+        vecs, oids = per_shard[s]
+        surplus = int(counts[s] - targets[s])
+        if surplus > 0:
+            order = np.argsort(oids, kind="stable")
+            donate, retain = order[-surplus:], order[:-surplus]
+            pool_vecs.append(vecs[donate])
+            pool_oids.append(oids[donate])
+            keep.append((vecs[retain], oids[retain]))
+            touched[s] = True
+        else:
+            keep.append((vecs, oids))
+    moved = int(sum(len(o) for o in pool_oids))
+    if moved == 0:
+        return trees, 0, {"seed": int(seed), "moved": 0}
+    pv = np.concatenate(pool_vecs)
+    po = np.concatenate(pool_oids)
+    order = np.argsort(po, kind="stable")
+    pv, po = pv[order], po[order]
+
+    out: list[TreeArrays] = []
+    cursor = 0
+    proto = trees[0]
+    for s in range(S):
+        vecs, oids = keep[s]
+        deficit = int(targets[s] - counts[s])
+        if deficit > 0:
+            vecs = np.concatenate([vecs, pv[cursor:cursor + deficit]])
+            oids = np.concatenate([oids, po[cursor:cursor + deficit]])
+            cursor += deficit
+            touched[s] = True
+        if not touched[s]:
+            out.append(trees[s])
+        elif len(oids) == 0:
+            out.append(empty_tree(
+                dim=proto.dim, capacity=proto.capacity,
+                max_nodes=max(16, trees[s].max_nodes), metric=proto.metric,
+                min_fill_frac=proto.min_fill / proto.capacity))
+        else:
+            out.append(bulk_build(
+                np.asarray(vecs, np.float32), ids=np.asarray(oids),
+                capacity=proto.capacity, metric=proto.metric,
+                min_fill_frac=proto.min_fill / proto.capacity,
+                seed=int(seed) + s))
+    return out, moved, {"seed": int(seed), "moved": moved}

@@ -1,0 +1,303 @@
+"""Append-only write-ahead log for SM-tree mutation streams.
+
+Every mutation batch the stream batcher applies is first framed into the
+active segment file, so any tree state is reproducible as *last snapshot +
+WAL tail replay* (repro.stream.pipeline) — the same bitwise-deterministic
+kill/resume contract the training checkpoints carry (DESIGN.md §7/§10).
+
+Layout (one directory per log):
+
+    <dir>/manifest.json           strict JSON: sealed segments + next_seq
+    <dir>/segment_00000000.wal    framed records, append-only
+    <dir>/segment_00000001.wal    ...
+
+Record framing (little-endian):
+
+    u32   header length H
+    H     bytes of strict-JSON header
+          {"kind": "batch"|"rebalance", "seq": n, ...payload geometry...}
+    P     payload bytes (ops int8 · oids int32 · xs f32, in that order;
+          empty for control records), crc32 recorded in the header
+
+The manifest is rewritten atomically (tmp-then-rename) when a segment
+seals; the active segment is recovered by scanning on open.  A torn tail
+record in the *active* segment (crash mid-append) terminates replay
+cleanly — exactly the batch that never acknowledged — while corruption in
+a sealed segment raises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+import zlib
+from typing import Any, Iterator
+
+import numpy as np
+
+_MANIFEST = "manifest.json"
+_SEG_PREFIX = "segment_"
+_SEG_SUFFIX = ".wal"
+_LEN = struct.Struct("<I")
+
+KIND_BATCH = "batch"
+KIND_REBALANCE = "rebalance"
+
+
+@dataclasses.dataclass
+class WalRecord:
+    kind: str
+    seq: int
+    ops: np.ndarray | None = None      # [n] int8  (batch records)
+    oids: np.ndarray | None = None     # [n] int32
+    xs: np.ndarray | None = None       # [n, dim] f32
+    params: dict | None = None         # control records (rebalance)
+
+
+def _segment_name(index: int) -> str:
+    return f"{_SEG_PREFIX}{index:08d}{_SEG_SUFFIX}"
+
+
+def _segment_index(name: str) -> int:
+    return int(name[len(_SEG_PREFIX):-len(_SEG_SUFFIX)])
+
+
+def _encode(record: WalRecord) -> bytes:
+    header: dict[str, Any] = {"kind": record.kind, "seq": record.seq}
+    payload = b""
+    if record.kind == KIND_BATCH:
+        ops = np.ascontiguousarray(record.ops, np.int8)
+        oids = np.ascontiguousarray(record.oids, np.int32)
+        xs = np.ascontiguousarray(record.xs, np.float32)
+        assert ops.shape == oids.shape == xs.shape[:1], \
+            (ops.shape, oids.shape, xs.shape)
+        payload = ops.tobytes() + oids.tobytes() + xs.tobytes()
+        header["n"] = int(ops.shape[0])
+        header["dim"] = int(xs.shape[1])
+    else:
+        header["params"] = record.params or {}
+    header["crc"] = zlib.crc32(payload)
+    hb = json.dumps(header, sort_keys=True, allow_nan=False).encode()
+    return _LEN.pack(len(hb)) + hb + payload
+
+
+def _decode_header(header: dict) -> tuple[int, WalRecord | None]:
+    """(payload length, partially-built record)."""
+    if header["kind"] == KIND_BATCH:
+        n, dim = int(header["n"]), int(header["dim"])
+        return n * (1 + 4 + 4 * dim), WalRecord(KIND_BATCH, int(header["seq"]))
+    return 0, WalRecord(header["kind"], int(header["seq"]),
+                        params=header.get("params", {}))
+
+
+def _scan_segment(path: str, *, sealed: bool):
+    """(records, valid_byte_length) of one segment.  A truncated/corrupt
+    tail frame is tolerated (scan stops, its bytes excluded from
+    valid_byte_length) only when ``sealed`` is False."""
+    with open(path, "rb") as f:
+        data = f.read()
+    off, total = 0, len(data)
+    records: list[WalRecord] = []
+
+    def torn(msg: str):
+        if sealed:
+            raise ValueError(f"corrupt sealed WAL segment {path}: {msg}")
+
+    while off < total:
+        if off + _LEN.size > total:
+            torn("truncated length prefix")
+            break
+        (hlen,) = _LEN.unpack_from(data, off)
+        if off + _LEN.size + hlen > total:
+            torn("truncated header")
+            break
+        try:
+            header = json.loads(data[off + _LEN.size:off + _LEN.size + hlen])
+            plen, rec = _decode_header(header)
+        except (ValueError, KeyError):
+            torn("unparseable header")
+            break
+        body_off = off + _LEN.size + hlen
+        if body_off + plen > total:
+            torn("truncated payload")
+            break
+        payload = data[body_off:body_off + plen]
+        if zlib.crc32(payload) != header.get("crc"):
+            torn("payload crc mismatch")
+            break
+        if rec.kind == KIND_BATCH:
+            n, dim = int(header["n"]), int(header["dim"])
+            rec.ops = np.frombuffer(payload, np.int8, n, 0).copy()
+            rec.oids = np.frombuffer(payload, np.int32, n, n).copy()
+            rec.xs = np.frombuffer(payload, np.float32, n * dim,
+                                   n * 5).reshape(n, dim).copy()
+        records.append(rec)
+        off = body_off + plen
+    return records, off
+
+
+def _read_segment(path: str, *, sealed: bool) -> Iterator[WalRecord]:
+    yield from _scan_segment(path, sealed=sealed)[0]
+
+
+def _scan_dir(directory: str) -> list[str]:
+    if not os.path.isdir(directory):
+        return []
+    return sorted(n for n in os.listdir(directory)
+                  if n.startswith(_SEG_PREFIX) and n.endswith(_SEG_SUFFIX))
+
+
+def iter_wal(directory: str, after_seq: int = -1) -> Iterator[WalRecord]:
+    """Replay records with seq > ``after_seq`` in order, read-only.
+
+    Safe to call while another process/handle appends: sealed segments are
+    immutable and the active segment tolerates a torn tail."""
+    names = _scan_dir(directory)
+    sealed_names = set()
+    mpath = os.path.join(directory, _MANIFEST)
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            sealed_names = {s["name"] for s in json.load(f)["segments"]}
+    for i, name in enumerate(names):
+        sealed = name in sealed_names or i < len(names) - 1
+        for rec in _read_segment(os.path.join(directory, name),
+                                 sealed=sealed):
+            if rec.seq > after_seq:
+                yield rec
+
+
+class WriteAheadLog:
+    """Appender with segment rotation; one writer per directory.
+
+    ``sync=True`` fsyncs the segment after every append (durability across
+    power loss; cost measured in benchmarks/bench_stream.py)."""
+
+    def __init__(self, directory: str, *, segment_max_records: int = 1024,
+                 sync: bool = False):
+        self.directory = directory
+        self.segment_max_records = int(segment_max_records)
+        self.sync = sync
+        os.makedirs(directory, exist_ok=True)
+        self._file = None
+        self._recover()
+
+    # -- recovery / bookkeeping ------------------------------------------
+    def _recover(self) -> None:
+        names = _scan_dir(self.directory)
+        self.next_seq = 0
+        self._active_records = 0
+        self._sealed: list[dict] = []   # manifest entries, kept incrementally
+        self._dir_dirty = True          # directory entry not yet fsync'd
+        if names:
+            self._active_index = _segment_index(names[-1])
+            for i, name in enumerate(names):
+                path = os.path.join(self.directory, name)
+                sealed = i < len(names) - 1
+                records, valid_len = _scan_segment(path, sealed=sealed)
+                for rec in records:
+                    self.next_seq = max(self.next_seq, rec.seq + 1)
+                if sealed:
+                    self._sealed.append(self._manifest_entry(name, records))
+                else:
+                    self._active_records = len(records)
+                    if valid_len < os.path.getsize(path):
+                        # torn tail from a crash mid-append: truncate it so
+                        # post-recovery appends land after the last complete
+                        # record instead of behind unreadable garbage (which
+                        # replay would silently stop at)
+                        with open(path, "r+b") as f:
+                            f.truncate(valid_len)
+        else:
+            self._active_index = 0
+
+    @staticmethod
+    def _manifest_entry(name: str, records: list[WalRecord]) -> dict:
+        return {"name": name,
+                "first_seq": records[0].seq if records else None,
+                "last_seq": records[-1].seq if records else None,
+                "records": len(records)}
+
+    def _active_path(self) -> str:
+        return os.path.join(self.directory, _segment_name(self._active_index))
+
+    def _ensure_open(self):
+        if self._file is None:
+            self._file = open(self._active_path(), "ab")
+            self._dir_dirty = True
+        return self._file
+
+    def _write_manifest(self) -> None:
+        doc = {"version": 1, "segments": self._sealed,
+               "next_seq": self.next_seq}
+        tmp = os.path.join(self.directory, f".tmp-{_MANIFEST}.{os.getpid()}")
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True, allow_nan=False)
+            f.write("\n")
+            if self.sync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.rename(tmp, os.path.join(self.directory, _MANIFEST))
+        if self.sync:
+            from repro.dist.checkpoint import fsync_directory
+            fsync_directory(self.directory)
+
+    def _rotate_if_full(self) -> None:
+        if self._active_records < self.segment_max_records:
+            return
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+        name = _segment_name(self._active_index)
+        records, _ = _scan_segment(os.path.join(self.directory, name),
+                                   sealed=True)
+        self._sealed.append(self._manifest_entry(name, records))
+        self._active_index += 1
+        self._active_records = 0
+        self._write_manifest()
+
+    # -- appends ----------------------------------------------------------
+    def _append(self, rec: WalRecord) -> int:
+        f = self._ensure_open()
+        f.write(_encode(rec))
+        f.flush()
+        if self.sync:
+            os.fsync(f.fileno())
+            if self._dir_dirty:
+                # a freshly created segment file's *directory entry* must be
+                # durable too, or power loss drops the whole segment even
+                # though its records were fsync'd (same rule as the
+                # checkpoint commit, DESIGN.md §9)
+                from repro.dist.checkpoint import fsync_directory
+                fsync_directory(self.directory)
+                self._dir_dirty = False
+        self.next_seq = rec.seq + 1
+        self._active_records += 1
+        self._rotate_if_full()
+        return rec.seq
+
+    def append_batch(self, ops, xs, oids) -> int:
+        """Frame one mutation batch; returns its sequence number."""
+        return self._append(WalRecord(
+            KIND_BATCH, self.next_seq, ops=np.asarray(ops, np.int8),
+            oids=np.asarray(oids, np.int32), xs=np.asarray(xs, np.float32)))
+
+    def append_rebalance(self, params: dict) -> int:
+        """Frame a rebalance decision so tail replay re-executes it at the
+        exact same point in the mutation order."""
+        return self._append(WalRecord(KIND_REBALANCE, self.next_seq,
+                                      params=params))
+
+    def replay(self, after_seq: int = -1) -> Iterator[WalRecord]:
+        return iter_wal(self.directory, after_seq)
+
+    def close(self) -> None:
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -66,6 +66,64 @@ def scenario_forest_delete():
             assert ids[i] != victims[i], f"victim {victims[i]} still present"
 
 
+def scenario_forest_stream():
+    """Batched mutation hook under shard_map: owner-routed insert/delete
+    batches through the fused apply_mutations scan, then exact kNN via the
+    static-height cohort fast path."""
+    from repro.core.distributed import (build_forest, common_static_height,
+                                        forest_apply_mutations, forest_knn)
+    from repro.core.metric import pairwise
+    from repro.core.smtree import OP_DELETE, OP_INSERT, ST_APPLIED
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    rng = np.random.default_rng(9)
+    X = rng.random((4096, 8)).astype(np.float32)
+    forest, _ = build_forest(X, mesh, capacity=16)
+    assert common_static_height(forest) is not None, \
+        "balanced round-robin build should give equal shard heights"
+    # mixed batch: delete 128 existing (owner = oid % 8), insert 64 new
+    victims = np.arange(0, 896, 7)           # 128 ids covering all 8 shards
+    new_ids = 4096 + np.arange(64)
+    ops = np.concatenate([np.full(128, OP_DELETE), np.full(64, OP_INSERT)])
+    oids = np.concatenate([victims, new_ids]).astype(np.int32)
+    xs = np.concatenate([X[victims],
+                         rng.random((64, 8)).astype(np.float32)])
+    owner = oids % 8
+    with _use_mesh(mesh):
+        forest, status = forest_apply_mutations(
+            forest, mesh, jnp.asarray(ops, jnp.int32), jnp.asarray(xs),
+            jnp.asarray(oids), jnp.asarray(owner, jnp.int32))
+        status = np.asarray(status)
+        assert (status == ST_APPLIED).mean() > 0.9, np.bincount(status)
+        d, ids = forest_knn(forest, mesh, jnp.asarray(xs[-64:]), k=1,
+                            max_frontier=256)
+    # the fresh inserts that applied must be findable at distance 0
+    ok = status[128:] == ST_APPLIED
+    d = np.asarray(d)[:, 0]
+    ids0 = np.asarray(ids)[:, 0]
+    assert ok.any()
+    np.testing.assert_allclose(d[ok], 0.0, atol=1e-6)
+    assert (ids0[ok] == new_ids[ok]).all()
+
+
+def scenario_forest_knn_cohort_parity():
+    """forest_knn static-height cohort path == per-query fallback."""
+    from repro.core.distributed import build_forest, forest_knn
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    X = np.random.default_rng(12).random((2048, 8)).astype(np.float32)
+    Q = np.random.default_rng(13).random((16, 8)).astype(np.float32)
+    forest, _ = build_forest(X, mesh, capacity=16)
+    with _use_mesh(mesh):
+        d1, i1 = forest_knn(forest, mesh, jnp.asarray(Q), k=4,
+                            max_frontier=256)
+        os.environ["REPRO_FRONTIER_IMPL"] = "perquery"
+        try:
+            d2, i2 = forest_knn(forest, mesh, jnp.asarray(Q), k=4,
+                                max_frontier=256)
+        finally:
+            del os.environ["REPRO_FRONTIER_IMPL"]
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-6)
+
+
 def scenario_train_step_sharded():
     """2x4 mesh end-to-end: sharded train step runs and loss decreases."""
     import dataclasses

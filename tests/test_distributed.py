@@ -12,6 +12,8 @@ SCENARIOS = [
     "forest_knn",
     "forest_brute_matches_tree",
     "forest_delete",
+    "forest_stream",
+    "forest_knn_cohort_parity",
     "train_step_sharded",
     "elastic_reshard",
     "compressed_psum",

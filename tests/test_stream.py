@@ -1,0 +1,417 @@
+"""repro.stream unit tests: cohort batching semantics (incl. adversarial
+same-id interleavings), WAL framing/rotation/replay determinism, epoch
+handoff, rebalance policy, and the checkpoint fsync_dir satellite."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import SMTreeEngine
+from repro.core.metric import pairwise
+from repro.core.smtree import (OP_DELETE, OP_INSERT, ST_APPLIED, ST_NOTFOUND,
+                               bulk_build)
+from repro.data.datagen import clustered, uniform
+from repro.stream import (EpochManager, MutationBatcher, StreamingEngine,
+                          StreamingForest, WriteAheadLog, collect_stats,
+                          cut_cohorts, needs_rebalance, rebalance_shards)
+from repro.stream.wal import KIND_BATCH, KIND_REBALANCE, iter_wal
+
+
+def _trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# cohort cutting
+# ---------------------------------------------------------------------------
+def test_cut_cohorts_no_conflicts_single_run():
+    assert cut_cohorts(np.array([1, 2, 3, 4])) == [(0, 4)]
+
+
+def test_cut_cohorts_splits_at_repeats():
+    # 7 repeats at index 2 and again at 4
+    assert cut_cohorts(np.array([7, 1, 7, 2, 7])) == [(0, 2), (2, 4), (4, 5)]
+    assert cut_cohorts(np.array([], np.int32)) == [(0, 0)]
+
+
+# ---------------------------------------------------------------------------
+# batcher semantics
+# ---------------------------------------------------------------------------
+def test_batched_mixed_stream_matches_semantics():
+    """Batched apply == sequential apply in terms of the live object set,
+    tree invariants, and exact query results."""
+    rng = np.random.default_rng(0)
+    X = clustered(600, dims=6, seed=1)
+    tree = bulk_build(X, capacity=8)
+    extra = uniform(80, dims=6, seed=2)
+    ops = np.concatenate([np.full(150, OP_DELETE), np.full(80, OP_INSERT)])
+    oids = np.concatenate([rng.permutation(600)[:150],
+                           600 + np.arange(80)]).astype(np.int32)
+    xs = np.concatenate([X[oids[:150]], extra]).astype(np.float32)
+    perm = rng.permutation(len(ops))
+    ops, oids, xs = ops[perm].astype(np.int32), oids[perm], xs[perm]
+
+    b = MutationBatcher(tree)
+    res = b.apply(ops, xs, oids)
+    assert (res.statuses == ST_APPLIED).all()
+    assert res.n_escalated > 0, "want escalations exercised (capacity 8)"
+    eng = SMTreeEngine(b.tree)
+    eng.validate()
+    assert eng.n_objects == 600 - 150 + 80
+
+    # queries over the mutated tree are exact vs brute force on the live set
+    live_mask = np.ones(600, bool)
+    live_mask[oids[ops == OP_DELETE]] = False
+    live = np.concatenate([X[live_mask], extra])
+    Q = uniform(16, dims=6, seed=3)
+    got = eng.knn(Q, k=3, max_frontier=512)
+    want = np.sort(pairwise("d_inf", Q, live), axis=1)[:, :3]
+    np.testing.assert_allclose(np.asarray(got.dists), want, atol=1e-5)
+
+
+def test_adversarial_same_id_interleaved():
+    """insert/delete/insert of one id inside a single batch: cohort cuts
+    keep the log order observable; the final state holds exactly one copy."""
+    X = uniform(200, dims=4, seed=5)
+    tree = bulk_build(X, capacity=6)   # tiny capacity: escalations likely
+    b = MutationBatcher(tree)
+    v1 = np.full(4, 0.25, np.float32)
+    v2 = np.full(4, 0.75, np.float32)
+    ops = np.array([OP_INSERT, OP_DELETE, OP_INSERT, OP_DELETE, OP_INSERT],
+                   np.int32)
+    oids = np.array([500, 500, 500, 500, 500], np.int32)
+    xs = np.stack([v1, v1, v2, v2, v1])
+    res = b.apply(ops, xs, oids)
+    assert (res.statuses == ST_APPLIED).all()
+    assert res.n_cohorts == 5   # every row conflicts with the previous
+    eng = SMTreeEngine(b.tree)
+    eng.validate()
+    assert eng.n_objects == 200 + 1
+    r = eng.range_search(v1[None, :], 0.0, max_results=4)
+    assert 500 in np.asarray(r.ids)[0]
+
+
+def test_adversarial_delete_then_reinsert_same_batch():
+    """delete an existing object and re-insert the same id with a new
+    vector, in one batch."""
+    X = uniform(300, dims=5, seed=6)
+    b = MutationBatcher(bulk_build(X, capacity=8))
+    nv = np.full(5, 0.9, np.float32)
+    ops = np.array([OP_DELETE, OP_INSERT], np.int32)
+    res = b.apply(ops, np.stack([X[7], nv]), np.array([7, 7], np.int32))
+    assert (res.statuses == ST_APPLIED).all()
+    eng = SMTreeEngine(b.tree)
+    eng.validate()
+    assert eng.n_objects == 300
+    r = eng.range_search(nv[None, :], 0.0, max_results=4)
+    assert 7 in np.asarray(r.ids)[0]
+    r = eng.range_search(X[7][None, :], 0.0, max_results=4)
+    assert 7 not in np.asarray(r.ids)[0]
+
+
+def test_delete_to_empty_then_reinsert():
+    """Drain the tree completely through the batcher, then refill it."""
+    X = uniform(120, dims=4, seed=7)
+    b = MutationBatcher(bulk_build(X, capacity=8))
+    res = b.apply(np.full(120, OP_DELETE, np.int32), X,
+                  np.arange(120, dtype=np.int32))
+    assert (res.statuses == ST_APPLIED).all()
+    assert b.tree.n_objects == 0
+    res = b.apply(np.full(120, OP_INSERT, np.int32), X,
+                  np.arange(120, dtype=np.int32))
+    assert (res.statuses == ST_APPLIED).all()
+    eng = SMTreeEngine(b.tree)
+    eng.validate()
+    assert eng.n_objects == 120
+    got = eng.knn(X[:10], k=1, max_frontier=256)
+    np.testing.assert_allclose(np.asarray(got.dists)[:, 0], np.zeros(10),
+                               atol=1e-6)
+
+
+def test_notfound_delete_reported():
+    X = uniform(100, dims=4, seed=8)
+    b = MutationBatcher(bulk_build(X, capacity=8))
+    res = b.apply(np.array([OP_DELETE], np.int32),
+                  np.full((1, 4), 0.5, np.float32),
+                  np.array([9999], np.int32))
+    assert res.statuses[0] == ST_NOTFOUND
+    assert b.tree.n_objects == 100
+
+
+@pytest.mark.parametrize("metric", ["d_inf", "l2", "l1"])
+def test_duplicate_vectors_under_all_metrics(metric):
+    """Multiple objects sharing one vector (distance 0 to each other):
+    batched insert, exact retrieval of every copy, then delete each copy
+    by id — under all three metrics."""
+    X = uniform(150, dims=6, seed=9)
+    tree = bulk_build(X, capacity=8, metric=metric)
+    b = MutationBatcher(tree)
+    dup = X[42].copy()
+    dup_ids = np.array([300, 301, 302, 303], np.int32)
+    res = b.apply(np.full(4, OP_INSERT, np.int32),
+                  np.tile(dup, (4, 1)), dup_ids)
+    assert (res.statuses == ST_APPLIED).all()
+    eng = SMTreeEngine(b.tree)
+    eng.validate()
+    r = eng.range_search(dup[None, :], 0.0, max_results=16,
+                         max_frontier=256)
+    got = set(int(i) for i in np.asarray(r.ids)[0] if i >= 0)
+    assert {42, 300, 301, 302, 303} <= got
+    # delete the duplicates one batch at a time (same vector, distinct ids)
+    res = b.apply(np.full(4, OP_DELETE, np.int32), np.tile(dup, (4, 1)),
+                  dup_ids)
+    assert (res.statuses == ST_APPLIED).all()
+    eng = SMTreeEngine(b.tree)
+    eng.validate()
+    r = eng.range_search(dup[None, :], 0.0, max_results=16,
+                         max_frontier=256)
+    got = set(int(i) for i in np.asarray(r.ids)[0] if i >= 0)
+    assert 42 in got and not (got & set(dup_ids.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# n_objects regression (satellite): dead nodes must not count
+# ---------------------------------------------------------------------------
+def test_n_objects_excludes_dead_nodes():
+    """A freed node slot with stale valid bits (as a device-side batched
+    merge would leave behind) must not inflate n_objects."""
+    import dataclasses
+    X = uniform(100, dims=4, seed=11)
+    tree = bulk_build(X, capacity=8)
+    n0 = tree.n_objects
+    assert n0 == 100
+    # kill a leaf without scrubbing its valid row
+    leaf_ids = np.nonzero(np.asarray(tree.is_leaf & tree.alive))[0]
+    victim = int(leaf_ids[-1])
+    stale = dataclasses.replace(
+        tree, alive=tree.alive.at[victim].set(False))
+    dropped = int(np.asarray(tree.count)[victim])
+    assert dropped > 0
+    assert stale.n_objects == n0 - dropped
+
+
+def test_n_objects_after_delete_with_merges():
+    X = uniform(250, dims=4, seed=12)
+    eng = SMTreeEngine.build(X, capacity=8)
+    for i in range(200):   # force plenty of merges and frees
+        assert eng.delete(X[i], i)
+    assert eng.tree.n_objects == 50
+    assert eng.tree.n_free_nodes > 0
+
+
+# ---------------------------------------------------------------------------
+# WAL
+# ---------------------------------------------------------------------------
+def test_wal_rotation_and_strict_manifest(tmp_path):
+    d = str(tmp_path / "wal")
+    wal = WriteAheadLog(d, segment_max_records=2)
+    xs = np.zeros((3, 4), np.float32)
+    for i in range(5):
+        wal.append_batch(np.full(3, OP_INSERT, np.int8), xs + i,
+                         np.arange(3) + 10 * i)
+    wal.close()
+    segs = sorted(n for n in os.listdir(d) if n.endswith(".wal"))
+    assert len(segs) == 3   # 2 + 2 + 1 records
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)   # strict JSON parses
+    assert [s["records"] for s in manifest["segments"]] == [2, 2]
+    recs = list(iter_wal(d))
+    assert [r.seq for r in recs] == list(range(5))
+    np.testing.assert_array_equal(recs[3].xs, xs + 3)
+    # tail replay skips up to the high-water mark
+    assert [r.seq for r in iter_wal(d, after_seq=2)] == [3, 4]
+
+
+def test_wal_reopen_continues_sequence(tmp_path):
+    d = str(tmp_path / "wal")
+    xs = np.zeros((2, 3), np.float32)
+    with WriteAheadLog(d, segment_max_records=3) as wal:
+        for _ in range(4):
+            wal.append_batch(np.full(2, OP_INSERT, np.int8), xs,
+                             np.arange(2))
+    with WriteAheadLog(d, segment_max_records=3) as wal:
+        assert wal.next_seq == 4
+        wal.append_rebalance({"seed": 9})
+    recs = list(iter_wal(d))
+    assert [r.kind for r in recs] == [KIND_BATCH] * 4 + [KIND_REBALANCE]
+    assert recs[-1].params == {"seed": 9}
+
+
+def test_wal_torn_tail_tolerated(tmp_path):
+    """A crash mid-append leaves a truncated frame; replay must stop
+    cleanly at the last complete record instead of raising."""
+    d = str(tmp_path / "wal")
+    wal = WriteAheadLog(d)
+    xs = np.ones((2, 3), np.float32)
+    wal.append_batch(np.full(2, OP_INSERT, np.int8), xs, np.arange(2))
+    wal.append_batch(np.full(2, OP_DELETE, np.int8), xs, np.arange(2))
+    wal.close()
+    seg = os.path.join(d, sorted(os.listdir(d))[-1])
+    size = os.path.getsize(seg)
+    with open(seg, "r+b") as f:
+        f.truncate(size - 7)   # tear the last record's payload
+    recs = list(iter_wal(d))
+    assert len(recs) == 1 and recs[0].seq == 0
+
+
+def test_wal_reopen_truncates_torn_tail(tmp_path):
+    """Records appended after crash-recovery must be replayable: reopening
+    over a torn tail truncates it, so the next append lands after the last
+    complete record instead of behind unreadable garbage."""
+    d = str(tmp_path / "wal")
+    xs = np.ones((2, 3), np.float32)
+    with WriteAheadLog(d) as wal:
+        wal.append_batch(np.full(2, OP_INSERT, np.int8), xs, np.arange(2))
+        wal.append_batch(np.full(2, OP_INSERT, np.int8), xs, np.arange(2))
+    seg = os.path.join(d, sorted(n for n in os.listdir(d)
+                                 if n.endswith(".wal"))[-1])
+    with open(seg, "r+b") as f:
+        f.truncate(os.path.getsize(seg) - 5)   # crash mid-append of seq 1
+    with WriteAheadLog(d) as wal:
+        assert wal.next_seq == 1               # torn seq-1 frame discarded
+        wal.append_batch(np.full(2, OP_DELETE, np.int8), xs + 9,
+                         np.arange(2))
+    recs = list(iter_wal(d))
+    assert [r.seq for r in recs] == [0, 1]
+    np.testing.assert_array_equal(recs[1].xs, xs + 9)
+
+
+def test_wal_corrupt_sealed_segment_raises(tmp_path):
+    d = str(tmp_path / "wal")
+    wal = WriteAheadLog(d, segment_max_records=1)   # every record seals
+    xs = np.ones((2, 3), np.float32)
+    wal.append_batch(np.full(2, OP_INSERT, np.int8), xs, np.arange(2))
+    wal.append_batch(np.full(2, OP_INSERT, np.int8), xs, np.arange(2))
+    wal.close()
+    first = os.path.join(d, sorted(
+        n for n in os.listdir(d) if n.endswith(".wal"))[0])
+    with open(first, "r+b") as f:
+        f.seek(os.path.getsize(first) - 3)
+        f.write(b"\xff\xff\xff")
+    with pytest.raises(ValueError, match="corrupt sealed"):
+        list(iter_wal(d))
+
+
+# ---------------------------------------------------------------------------
+# snapshot + WAL tail replay determinism (single tree)
+# ---------------------------------------------------------------------------
+def test_snapshot_plus_tail_replay_is_bitwise(tmp_path):
+    from repro.dist.checkpoint import CheckpointManager
+    rng = np.random.default_rng(13)
+    X = clustered(400, dims=6, seed=14)
+    wal = WriteAheadLog(str(tmp_path / "wal"), segment_max_records=3)
+    ck = CheckpointManager(str(tmp_path / "ck"), async_write=False)
+    eng = StreamingEngine(bulk_build(X, capacity=8), wal=wal, ckpt=ck)
+    nid = 1000
+    for step in range(8):
+        n = 48
+        kind = rng.random(n) < 0.45
+        ops = np.where(kind, OP_INSERT, OP_DELETE).astype(np.int32)
+        oids = np.where(kind, nid + np.arange(n),
+                        rng.integers(0, 400, n)).astype(np.int32)
+        xs = np.where(kind[:, None], rng.random((n, 6)).astype(np.float32),
+                      X[np.minimum(oids, 399)])
+        eng.apply(ops, xs.astype(np.float32), oids)
+        nid += n
+        if step == 3:
+            eng.snapshot()
+    restored = StreamingEngine.restore(str(tmp_path / "ck"), wal=wal)
+    _trees_equal(eng.tree, restored.tree)
+    SMTreeEngine(restored.tree).validate()
+
+
+# ---------------------------------------------------------------------------
+# epochs
+# ---------------------------------------------------------------------------
+def test_epoch_pin_survives_publish():
+    mgr = EpochManager("v0")
+    e0, t0 = mgr.acquire()
+    assert (e0, t0) == (0, "v0")
+    mgr.publish("v1")
+    mgr.publish("v2")
+    # pinned epoch still resident, intermediate unpinned version retired
+    assert mgr.resident == [0, 2]
+    assert mgr.current() == (2, "v2")
+    mgr.release(e0)
+    assert mgr.resident == [2]
+    with pytest.raises(ValueError):
+        mgr.release(2)
+
+
+def test_epoch_keep_window():
+    mgr = EpochManager("v0", keep=1)
+    mgr.publish("v1")
+    mgr.publish("v2")
+    assert mgr.resident == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# rebalance
+# ---------------------------------------------------------------------------
+def _skewed_forest(n=800, shards=4, capacity=8):
+    from repro.core.distributed import build_forest_trees
+    X = clustered(n, dims=6, seed=15)
+    trees = build_forest_trees(X, shards, capacity=capacity)
+    sf = StreamingForest(trees, min_objects=64)
+    victims = np.array([o for o in range(n) if o % shards == 0][:3 * n // 16])
+    sf.delete_batch(X[victims], victims)
+    return sf, X, victims
+
+
+def test_rebalance_trigger_and_rebuild():
+    sf, X, victims = _skewed_forest()
+    stats = collect_stats(sf.trees)
+    assert needs_rebalance(stats, max_skew=1.2, min_objects=64)
+    before_ids = sorted(int(o) for o in sf.owner)
+    trees, moved, params = rebalance_shards(sf.trees, seed=3)
+    assert moved > 0
+    after = collect_stats(trees)
+    assert after.skew < stats.skew
+    assert after.total == stats.total
+    # object set is preserved exactly, every shard stays a valid SM-tree
+    from repro.stream.rebalance import live_objects
+    after_ids = sorted(int(o) for t in trees for o in live_objects(t)[1])
+    assert after_ids == before_ids
+    for t in trees:
+        SMTreeEngine(t).validate()
+
+
+def test_rebalance_deterministic():
+    sf1, _, _ = _skewed_forest()
+    sf2, _, _ = _skewed_forest()
+    t1, m1, _ = rebalance_shards(sf1.trees, seed=5)
+    t2, m2, _ = rebalance_shards(sf2.trees, seed=5)
+    assert m1 == m2
+    for a, b in zip(t1, t2):
+        _trees_equal(a, b)
+
+
+def test_rebalance_skips_balanced():
+    from repro.core.distributed import build_forest_trees
+    X = clustered(400, dims=6, seed=16)
+    sf = StreamingForest(build_forest_trees(X, 4, capacity=8),
+                         min_objects=64)
+    assert not sf.maintenance()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint fsync_dir satellite
+# ---------------------------------------------------------------------------
+def test_checkpoint_fsync_dir_roundtrip(tmp_path):
+    import jax.numpy as jnp
+    from repro.dist.checkpoint import (CheckpointManager, restore_checkpoint,
+                                       save_checkpoint)
+    tree = {"x": jnp.arange(6.0).reshape(2, 3)}
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, {"state": tree}, fsync_dir=True)
+    out, manifest = restore_checkpoint(d, {"state": tree})
+    assert manifest["step"] == 1
+    np.testing.assert_array_equal(np.asarray(out["state"]["x"]),
+                                  np.asarray(tree["x"]))
+    mgr = CheckpointManager(d, keep=2, async_write=True, fsync_dir=True)
+    mgr.save(2, {"state": tree})
+    mgr.wait()
+    assert mgr.latest_step() == 2

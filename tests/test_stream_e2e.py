@@ -1,0 +1,142 @@
+"""The PR-3 acceptance drill, end to end:
+
+build a sharded SM-forest → serve exact kNN from pinned epochs while a
+heavily skewed 90%-delete stream flows through the WAL-backed batcher →
+the background rebalancer fires on the induced shard skew → a restore
+from the mid-stream snapshot + WAL tail replay reproduces the final
+forest **bitwise**.
+"""
+import jax
+import numpy as np
+
+from repro.core.engine import SMTreeEngine
+from repro.core.metric import pairwise
+from repro.core.smtree import OP_DELETE, OP_INSERT, ST_APPLIED
+from repro.core.distributed import build_forest_trees
+from repro.data.datagen import clustered, uniform
+from repro.dist.checkpoint import CheckpointManager
+from repro.stream import StreamingForest, WriteAheadLog, collect_stats
+from repro.stream.rebalance import live_objects
+
+
+N = 1600
+DIM = 8
+SHARDS = 4
+CAPACITY = 8
+
+
+def _forest_live_set(trees):
+    vecs, ids = [], []
+    for t in trees:
+        v, o = live_objects(t)
+        vecs.append(v)
+        ids.append(o)
+    return np.concatenate(vecs), np.concatenate(ids)
+
+
+def test_streaming_forest_drill(tmp_path):
+    X = clustered(N, dims=DIM, seed=21)
+    fresh = uniform(600, dims=DIM, seed=22)
+    wal = WriteAheadLog(str(tmp_path / "wal"), segment_max_records=4)
+    ck = CheckpointManager(str(tmp_path / "ck"), async_write=False)
+    sf = StreamingForest(build_forest_trees(X, SHARDS, capacity=CAPACITY),
+                         wal=wal, ckpt=ck, min_objects=128, max_skew=1.4)
+    assert sf.n_objects == N
+
+    rng = np.random.default_rng(23)
+    vec_of = {i: X[i] for i in range(N)}
+    live = set(range(N))
+    nid = N
+    n_fresh = 0
+    rebalances = 0
+    served_epochs = set()
+
+    for step in range(12):
+        # ---- reader: pin the current epoch and serve exact kNN from it
+        epoch, pinned = sf.epochs.acquire()
+        served_epochs.add(epoch)
+        pinned_vecs, pinned_ids = _forest_live_set(pinned)
+        Q = pinned_vecs[rng.integers(0, len(pinned_ids), 8)] + 0.005
+        d_got, _ = sf.knn(Q, k=3, max_frontier=512)
+
+        # ---- writer: 90%-delete batch, victims biased onto shards 0/1
+        n_ops = 96
+        ops, xs, oids = [], [], []
+        for _ in range(n_ops):
+            skewed = sorted(o for o in live if o % SHARDS < 2)
+            if live and rng.random() < 0.9:
+                pool = skewed if (skewed and rng.random() < 0.9) \
+                    else sorted(live)
+                victim = int(pool[rng.integers(len(pool))])
+                live.discard(victim)
+                ops.append(OP_DELETE)
+                oids.append(victim)
+                xs.append(vec_of[victim])
+            else:
+                v = fresh[n_fresh % len(fresh)]
+                n_fresh += 1
+                ops.append(OP_INSERT)
+                oids.append(nid)
+                xs.append(v)
+                vec_of[nid] = v
+                live.add(nid)
+                nid += 1
+        res = sf.apply(np.array(ops, np.int32),
+                       np.stack(xs).astype(np.float32),
+                       np.array(oids, np.int32))
+        assert (res.statuses == ST_APPLIED).all()
+
+        # the pinned epoch was untouched by the writer: results still match
+        # brute force over the *pinned* live set
+        want = np.sort(pairwise("d_inf", Q, pinned_vecs), axis=1)[:, :3]
+        np.testing.assert_allclose(d_got, want, atol=1e-5)
+        sf.epochs.release(epoch)
+
+        if sf.maintenance():
+            rebalances += 1
+        if step == 5:
+            sf.snapshot()
+
+    # ---- the skewed stream must actually have fired the rebalancer
+    assert rebalances >= 1, "skewed delete stream never triggered rebalance"
+    assert collect_stats(sf.trees).skew < 1.4
+    assert len(served_epochs) >= 12
+    assert sf.n_objects == len(live)
+    for t in sf.trees:
+        SMTreeEngine(t).validate()
+
+    # ---- live set is exactly right after the whole stream
+    vecs_now, ids_now = _forest_live_set(sf.trees)
+    assert sorted(ids_now.tolist()) == sorted(live)
+
+    # ---- restore = snapshot + WAL tail replay, bitwise
+    restored = StreamingForest.restore(str(tmp_path / "ck"), wal=wal,
+                                       min_objects=128, max_skew=1.4)
+    final = sf.stacked()
+    for a, b in zip(jax.tree.leaves(final),
+                    jax.tree.leaves(restored.stacked())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert restored.owner == sf.owner
+    assert restored.n_rebalances == sf.n_rebalances
+
+
+def test_streaming_forest_routing_follows_rebalance(tmp_path):
+    """After a rebalance migrates objects, deletes must still find them
+    (ownership map routing, not the static hash)."""
+    X = clustered(800, dims=6, seed=31)
+    sf = StreamingForest(build_forest_trees(X, 4, capacity=8),
+                         min_objects=64, max_skew=1.3)
+    victims = np.array([o for o in range(800) if o % 4 == 0][:150])
+    r = sf.delete_batch(X[victims], victims)
+    assert (r.statuses == ST_APPLIED).all()
+    assert sf.maintenance(), "skew should trigger"
+    # delete objects that were migrated off their hash shard
+    migrated = [o for o, s in sf.owner.items() if s != o % 4]
+    assert migrated, "rebalance should have moved objects across shards"
+    pick = np.array(sorted(migrated)[:32], np.int32)
+    vec_lookup = {int(o): v for t in sf.trees
+                  for v, o in zip(*live_objects(t))}
+    xs = np.stack([vec_lookup[int(o)] for o in pick])
+    r = sf.delete_batch(xs, pick)
+    assert (r.statuses == ST_APPLIED).all()
+    assert sf.n_objects == 800 - 150 - 32
