@@ -14,7 +14,10 @@ Scale envs: REPRO_BENCH_SMOKE=1 (tiny, CI) / REPRO_BENCH_FULL=1.
 from __future__ import annotations
 
 import os
+import re
 import shutil
+import subprocess
+import sys
 import tempfile
 import time
 
@@ -26,6 +29,11 @@ from repro.data.datagen import make_dataset
 
 FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def jnp_copy(a):
+    import jax.numpy as jnp
+    return jnp.array(a, copy=True)
 
 if SMOKE:
     N = 2_000
@@ -79,10 +87,26 @@ def _fresh_tree():
     return bulk_build(X, capacity=CAPACITY)
 
 
-def _time_stream(tree, ops, xs, oids, batch: int) -> float:
+def _time_stream(tree, ops, xs, oids, batch: int,
+                 device_splits: bool = True) -> float:
     """ops/sec through the batched pipeline (first batch warms the jit)."""
+    from repro.core import smtree
     from repro.stream import StreamingEngine
-    eng = StreamingEngine(tree)
+    import jax
+    eng = StreamingEngine(tree, device_splits=device_splits)
+    if device_splits:
+        # warm the split-scan compile for this tree geometry (the warm
+        # batch below only reaches it when it happens to overflow a leaf).
+        # donate=True matches the hot path's jit entry (resolve_overflows
+        # always donates its intermediates), so feed it a throwaway copy
+        scratch = jax.tree.map(lambda a: jnp_copy(a), eng.tree)
+        smtree.apply_splits(scratch,
+                            np.full(smtree.SPLIT_CHUNK, smtree.OP_NOP,
+                                    np.int32),
+                            np.zeros((smtree.SPLIT_CHUNK, xs.shape[1]),
+                                     np.float32),
+                            np.full(smtree.SPLIT_CHUNK, -1, np.int32),
+                            donate=True)
     eng.apply(ops[:batch], xs[:batch], oids[:batch])   # compile + warm
     n = (len(ops) - batch) // batch * batch
     t0 = time.perf_counter()
@@ -90,6 +114,37 @@ def _time_stream(tree, ops, xs, oids, batch: int) -> float:
         eng.apply(ops[s:s + batch], xs[s:s + batch], oids[s:s + batch])
     dt = time.perf_counter() - t0
     return n / dt
+
+
+def _split_rows(report, rng):
+    """Split-heavy workload: a near-capacity bulk build (fill 0.9, with
+    free-ring headroom as a mutation-heavy deployment would provision —
+    without it every few batches exhaust the node table, and the host
+    ``_grow`` resize forces a full recompile that swamps both paths) makes
+    insert streams overflow leaves constantly — the device split pass vs
+    the PR-3 host-escalation path, plus the split count actually exercised
+    (PR-4 acceptance row)."""
+    from repro.stream.batcher import MutationBatcher
+
+    def _tree():
+        return bulk_build(X, capacity=CAPACITY, fill_frac=0.9, slack=4.0)
+
+    n = min(N, 20_000)
+    X = make_dataset("clustered", n, seed=7)[:, :DIM].copy()
+    ops, xs, oids = _make_stream(rng, "insert", N_OPS, n, base_id=8 * n)
+    rates = {}
+    for dev, name in ((True, "stream_split_heavy_b256_ops_per_s"),
+                      (False, "stream_split_heavy_host_b256_ops_per_s")):
+        rates[dev] = _time_stream(_tree(), ops, xs, oids, 256,
+                                  device_splits=dev)
+        report(name, round(rates[dev], 0))
+    report("split_device_vs_host_speedup",
+           round(rates[True] / rates[False], 2))
+    # observability: how many rows the device pass actually absorbed
+    b = MutationBatcher(_tree())
+    r = b.apply(ops[:1024], xs[:1024], oids[:1024])
+    report("split_heavy_n_device_splits_per_1k", int(r.n_split))
+    report("split_heavy_n_host_escalations_per_1k", int(r.n_escalated))
 
 
 def _time_loop(tree, ops, xs, oids) -> float:
@@ -107,6 +162,79 @@ def _time_loop(tree, ops, xs, oids) -> float:
         else:
             eng.delete(xs[i], int(oids[i]))
     return n / (time.perf_counter() - t0)
+
+
+_MESH_WORKER = r"""
+import os, time
+import numpy as np
+import jax
+from repro.core.smtree import bulk_build
+from repro.core.smtree import OP_INSERT
+from repro.data.datagen import make_dataset
+from repro.stream import StreamingForest
+
+S = 4
+n = int(os.environ["BSF_N"])
+n_ops = int(os.environ["BSF_OPS"])
+batch = 256
+dev = os.environ["BSF_DEV"] == "1"
+mesh = jax.make_mesh((S,), ("model",))
+X = make_dataset("clustered", n, seed=7)[:, :10].copy()
+trees = [bulk_build(X[np.arange(s, n, S)], ids=np.arange(s, n, S),
+                    capacity=32, fill_frac=0.9, slack=4.0)
+         for s in range(S)]
+sf = StreamingForest(trees, mesh=mesh, device_splits=dev)
+xs = make_dataset("uniform", n_ops + batch, seed=11)[:, :10].copy()
+oids = (10 * n + np.arange(n_ops + batch)).astype(np.int32)
+ops = np.full(batch, OP_INSERT, np.int32)
+sf.apply(ops, xs[:batch].astype(np.float32), oids[:batch])   # warm
+t0 = time.perf_counter()
+for s0 in range(batch, batch + n_ops, batch):
+    sf.apply(ops, xs[s0:s0 + batch].astype(np.float32),
+             oids[s0:s0 + batch])
+dt = time.perf_counter() - t0
+print(f"RESULT {n_ops / dt:.1f} ops/s")
+"""
+
+
+def _mesh_forest_rows(report):
+    """The tentpole measurement: a mesh-resident 4-shard StreamingForest
+    under a split-heavy insert stream, device-split collectives vs the
+    escalate-to-host path (which must unstack + restack the whole stacked
+    forest around every host split).  Subprocesses: each needs its own
+    XLA_FLAGS device-count override before jax import."""
+    # shards must be big enough that the host path's whole-forest
+    # unstack/restack cost is visible over collective dispatch overhead
+    n, n_ops = (2_000, 768) if SMOKE else (32_000, 2_048)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..",
+                                      "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    env["BSF_N"] = str(n)
+    env["BSF_OPS"] = str(n_ops)
+    rates = {}
+    for dev, name in ((True, "mesh_forest_split_heavy_ops_per_s"),
+                      (False, "mesh_forest_split_heavy_host_ops_per_s")):
+        e = dict(env, BSF_DEV="1" if dev else "0")
+        try:
+            proc = subprocess.run([sys.executable, "-c", _MESH_WORKER],
+                                  capture_output=True, text=True, env=e,
+                                  timeout=1800)
+            m = re.search(r"RESULT ([\d.]+) ops/s", proc.stdout)
+            if m is None:
+                print(f"# mesh forest case {name}: no result "
+                      f"(rc={proc.returncode})\n"
+                      f"# stderr tail: {proc.stderr[-2000:]}", flush=True)
+            rates[dev] = float(m.group(1)) if m else float("nan")
+        except Exception as exc:  # noqa: BLE001 — a bench row
+            print(f"# mesh forest case {name} failed: {exc}", flush=True)
+            rates[dev] = float("nan")
+        report(name, rates[dev])
+    if np.isfinite(rates[True]) and np.isfinite(rates[False]):
+        report("mesh_forest_device_vs_host_speedup",
+               round(rates[True] / rates[False], 2))
 
 
 def _wal_rows(report):
@@ -230,6 +358,8 @@ def run(report):
             rate = _time_stream(tree, ops, xs, oids, b)
             report(f"stream_{label}_b{b}_ops_per_s", round(rate, 0))
 
+    _split_rows(report, rng)
+    _mesh_forest_rows(report)
     _wal_rows(report)
     _ckpt_rows(report, tree)
     _rebalance_rows(report)

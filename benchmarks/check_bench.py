@@ -5,8 +5,18 @@ is absent or empty, or any recorded value is missing/NaN/inf — so the perf
 plumbing cannot silently rot into a benchmark that "runs" but records
 nothing.
 
+With ``--baseline`` it also gates against a committed artifact: each
+``--min-ratio suite:row:ratio`` spec fails when
+``new < ratio * baseline`` for a higher-is-better row (ops/sec).  Ratios
+should be loose (CI machines differ from the one that recorded the
+baseline) — the gate exists to catch order-of-magnitude regressions in the
+mutate hot path, not percent-level noise.
+
     python benchmarks/check_bench.py benchmarks/BENCH_ci.json \
-        --require bench_engine [--require-row bench_engine:serve_single_ms_per_step]
+        --require bench_engine \
+        [--require-row bench_engine:serve_single_ms_per_step] \
+        [--baseline benchmarks/BENCH_PR3.json \
+         --min-ratio bench_stream:stream_mixed50_b256_ops_per_s:0.35]
 """
 from __future__ import annotations
 
@@ -16,11 +26,17 @@ import math
 import sys
 
 
-def check(path: str, require: list[str], require_rows: list[str]) -> list[str]:
+def _load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check(path: str, require: list[str], require_rows: list[str],
+          baseline: str | None = None,
+          min_ratios: list[str] | None = None) -> list[str]:
     problems: list[str] = []
     try:
-        with open(path) as f:
-            data = json.load(f)
+        data = _load(path)
     except OSError as e:
         return [f"cannot read {path}: {e}"]
     except json.JSONDecodeError as e:
@@ -40,6 +56,37 @@ def check(path: str, require: list[str], require_rows: list[str]) -> list[str]:
                 problems.append(f"{s}:{name} is null")
             elif isinstance(v, float) and not math.isfinite(v):
                 problems.append(f"{s}:{name} is {v}")
+
+    base_suites = None
+    for spec in (min_ratios or []):
+        if baseline is None:
+            problems.append("--min-ratio given without --baseline")
+            break
+        if base_suites is None:
+            try:
+                base_suites = _load(baseline).get("suites", {})
+            except (OSError, json.JSONDecodeError) as e:
+                problems.append(f"cannot read baseline {baseline}: {e}")
+                break
+        try:
+            head, ratio_s = spec.rsplit(":", 1)
+            s, _, row = head.partition(":")
+            ratio = float(ratio_s)
+            if not row:
+                raise ValueError(spec)
+        except ValueError:
+            problems.append(f"malformed --min-ratio spec {spec!r} "
+                            "(want suite:row:ratio)")
+            continue
+        base = base_suites.get(s, {}).get(row)
+        new = suites.get(s, {}).get(row)
+        if base is None:
+            problems.append(f"baseline row {s}:{row} missing in {baseline}")
+        elif new is None:
+            problems.append(f"row {s}:{row} missing in {path}")
+        elif float(new) < ratio * float(base):
+            problems.append(
+                f"{s}:{row} regressed: {new} < {ratio} * baseline {base}")
     return problems
 
 
@@ -50,8 +97,15 @@ def main(argv=None) -> None:
                     help="suite that must be present and non-empty")
     ap.add_argument("--require-row", action="append", default=[],
                     help="suite:row that must be present")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_<tag>.json to gate regressions "
+                         "against")
+    ap.add_argument("--min-ratio", action="append", default=[],
+                    help="suite:row:ratio — fail when new < ratio * "
+                         "baseline (higher-is-better rows)")
     args = ap.parse_args(argv)
-    problems = check(args.path, args.require, args.require_row)
+    problems = check(args.path, args.require, args.require_row,
+                     args.baseline, args.min_ratio)
     if problems:
         for p in problems:
             print(f"BENCH CHECK FAIL: {p}", file=sys.stderr)

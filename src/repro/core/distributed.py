@@ -32,13 +32,17 @@ from repro.dist.sharding import shard_map  # version-portable wrapper
 
 _DATA_FIELDS = ("vecs", "radius", "pdist", "child", "oid", "valid", "count",
                 "is_leaf", "alive", "parent", "pslot", "root", "n_nodes",
-                "height")
+                "height", "free_list", "free_head")
 
 
 def stack_trees(trees: list[TreeArrays]) -> TreeArrays:
     """Stack per-shard SM-trees into one forest TreeArrays with a leading
     [n_shards] axis, padding every node table to the largest shard's size.
-    Padded rows are dead (``alive`` False) so no traversal touches them."""
+    Padded rows are dead (``alive`` False) so no traversal touches them.
+    They are also *not* in the padded shard's free ring (``free_list`` keeps
+    only its pre-padding ids), so the device allocator stays conservative:
+    a shard never allocates into rows that ``unstack_forest`` would slice
+    away again."""
     max_nodes = max(t.max_nodes for t in trees)
 
     def pad_leaf(leaf, axis0_pad):
@@ -135,24 +139,18 @@ def common_static_height(forest: TreeArrays) -> int | None:
     return None
 
 
-def forest_knn(forest: TreeArrays, mesh: Mesh, queries: jax.Array, *,
-               k: int = 8, axis: str = "model", max_frontier: int = 64,
-               batch_axis: str | None = None):
-    """Batched global kNN over the sharded forest.
-
-    queries: [b, dim] (replicated or sharded over ``batch_axis``).
-    Returns (dists [b, k], ids [b, k]) with globally merged results.
-
-    The concrete per-shard heights are read *before* entering shard_map and
-    plumbed through as a static argument, so each shard runs the PR-2
-    cohort fast path (fused frontier scoring) instead of the per-query
-    fallback whenever all shards share one height — which balanced
-    round-robin bulk builds guarantee in practice.
-    """
-    static_height = common_static_height(forest)
+# The collective callables are built once per (mesh, axis, ...) and wrapped
+# in jax.jit: a shard_map closure constructed per call would re-trace and
+# re-lower the whole collective on EVERY invocation — seconds of compile on
+# the mutation hot path (exactly the kind of host-side stall the
+# mesh-resident control plane exists to avoid).
+@functools.lru_cache(maxsize=None)
+def _forest_knn_fn(mesh: Mesh, axis: str, batch_axis: str | None, k: int,
+                   max_frontier: int, static_height: int | None):
     in_specs = (P(axis), P(batch_axis))
     out_specs = (P(batch_axis), P(batch_axis))
 
+    @jax.jit
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
     def run(forest_slice, q):
@@ -169,18 +167,33 @@ def forest_knn(forest: TreeArrays, mesh: Mesh, queries: jax.Array, *,
         neg, sel = jax.lax.top_k(-flat_d, k)
         return -neg, jnp.take_along_axis(flat_i, sel, axis=1)
 
-    return run(forest, queries)
+    return run
 
 
-def forest_delete(forest: TreeArrays, mesh: Mesh, xs: jax.Array,
-                  oids: jax.Array, *, axis: str = "model"):
-    """Broadcast a delete batch; each shard applies the ids it owns via the
-    jitted no-underflow fast path (underflow fallback is host-side per shard;
-    eviction workloads delete recent bulk-built entries, so fast-path hit
-    rate is high — measured in benchmarks/bench_engine.py).
-    Returns (forest, found_mask [n])."""
+def forest_knn(forest: TreeArrays, mesh: Mesh, queries: jax.Array, *,
+               k: int = 8, axis: str = "model", max_frontier: int = 64,
+               batch_axis: str | None = None):
+    """Batched global kNN over the sharded forest.
 
-    @functools.partial(shard_map, mesh=mesh, in_specs=(P(axis), P(None), P(None)),
+    queries: [b, dim] (replicated or sharded over ``batch_axis``).
+    Returns (dists [b, k], ids [b, k]) with globally merged results.
+
+    The concrete per-shard heights are read *before* entering shard_map and
+    plumbed through as a static argument, so each shard runs the PR-2
+    cohort fast path (fused frontier scoring) instead of the per-query
+    fallback whenever all shards share one height — which balanced
+    round-robin bulk builds guarantee in practice.
+    """
+    static_height = common_static_height(forest)
+    return _forest_knn_fn(mesh, axis, batch_axis, k, max_frontier,
+                          static_height)(forest, queries)
+
+
+@functools.lru_cache(maxsize=None)
+def _forest_delete_fn(mesh: Mesh, axis: str):
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(axis), P(None), P(None)),
                        out_specs=(P(axis), P(None)), check_rep=False)
     def run(forest_slice, xs, oids):
         tree = _local_tree(forest_slice)
@@ -198,34 +211,66 @@ def forest_delete(forest: TreeArrays, mesh: Mesh, xs: jax.Array,
         found = jax.lax.psum(found.astype(jnp.int32), axis) > 0
         return _restack(forest_slice, tree), found
 
-    return run(forest, xs, oids)
+    return run
+
+
+def forest_delete(forest: TreeArrays, mesh: Mesh, xs: jax.Array,
+                  oids: jax.Array, *, axis: str = "model"):
+    """Broadcast a delete batch; each shard applies the ids it owns via the
+    jitted no-underflow fast path (underflow fallback is host-side per shard;
+    eviction workloads delete recent bulk-built entries, so fast-path hit
+    rate is high — measured in benchmarks/bench_engine.py).
+    Returns (forest, found_mask [n])."""
+    return _forest_delete_fn(mesh, axis)(forest, xs, oids)
+
+
+def _validate_cohort(oids) -> None:
+    """Host-side cohort-contract check: unique, non-negative oids.  Forces a
+    device sync when ``oids`` lives on the mesh — which is exactly why it is
+    opt-in (``validate=True``): the stream pipeline cuts cohorts host-side
+    (``repro.stream.batcher.cut_cohorts``), where the contract holds by
+    construction and the ids are still numpy."""
+    oids_np = np.asarray(jax.device_get(oids))
+    if len(np.unique(oids_np)) != len(oids_np):
+        raise ValueError(
+            "forest_apply_mutations requires unique oids per batch "
+            "(conflict-free cohort); cut the log with "
+            "repro.stream.batcher.cut_cohorts")
+    if len(oids_np) and int(oids_np.min()) < 0:
+        raise ValueError("negative object ids are reserved (NOP pad "
+                         "sentinel)")
 
 
 def forest_apply_mutations(forest: TreeArrays, mesh: Mesh, ops: jax.Array,
                            xs: jax.Array, oids: jax.Array,
-                           owner: jax.Array, *, axis: str = "model"):
+                           owner: jax.Array, *, axis: str = "model",
+                           validate: bool = False):
     """Broadcast a mixed insert/delete batch; each shard applies the rows it
     owns (``owner[i]`` = shard index) through the fused ``apply_mutations``
     scan in one collective step.  Non-owned rows become OP_NOP locally, so
     the psum of masked statuses reconstructs the global per-row outcome
-    (ST_NOP is 0).  Returns (forest, statuses [B]) — escalation statuses
-    (overflow/underflow) are resolved host-side by the stream control plane
-    (repro.stream.pipeline).
+    (ST_NOP is 0).  Returns (forest, statuses [B]).  ST_OVERFLOW rows are
+    resolved by a follow-up ``forest_apply_splits`` collective (the stream
+    control plane orchestrates it — repro.stream.pipeline); residual
+    escalations go to the host.
 
     The batch must be a *conflict-free cohort* — no object id twice
     (``apply_mutations`` pre-locates delete targets against the pre-batch
-    tree, which is unsound across same-id rows).  Cut arbitrary logs with
-    ``repro.stream.batcher.cut_cohorts`` first."""
-    try:
-        oids_np = np.asarray(jax.device_get(oids))
-        if len(np.unique(oids_np)) != len(oids_np):
-            raise ValueError(
-                "forest_apply_mutations requires unique oids per batch "
-                "(conflict-free cohort); cut the log with "
-                "repro.stream.batcher.cut_cohorts")
-    except jax.errors.ConcretizationTypeError:
-        pass   # traced call sites take responsibility for the contract
+    tree, which is unsound across same-id rows) and no negative ids.  Cut
+    arbitrary logs with ``repro.stream.batcher.cut_cohorts`` first.
+    ``validate=True`` re-checks the contract here at the price of a host
+    round-trip per batch; it defaults off — and must stay off under jit —
+    because the check syncs ``oids`` back to the host on the hot path."""
+    if validate:
+        _validate_cohort(oids)
+    return _forest_apply_mutations_fn(mesh, axis)(
+        forest, jnp.asarray(ops, jnp.int32), jnp.asarray(xs, jnp.float32),
+        jnp.asarray(oids, jnp.int32), jnp.asarray(owner, jnp.int32))
 
+
+@functools.lru_cache(maxsize=None)
+def _forest_apply_mutations_fn(mesh: Mesh, axis: str):
+    @jax.jit
     @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(axis), P(None), P(None), P(None), P(None)),
                        out_specs=(P(axis), P(None)), check_rep=False)
@@ -234,14 +279,48 @@ def forest_apply_mutations(forest: TreeArrays, mesh: Mesh, ops: jax.Array,
         me = jax.lax.axis_index(axis)
         mine = owner == me
         local_ops = jnp.where(mine, ops, smtree.OP_NOP)
+        # splits=False: statuses are abstract here; the split pass runs as
+        # its own collective (forest_apply_splits) over the compacted
+        # overflow rows
         tree, status = smtree.apply_mutations(tree, local_ops, xs, oids,
-                                              donate=False)
+                                              donate=False, splits=False)
         status = jax.lax.psum(jnp.where(mine, status, 0), axis)
         return _restack(forest_slice, tree), status
 
-    return run(forest, jnp.asarray(ops, jnp.int32),
-               jnp.asarray(xs, jnp.float32), jnp.asarray(oids, jnp.int32),
-               jnp.asarray(owner, jnp.int32))
+    return run
+
+
+def forest_apply_splits(forest: TreeArrays, mesh: Mesh, ops: jax.Array,
+                        xs: jax.Array, oids: jax.Array, owner: jax.Array, *,
+                        axis: str = "model"):
+    """On-mesh split collective: resolve a compacted batch of ST_OVERFLOW
+    insert rows (in log order, owner-routed like ``forest_apply_mutations``)
+    through each shard's device split pass (``smtree.apply_splits``).
+    Returns (forest, statuses [K]): ST_SPLIT where a shard absorbed the row
+    on device, ST_OVERFLOW where it still needs the host control plane.
+    Tree pages never leave HBM; only the status vector does."""
+    return _forest_apply_splits_fn(mesh, axis)(
+        forest, jnp.asarray(ops, jnp.int32), jnp.asarray(xs, jnp.float32),
+        jnp.asarray(oids, jnp.int32), jnp.asarray(owner, jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _forest_apply_splits_fn(mesh: Mesh, axis: str):
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(axis), P(None), P(None), P(None), P(None)),
+                       out_specs=(P(axis), P(None)), check_rep=False)
+    def run(forest_slice, ops, xs, oids, owner):
+        tree = _local_tree(forest_slice)
+        me = jax.lax.axis_index(axis)
+        mine = owner == me
+        local_ops = jnp.where(mine, ops, smtree.OP_NOP)
+        tree, status = smtree.apply_splits(tree, local_ops, xs, oids,
+                                           donate=False)
+        status = jax.lax.psum(jnp.where(mine, status, 0), axis)
+        return _restack(forest_slice, tree), status
+
+    return run
 
 
 def brute_force_knn(X: jax.Array, mesh: Mesh, queries: jax.Array, *,

@@ -308,6 +308,11 @@ class _HostView:
 
     # ---- back to device ------------------------------------------------------
     def to_tree(self) -> TreeArrays:
+        # the device free ring is recomputed wholesale from the alive mask:
+        # host-side allocs/frees (and _grow resizes) invalidate the packed
+        # descending representation the device allocator maintains in place
+        from repro.core.smtree import packed_free_list
+        free_list, free_head = packed_free_list(self.alive)
         return dataclasses.replace(
             self.t,
             vecs=jnp.asarray(self.vecs), radius=jnp.asarray(self.radius),
@@ -317,6 +322,8 @@ class _HostView:
             alive=jnp.asarray(self.alive), parent=jnp.asarray(self.parent),
             pslot=jnp.asarray(self.pslot), root=jnp.int32(self.root),
             n_nodes=jnp.int32(self.n_nodes), height=jnp.int32(self.height),
+            free_list=jnp.asarray(free_list),
+            free_head=jnp.asarray(free_head),
             max_nodes=len(self.count))
 
 

@@ -60,7 +60,7 @@ _EPS = 1e-5
                    data_fields=["vecs", "radius", "pdist", "child", "oid",
                                 "valid", "count", "is_leaf", "alive",
                                 "parent", "pslot", "root", "n_nodes",
-                                "height"],
+                                "height", "free_list", "free_head"],
                    meta_fields=["capacity", "dim", "metric", "max_nodes",
                                 "min_fill"])
 @dataclasses.dataclass
@@ -79,6 +79,8 @@ class TreeArrays:
     root: jax.Array      # [] i32
     n_nodes: jax.Array   # [] i32
     height: jax.Array    # [] i32
+    free_list: jax.Array # [N] i32 — dead node ids, packed descending; -1 pad
+    free_head: jax.Array # [] i32 — ring occupancy: free_list[:free_head] live
     capacity: int
     dim: int
     metric: str
@@ -99,9 +101,30 @@ class TreeArrays:
         return int(jnp.sum(~self.alive))
 
 
+def packed_free_list(alive) -> tuple[np.ndarray, np.ndarray]:
+    """Device free-ring representation of the dead node set.
+
+    ``free_list[:free_head]`` holds the dead node ids in **descending**
+    order, so the top of the stack (``free_list[free_head-1]``) is the
+    *lowest* free id — popping on device allocates exactly the node the
+    host control plane's ``_HostView.alloc`` (lowest free index) would
+    pick, which is what keeps device splits bitwise-equal to host splits.
+    The device only ever pops (merges — the only freeing edits — escalate
+    to the host, which recomputes the packed ring wholesale in
+    ``to_tree``), so descending order is an invariant, not a sort."""
+    alive = np.asarray(alive)
+    free = np.nonzero(~alive)[0][::-1].astype(np.int32)
+    out = np.full(alive.shape[0], -1, np.int32)
+    out[:len(free)] = free
+    return out, np.int32(len(free))
+
+
 def empty_tree(*, dim: int, capacity: int = 32, max_nodes: int = 1024,
                metric: str = "d_inf", min_fill_frac: float = 0.4) -> TreeArrays:
     cap, N = capacity, max_nodes
+    alive = np.zeros((N,), bool)
+    alive[0] = True
+    free_list, free_head = packed_free_list(alive)
     return TreeArrays(
         vecs=jnp.zeros((N, cap, dim), jnp.float32),
         radius=jnp.zeros((N, cap), jnp.float32),
@@ -111,10 +134,11 @@ def empty_tree(*, dim: int, capacity: int = 32, max_nodes: int = 1024,
         valid=jnp.zeros((N, cap), bool),
         count=jnp.zeros((N,), jnp.int32),
         is_leaf=jnp.ones((N,), bool),
-        alive=jnp.zeros((N,), bool).at[0].set(True),
+        alive=jnp.asarray(alive),
         parent=jnp.full((N,), -1, jnp.int32),
         pslot=jnp.full((N,), -1, jnp.int32),
         root=jnp.int32(0), n_nodes=jnp.int32(1), height=jnp.int32(1),
+        free_list=jnp.asarray(free_list), free_head=jnp.asarray(free_head),
         capacity=cap, dim=dim, metric=metric, max_nodes=N,
         min_fill=max(1, math.ceil(min_fill_frac * cap)))
 
@@ -249,6 +273,7 @@ def bulk_build(X: np.ndarray, ids: np.ndarray | None = None, *,
             for s, c in enumerate(nd["child"]):
                 parent[c] = i
                 pslot[c] = s
+    free_list, free_head = packed_free_list(alive)
     return dataclasses.replace(
         t, vecs=jnp.asarray(vecs), radius=jnp.asarray(radius),
         pdist=jnp.asarray(pdist), child=jnp.asarray(child),
@@ -257,7 +282,8 @@ def bulk_build(X: np.ndarray, ids: np.ndarray | None = None, *,
         alive=jnp.asarray(alive), parent=jnp.asarray(parent),
         pslot=jnp.asarray(pslot),
         root=jnp.int32(root), n_nodes=jnp.int32(len(nodes)),
-        height=jnp.int32(height))
+        height=jnp.int32(height),
+        free_list=jnp.asarray(free_list), free_head=jnp.asarray(free_head))
 
 
 # --------------------------------------------------------------------------
@@ -666,8 +692,9 @@ def _delete_fast_impl(tree: TreeArrays, x: jax.Array, obj_id: jax.Array):
     """No-underflow delete.  Returns (tree, found, underflow, leaf_id).
     On underflow the tree is returned UNCHANGED with underflow=True — caller
     runs the host-side merge path.  Locates the object by exact id match and
-    climbs parent pointers for the O(h) radius fold."""
-    hit = (tree.oid == obj_id) & tree.valid
+    climbs parent pointers for the O(h) radius fold.  Negative ids (the NOP
+    pad sentinel) never match."""
+    hit = (tree.oid == obj_id) & tree.valid & (obj_id >= 0)
     found = jnp.any(hit)
     flat = jnp.argmax(hit.reshape(-1))
     leaf = (flat // tree.capacity).astype(jnp.int32)
@@ -712,6 +739,10 @@ delete_fast = jax.jit(_delete_fast_impl)
 OP_NOP, OP_INSERT, OP_DELETE = 0, 1, 2
 # Per-row outcomes.  ST_NOP must stay 0 (same psum argument).
 ST_NOP, ST_APPLIED, ST_OVERFLOW, ST_UNDERFLOW, ST_NOTFOUND = 0, 1, 2, 3, 4
+# Resolved by the on-device split pass (apply_splits): either a single-level
+# leaf split or an escalation-time re-check that found room.  Callers
+# (stream/batcher.py) normalise it to ST_APPLIED after counting.
+ST_SPLIT = 5
 
 
 def _apply_row(t: TreeArrays, vecs0: jax.Array, op, x, oid, leaf0, found0):
@@ -827,7 +858,12 @@ def _locate_oids(tree: TreeArrays, oids: jax.Array):
     sorted_oids = oids[order]
     pos = jnp.searchsorted(sorted_oids, tree.oid)            # [N, cap]
     pos_c = jnp.minimum(pos, B - 1)
-    match = (sorted_oids[pos_c] == tree.oid) & tree.valid
+    # negative requested oids never match: they are the NOP pad sentinel
+    # (stream/batcher.py pads cohorts with oid = -1), and pads repeat — so
+    # without this guard a sentinel-colliding stored id would break both the
+    # uniqueness contract and the pad-rows-are-inert one
+    match = ((sorted_oids[pos_c] == tree.oid) & tree.valid
+             & (sorted_oids[pos_c] >= 0))
     row = jnp.where(match, order[pos_c], B)                  # B → dropped
     flat = jnp.arange(N * cap, dtype=jnp.int32).reshape(N, cap)
     first = jnp.full((B,), N * cap, jnp.int32).at[row].min(flat, mode="drop")
@@ -870,16 +906,468 @@ def _apply_mutations_jit(donate: bool):
 
 
 def apply_mutations(tree: TreeArrays, ops, xs, oids, *,
-                    donate: bool | None = None):
+                    donate: bool | None = None, splits: bool = True):
     """Batched insert/delete apply.  Returns (tree, statuses [B] int32).
 
     ops: [B] int32 opcodes, xs: [B, dim] f32, oids: [B] int32.  Ops apply in
     log order; see ``_apply_mutations_impl`` for escalation statuses.  With
     ``donate`` (default: on accelerators) the input tree's buffers are
-    donated — callers must treat the argument as consumed."""
+    donated — callers must treat the argument as consumed.
+
+    With ``splits`` (default), overflow rows are resolved by the on-device
+    split pass (``apply_splits``) before returning: the common single-level
+    leaf split never leaves HBM, and such rows come back as ``ST_SPLIT``.
+    The orchestration reads the status vector (a [B]-int sync the stream
+    batcher pays anyway); in traced contexts (shard_map — where statuses
+    are abstract) the flag is a no-op and the caller runs the split
+    collective itself (``core.distributed.forest_apply_splits``)."""
     if donate is None:
         donate = jax.default_backend() not in ("cpu",)
     ops = jnp.asarray(ops, jnp.int32)
     xs = jnp.asarray(xs, jnp.float32)
     oids = jnp.asarray(oids, jnp.int32)
-    return _apply_mutations_jit(bool(donate))(tree, ops, xs, oids)
+    tree, status = _apply_mutations_jit(bool(donate))(tree, ops, xs, oids)
+    if splits:
+        try:
+            st_host = np.asarray(status)
+        except jax.errors.ConcretizationTypeError:
+            return tree, status
+        # the post-scan tree is an exclusively-owned intermediate (callers
+        # only ever see the final return), so the split chain can donate
+        # its buffers even where the scan itself must not (the scan input
+        # is the caller's live tree, typically pinned by an epoch)
+        tree, st_host, n_split = resolve_overflows(
+            tree, ops, xs, oids, st_host, donate=True)
+        if n_split:
+            status = jnp.asarray(st_host)
+    return tree, status
+
+
+# --------------------------------------------------------------------------
+# On-device node splits (the mesh-resident mutation control plane)
+# --------------------------------------------------------------------------
+def _promote_and_partition(t: TreeArrays, D, Radd):
+    """mM_RAD promotion + generalized-hyperplane partition of one pending
+    entry set, decision-for-decision equal to core/split.py:minmax_split.
+
+    D: [m, m] pairwise distances between the pending reference values;
+    Radd: [m] the per-entry radius term of the radius scoring matrix
+    C = D + Radd[None, :] (zeros for leaf sets).  Returns the slot layout
+    both halves will be written with: (pi, pj, sel_i, sel_j, pres_i,
+    pres_j, n_i, n_j, r_i, r_j), where sel_*/pres_* are [cap] member
+    indices / occupancy masks in the exact member order the host's
+    sequential ``_rebalance`` produces.
+    """
+    cap = t.capacity
+    m = cap + 1
+    # all ordered pairs in one fused 3-D reduction ([P, m] gather forms
+    # cost ~25x more per scan step on XLA:CPU); the row-major argmin over
+    # the masked upper triangle keeps the first minimal pair, matching
+    # np.argmin over triu_indices exactly.  Values are f32-identical to
+    # the host's f64-cast copies, so every comparison agrees.
+    Cmat = D + Radd[None, :]                                     # [m, m]
+    toi3 = D[:, None, :] <= D[None, :, :]                        # [m, m, m]
+    cand_ri = jnp.max(jnp.where(toi3, Cmat[:, None, :], -_INF), axis=-1)
+    cand_rj = jnp.max(jnp.where(toi3, -_INF, Cmat[None, :, :]), axis=-1)
+    cand_ri = jnp.where(jnp.isfinite(cand_ri), cand_ri, 0.0)
+    cand_rj = jnp.where(jnp.isfinite(cand_rj), cand_rj, 0.0)
+    triu = jnp.asarray(np.triu(np.ones((m, m), bool), k=1))
+    best = jnp.argmin(jnp.where(
+        triu, jnp.maximum(cand_ri, cand_rj), _INF).reshape(-1))
+    pi = (best // m).astype(jnp.int32)
+    pj = (best % m).astype(jnp.int32)
+    mask_i = D[pi] <= D[pj]                                      # [m]
+
+    # sequential min-fill rebalance, order-exactly: host side lists are the
+    # ascending initial members plus moved entries in move order (only one
+    # of the two while-loops can run, so the donating side stays ascending
+    # and argmin's first-minimal == Python min's first-minimal).  ``stamp``
+    # encodes that order so argsort reproduces the host's slot layout.
+    # (fori rather than unrolled: same runtime, ~1s less compile — and the
+    # split scan's compile is the one-time cost every new tree geometry
+    # pays.)
+    from repro.core.split import min_side_for
+    min_side = min_side_for(m, cap, t.min_fill)
+    Dpi = D[pi]
+    Dpj = D[pj]
+
+    def _rb(k, carry):
+        mask, stamp = carry
+        n_i = jnp.sum(mask)
+        need_i = n_i < min_side
+        need_j = (m - n_i) < min_side
+        cand_i = jnp.argmin(jnp.where(mask, _INF, Dpi)).astype(jnp.int32)
+        cand_j = jnp.argmin(jnp.where(mask, Dpj, _INF)).astype(jnp.int32)
+        mv = jnp.where(need_i, cand_i, cand_j)
+        do = need_i | need_j
+        mask = jnp.where(do, mask.at[mv].set(need_i), mask)
+        stamp = jnp.where(do, stamp.at[mv].set(m + k), stamp)
+        return mask, stamp
+
+    mask_i, stamp = jax.lax.fori_loop(
+        0, min_side, _rb, (mask_i, jnp.arange(m, dtype=jnp.int32)))
+    n_i = jnp.sum(mask_i).astype(jnp.int32)
+    n_j = m - n_i
+    BIG = jnp.int32(2 * m + 2)
+    ord_i = jnp.argsort(jnp.where(mask_i, stamp, BIG))
+    ord_j = jnp.argsort(jnp.where(mask_i, BIG, stamp))
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    sel_i = ord_i[:cap]      # n_i, n_j <= cap - 1 (min_side >= 2)
+    sel_j = ord_j[:cap]
+    pres_i = slots < n_i
+    pres_j = slots < n_j
+    r_i = jnp.max(jnp.where(pres_i, (Dpi + Radd)[sel_i], -_INF))
+    r_j = jnp.max(jnp.where(pres_j, (Dpj + Radd)[sel_j], -_INF))
+    return pi, pj, sel_i, sel_j, pres_i, pres_j, n_i, n_j, r_i, r_j
+
+
+def _write_half(t: TreeArrays, row, V, R, C, O, Dp, sel, pres, n):
+    """write_node equivalent: rewrite node ``row`` with the ``sel``-ordered
+    members of the pending set.  Slots beyond the new count keep their
+    stale vecs/radius/pdist exactly as the host's write_node leaves them
+    (oid/child/valid tails are scrubbed), and each member child's
+    parent/pslot pointers are re-aimed (leaf members have child -1 and
+    drop out).  ``row`` may be out of bounds (masked no-op)."""
+    N = t.max_nodes
+    cap = t.capacity
+    rc = jnp.minimum(row, N - 1)     # clamped gather source for stale keeps
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    vecs = t.vecs.at[row].set(
+        jnp.where(pres[:, None], V[sel], t.vecs[rc]), mode="drop")
+    radius = t.radius.at[row].set(
+        jnp.where(pres, R[sel], t.radius[rc]), mode="drop")
+    pdist = t.pdist.at[row].set(
+        jnp.where(pres, Dp[sel], t.pdist[rc]), mode="drop")
+    child = t.child.at[row].set(jnp.where(pres, C[sel], -1), mode="drop")
+    oid = t.oid.at[row].set(jnp.where(pres, O[sel], -1), mode="drop")
+    valid = t.valid.at[row].set(pres, mode="drop")
+    count = t.count.at[row].set(n, mode="drop")
+    kids = jnp.where(pres & (row < N), C[sel], -1)
+    kid_rows = jnp.where(kids >= 0, kids, N)
+    parent = t.parent.at[kid_rows].set(jnp.minimum(row, N - 1), mode="drop",
+                                       unique_indices=True)
+    pslot = t.pslot.at[kid_rows].set(slots, mode="drop",
+                                     unique_indices=True)
+    return dataclasses.replace(t, vecs=vecs, radius=radius, pdist=pdist,
+                               child=child, oid=oid, valid=valid,
+                               count=count, parent=parent, pslot=pslot)
+
+
+def _pop_free(t: TreeArrays, do):
+    """Masked free-ring pop: allocates the same lowest free id the host's
+    ``alloc`` picks (the ring is packed descending), scrubbing the popped
+    slot so the packed representation matches the host recompute.  When
+    ``do`` is False the ring is untouched (the returned id is garbage and
+    must be dropped by the caller's masked writes)."""
+    top = jnp.maximum(t.free_head - 1, 0)
+    n2 = t.free_list[top]
+    pos = jnp.where(do, top, t.max_nodes)
+    free_list = t.free_list.at[pos].set(-1, mode="drop")
+    inc = do.astype(jnp.int32)
+    return dataclasses.replace(
+        t, free_list=free_list, free_head=t.free_head - inc,
+        n_nodes=jnp.where(do, jnp.maximum(t.n_nodes, n2 + 1),
+                          t.n_nodes)), n2
+
+
+def _split_row(t: TreeArrays, op, x, oid, blocked):
+    """One overflow insert resolved on device: the scan body of
+    ``apply_splits``.
+
+    Bitwise-faithful to the host escalation
+    (``_HostView.insert_with_split``) in every case:
+
+      * re-descend from the root on the *live* tree and re-check occupancy
+        — earlier rows in this pass may have freed space or changed
+        routing — and plain-append when the leaf has room;
+      * otherwise run the full multi-level split loop: mM_RAD promotion
+        with minmax_split's exact tie-breaks and member order, free-ring
+        allocation (the same lowest-free-id the host's alloc picks),
+        parent entry replacement + append, pending-set splice on parent
+        overflow, and on-device root growth.
+
+    Escalation ladder: only a near-empty free ring (the host would have to
+    ``_grow`` the node table, a resize no fixed-shape kernel can do)
+    blocks the row — and, to preserve log order, every later overflow row
+    in the pass; merges (delete underflow) remain host-side.
+
+    Shaped like ``_apply_row``: straight-line masked updates, no
+    cond/switch on tree state — on XLA:CPU a conditional returning the
+    tree copies every array at the branch boundary, which at production
+    node counts costs more than the split itself.  Inactive rows enter the
+    split loop with ``done`` already set, so they pay zero iterations.
+    """
+    cap = t.capacity
+    N = t.max_nodes
+    want = (op == OP_INSERT) & ~blocked
+    pn, ps, leaf = _descend_path(t, x)
+    cnt = t.count[leaf]
+    has_room = cnt < cap
+    # worst case allocs: one split per level + a root growth
+    can_split = (~has_room) & (t.free_head >= t.height + 1)
+    do_append = want & has_room
+    do_split = want & can_split
+    ok = do_append | do_split
+    blocked = blocked | (want & ~ok)
+
+    # --- append case: the host's re-check branch (append_entry + fold_up)
+    parentL = t.parent[leaf]
+    has_parent = parentL >= 0
+    pvec = t.vecs[jnp.maximum(parentL, 0), jnp.maximum(t.pslot[leaf], 0)]
+    pd_app = jnp.where(has_parent, _metric_eval(t.metric, x, pvec), 0.0)
+    na = jnp.where(do_append, leaf, N)
+    sa = jnp.minimum(cnt, cap - 1)
+    _fl = dict(mode="drop", unique_indices=True)
+    t = dataclasses.replace(
+        t,
+        vecs=t.vecs.at[na, sa].set(x, **_fl),
+        # explicit 0.0 (not elided as in _apply_row): a leaf reusing an
+        # ex-internal freed slot can carry stale nonzero radius beyond its
+        # count, and the host path writes the zero
+        radius=t.radius.at[na, sa].set(0.0, **_fl),
+        pdist=t.pdist.at[na, sa].set(pd_app, **_fl),
+        oid=t.oid.at[na, sa].set(oid.astype(jnp.int32), **_fl),
+        valid=t.valid.at[na, sa].set(True, **_fl),
+        count=t.count.at[na].add(1, **_fl))
+
+    # --- split case: the host's overflow loop as a bounded while_loop.
+    # Each iteration splits the pending set across the reused node and a
+    # fresh allocation, then installs the promoted pair in the parent
+    # (done), splices the full parent and ascends, or grows a new root
+    # (done).  R carries the node's *stored* radius row — semantically
+    # zero at leaves, but _apply_row elides leaf radius writes, so stale
+    # nonzero values survive there and the host's write_node permutes
+    # them; copying the row keeps the split bitwise-faithful.
+    state = dict(
+        t=t,
+        V=jnp.concatenate([t.vecs[leaf], x[None, :]], axis=0),
+        R=jnp.concatenate([t.radius[leaf], jnp.zeros((1,), jnp.float32)]),
+        C=jnp.concatenate([t.child[leaf],
+                           jnp.full((1,), -1, jnp.int32)]),
+        O=jnp.concatenate([t.oid[leaf],
+                           jnp.reshape(oid.astype(jnp.int32), (1,))]),
+        pend_leaf=jnp.asarray(True),
+        cur=leaf,
+        done=~do_split,
+        grew_root=jnp.asarray(False),
+    )
+
+    def cond_fn(s):
+        return ~s["done"]
+
+    def body(s):
+        t = s["t"]
+        V, R, C, O = s["V"], s["R"], s["C"], s["O"]
+        cur = s["cur"]
+        D = _metric_eval(t.metric, V[:, None, :], V[None, :, :])
+        Radd = jnp.where(s["pend_leaf"], jnp.zeros_like(R), R)
+        (pi, pj, sel_i, sel_j, pres_i, pres_j, n_i, n_j, r_i,
+         r_j) = _promote_and_partition(t, D, Radd)
+
+        parent = t.parent[cur]          # read before any pointer writes
+        pslot_c = jnp.maximum(t.pslot[cur], 0)
+        is_root = parent < 0
+        p_n = jnp.maximum(parent, 0)
+
+        t, n2 = _pop_free(t, jnp.asarray(True))
+        t = _write_half(t, cur, V, R, C, O, D[pi], sel_i, pres_i, n_i)
+        t = _write_half(t, n2, V, R, C, O, D[pj], sel_j, pres_j, n_j)
+        t = dataclasses.replace(
+            t, alive=t.alive.at[n2].set(True),
+            is_leaf=t.is_leaf.at[n2].set(s["pend_leaf"]))
+
+        # --- parent present: replace the entry pointing at cur with
+        # promoted i (the pending splice below must see this write)
+        gp = t.parent[p_n]
+        gv = t.vecs[jnp.maximum(gp, 0), jnp.maximum(t.pslot[p_n], 0)]
+        has_gp = gp >= 0
+        pd_i = jnp.where(has_gp, _metric_eval(t.metric, V[pi], gv), 0.0)
+        pd_j = jnp.where(has_gp, _metric_eval(t.metric, V[pj], gv), 0.0)
+        rowP = jnp.where(is_root, N, p_n)
+        t = dataclasses.replace(
+            t,
+            vecs=t.vecs.at[rowP, pslot_c].set(V[pi], **_fl),
+            radius=t.radius.at[rowP, pslot_c].set(r_i, **_fl),
+            pdist=t.pdist.at[rowP, pslot_c].set(pd_i, **_fl),
+            child=t.child.at[rowP, pslot_c].set(cur, **_fl))
+
+        # --- parent has room: append promoted j, terminal
+        parent_room = t.count[p_n] < cap
+        app = ~is_root & parent_room
+        ap = t.count[p_n]
+        apc = jnp.minimum(ap, cap - 1)
+        rowA = jnp.where(app, p_n, N)
+        rowA2 = jnp.where(app, n2, N)
+        t = dataclasses.replace(
+            t,
+            vecs=t.vecs.at[rowA, apc].set(V[pj], **_fl),
+            radius=t.radius.at[rowA, apc].set(r_j, **_fl),
+            pdist=t.pdist.at[rowA, apc].set(pd_j, **_fl),
+            child=t.child.at[rowA, apc].set(n2, **_fl),
+            oid=t.oid.at[rowA, apc].set(-1, **_fl),
+            valid=t.valid.at[rowA, apc].set(True, **_fl),
+            count=t.count.at[rowA].add(1, **_fl),
+            parent=t.parent.at[rowA2].set(p_n, **_fl),
+            pslot=t.pslot.at[rowA2].set(ap, **_fl))
+
+        # --- no parent: grow a new root (host: alloc + two append_entry
+        # calls — slots 0/1 written, vecs/radius/pdist beyond stay stale)
+        t, nr = _pop_free(t, is_root)
+        nrc = jnp.minimum(nr, N - 1)
+        rowR = jnp.where(is_root, nrc, N)
+        two = jnp.arange(cap) < 2
+        slot01 = jnp.where(jnp.arange(cap) == 0, cur, n2)
+        rowRc = jnp.where(is_root, cur, N)
+        rowRn = jnp.where(is_root, n2, N)
+        t = dataclasses.replace(
+            t,
+            vecs=t.vecs.at[rowR, 0].set(V[pi], **_fl),
+            radius=t.radius.at[rowR, 0].set(r_i, **_fl),
+            pdist=t.pdist.at[rowR, 0].set(0.0, **_fl))
+        t = dataclasses.replace(
+            t,
+            vecs=t.vecs.at[rowR, 1].set(V[pj], **_fl),
+            radius=t.radius.at[rowR, 1].set(r_j, **_fl),
+            pdist=t.pdist.at[rowR, 1].set(0.0, **_fl),
+            child=t.child.at[rowR].set(jnp.where(two, slot01, -1),
+                                       mode="drop"),
+            oid=t.oid.at[rowR].set(jnp.full((cap,), -1, jnp.int32),
+                                   mode="drop"),
+            valid=t.valid.at[rowR].set(two, mode="drop"),
+            count=t.count.at[rowR].set(2, mode="drop"),
+            is_leaf=t.is_leaf.at[rowR].set(False, mode="drop"),
+            alive=t.alive.at[rowR].set(True, mode="drop"),
+            parent=(t.parent.at[rowR].set(-1, mode="drop")
+                    .at[rowRc].set(nrc, **_fl).at[rowRn].set(nrc, **_fl)),
+            pslot=(t.pslot.at[rowR].set(-1, mode="drop")
+                   .at[rowRc].set(0, **_fl).at[rowRn].set(1, **_fl)),
+            root=jnp.where(is_root, nrc, t.root),
+            height=t.height + is_root.astype(jnp.int32))
+
+        # --- parent full: splice its (post-replacement) entries + promoted
+        # j as the next pending set and ascend; n2's parent pointer is
+        # fixed by the next level's _write_half, exactly like the host
+        splice = ~is_root & ~parent_room
+        V2 = jnp.concatenate([t.vecs[p_n], V[pj][None, :]], axis=0)
+        R2 = jnp.concatenate([t.radius[p_n], r_j[None]])
+        C2 = jnp.concatenate([t.child[p_n], n2[None]])
+        O2 = jnp.concatenate([t.oid[p_n], jnp.full((1,), -1, jnp.int32)])
+        return dict(
+            t=t,
+            V=jnp.where(splice, V2, V),
+            R=jnp.where(splice, R2, R),
+            C=jnp.where(splice, C2, C),
+            O=jnp.where(splice, O2, O),
+            pend_leaf=s["pend_leaf"] & ~splice,
+            cur=jnp.where(splice, p_n, cur),
+            done=~splice,
+            grew_root=is_root,
+        )
+
+    s = jax.lax.while_loop(cond_fn, body, state)
+    t = s["t"]
+
+    # --- radius fold: the append case folds the descent path; a split that
+    # ended in a parent append folds from the last split node (the host's
+    # fold_up(cur)); root growth folds nothing (promoted radii are exact).
+    # Non-fold rows climb from the root so the walk exits immediately.
+    fold_split = do_split & ~s["grew_root"]
+    pn2, ps2 = path_to_root(t, jnp.where(fold_split, s["cur"], t.root))
+    pn_f = jnp.where(do_append, pn, jnp.where(fold_split, pn2, -1))
+    ps_f = jnp.where(do_append, ps, jnp.where(fold_split, ps2, -1))
+    t = _refresh_path_radii(t, pn_f, ps_f)
+
+    status = jnp.where(ok, ST_SPLIT,
+                       jnp.where(op == OP_INSERT, ST_OVERFLOW, ST_NOP))
+    return t, status.astype(jnp.int32), blocked
+
+
+def _apply_splits_impl(tree: TreeArrays, ops: jax.Array, xs: jax.Array,
+                       oids: jax.Array):
+    def step(carry, row):
+        t, blocked = carry
+        op, x, oid = row
+        t, st, blocked = _split_row(t, op, x, oid, blocked)
+        return (t, blocked), st
+
+    (tree, _), st = jax.lax.scan(step, (tree, jnp.zeros((), bool)),
+                                 (ops, xs, oids))
+    return tree, st
+
+
+@functools.cache
+def _apply_splits_jit(donate: bool):
+    return jax.jit(_apply_splits_impl,
+                   donate_argnums=(0,) if donate else ())
+
+
+def apply_splits(tree: TreeArrays, ops, xs, oids, *,
+                 donate: bool | None = None):
+    """On-device split pass over a compacted batch of overflow inserts.
+
+    ops/xs/oids: [K] rows previously reported ST_OVERFLOW by
+    ``apply_mutations`` (pad with OP_NOP / oid -1 / zero vecs), in log
+    order.  Returns (tree, statuses [K]): ST_SPLIT for rows resolved on
+    device, ST_OVERFLOW for rows needing the host control plane (multi-level
+    or root splits, or an empty free ring — and, to preserve log order,
+    every row after the first such failure), ST_NOP for pads."""
+    if donate is None:
+        donate = jax.default_backend() not in ("cpu",)
+    ops = jnp.asarray(ops, jnp.int32)
+    xs = jnp.asarray(xs, jnp.float32)
+    oids = jnp.asarray(oids, jnp.int32)
+    return _apply_splits_jit(bool(donate))(tree, ops, xs, oids)
+
+
+# Fixed dispatch width for the split pass: exactly ONE jit entry per tree
+# geometry.  A per-count bucket ladder halves the padded-NOP waste but
+# multiplies the (seconds-scale) split-scan compile by the ladder depth,
+# which dominates every realistic serving window.
+SPLIT_CHUNK = 8
+
+
+def split_chunks(n: int):
+    """Fixed-width cover of ``n`` rows (the last chunk padded by the
+    dispatcher)."""
+    return [SPLIT_CHUNK] * ((n + SPLIT_CHUNK - 1) // SPLIT_CHUNK)
+
+
+def resolve_overflows(tree: TreeArrays, ops, xs, oids, statuses, *,
+                      donate: bool | None = None):
+    """Compact a batch's ST_OVERFLOW rows and run the device split pass.
+
+    statuses: [B] int32 on the host.  Returns (tree, statuses, n_resolved)
+    with resolved rows re-marked ST_SPLIT.  The compaction keeps log order
+    and dispatches power-of-two-ladder scans (``split_chunks``); a chunk
+    reporting a blocked row stops the chunk loop, so the residual rows
+    reach the host in log order exactly as if a single scan had processed
+    the whole set.  Tree data never leaves the device — only the tiny
+    status vector does, and callers (the stream batcher) sync that anyway
+    to drive escalation."""
+    statuses = np.asarray(statuses)
+    ops_np = np.asarray(ops)
+    idx = np.nonzero((statuses == ST_OVERFLOW) & (ops_np == OP_INSERT))[0]
+    if not len(idx):
+        return tree, statuses, 0
+    xs_np = np.asarray(xs, np.float32)
+    oids_np = np.asarray(oids, np.int32)
+    out = statuses.copy()
+    n_resolved = 0
+    c0 = 0
+    for w in split_chunks(len(idx)):
+        chunk = idx[c0:c0 + w]
+        c0 += w
+        k = len(chunk)
+        ops_k = np.full(w, OP_NOP, np.int32)
+        ops_k[:k] = OP_INSERT
+        xs_k = np.zeros((w, xs_np.shape[1]), np.float32)
+        xs_k[:k] = xs_np[chunk]
+        oids_k = np.full(w, -1, np.int32)
+        oids_k[:k] = oids_np[chunk]
+        tree, st = apply_splits(tree, ops_k, xs_k, oids_k, donate=donate)
+        st = np.asarray(jax.device_get(st))[:k]
+        out[chunk[st == ST_SPLIT]] = ST_SPLIT
+        n_resolved += int((st == ST_SPLIT).sum())
+        if (st == ST_OVERFLOW).any():
+            break   # blocked: the rest goes to the host in log order
+    return tree, out, n_resolved

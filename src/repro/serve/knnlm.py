@@ -165,9 +165,20 @@ class KnnLmDatastore:
         return n
 
     def knn_logits(self, h: jax.Array, vocab: int) -> jax.Array:
-        """h: [b, D] query hidden states -> kNN log-probs [b, vocab]."""
-        res = self.engine.knn(self.shard_queries(h), k=self.cfg.k,
-                              max_frontier=self.cfg.max_frontier)
+        """h: [b, D] query hidden states -> kNN log-probs [b, vocab].
+
+        With streaming enabled the descent runs against a *pinned* epoch
+        (``EpochManager.reading``), so a concurrent ``add_batch`` /
+        ``evict_batch`` writer can publish and retire versions without ever
+        dropping the tree this query is descending."""
+        if self.stream is not None:
+            from repro.core import smtree
+            with self.stream.epochs.reading() as tree:
+                res = smtree.knn(tree, self.shard_queries(h), k=self.cfg.k,
+                                 max_frontier=self.cfg.max_frontier)
+        else:
+            res = self.engine.knn(self.shard_queries(h), k=self.cfg.k,
+                                  max_frontier=self.cfg.max_frontier)
         d = res.dists                                     # [b, k]
         ids = np.asarray(res.ids)                          # [b, k]
         vals = jnp.asarray(np.where(ids >= 0, self.values[np.maximum(ids, 0)],

@@ -30,10 +30,11 @@ import numpy as np
 
 from repro.core import smtree
 from repro.core.smtree import (OP_DELETE, OP_INSERT, OP_NOP, ST_APPLIED,
-                               ST_NOTFOUND, ST_OVERFLOW, ST_UNDERFLOW,
-                               TreeArrays)
+                               ST_NOTFOUND, ST_OVERFLOW, ST_SPLIT,
+                               ST_UNDERFLOW, TreeArrays)
 
 __all__ = ["MutationBatcher", "BatchResult", "cut_cohorts", "pad_to_bucket",
+           "check_oids", "escalate_rows",
            "OP_INSERT", "OP_DELETE", "OP_NOP"]
 
 
@@ -43,6 +44,19 @@ class BatchResult:
     n_fast: int               # rows absorbed by the jitted scan
     n_escalated: int          # rows resolved by the host control plane
     n_cohorts: int
+    n_split: int = 0          # rows resolved by the on-device split pass
+
+
+def check_oids(oids: np.ndarray) -> None:
+    """Boundary validation for mutation logs: negative object ids are
+    reserved (the batcher pads cohorts with the oid = -1 NOP sentinel, and
+    the jitted paths treat negatives as never-matching), so they must be
+    rejected before a batch is WAL-framed or applied."""
+    oids = np.asarray(oids)
+    if len(oids) and int(oids.min()) < 0:
+        raise ValueError(
+            "negative object ids are reserved (NOP pad sentinel); got "
+            f"min oid {int(oids.min())}")
 
 
 def cut_cohorts(oids: np.ndarray) -> list[tuple[int, int]]:
@@ -74,6 +88,37 @@ def pad_to_bucket(n: int, cap: int) -> int:
     return min(b, cap)
 
 
+def escalate_rows(tree: TreeArrays, statuses: np.ndarray, ops, xs,
+                  oids) -> TreeArrays:
+    """Host control plane for the rows the device could not absorb.
+
+    Overflow rows (multi-level / root splits, exhausted free ring) are
+    processed before underflow rows, each group in log order.  The ordering
+    is load-bearing for the device-split transparency property: the on-device
+    split pass handles a log-order *prefix* of a cohort's overflow rows, so
+    running the overflow remainder first keeps the total split order
+    identical whether device splits are on or off — within a conflict-free
+    cohort the two groups touch disjoint objects, so the reorder is
+    semantically invisible.  Mutates ``statuses`` in place; returns the
+    updated tree."""
+    rows = [i for i, st in enumerate(statuses) if st == ST_OVERFLOW]
+    rows += [i for i, st in enumerate(statuses) if st == ST_UNDERFLOW]
+    if not rows:
+        return tree
+    from repro.core.engine import _HostView
+    hv = _HostView(tree)
+    for i in rows:
+        if ops[i] == OP_INSERT:
+            hv.insert_with_split(np.asarray(xs[i], np.float32),
+                                 int(oids[i]))
+            statuses[i] = ST_APPLIED
+        else:
+            ok = hv.delete_with_merge(np.asarray(xs[i], np.float32),
+                                      int(oids[i]))
+            statuses[i] = ST_APPLIED if ok else ST_NOTFOUND
+    return hv.to_tree()
+
+
 class MutationBatcher:
     """Applies mutation logs to one ``TreeArrays`` (single tree / one forest
     shard).  Owns the tree between calls; read it back via ``.tree``.
@@ -82,46 +127,37 @@ class MutationBatcher:
     one tree of memory on accelerators) — only safe when no other reference
     to the tree is live, which epoch publication violates: a pinned epoch
     (stream/epoch.py) holds the same arrays the next batch would consume.
-    The stream pipeline therefore leaves donation off."""
+    The stream pipeline therefore leaves donation off.
+
+    ``device_splits=False`` disables the on-device single-level split pass
+    (every overflow escalates to the host, the PR-3 behaviour) — kept as the
+    benchmark baseline and the bitwise-transparency test reference."""
 
     def __init__(self, tree: TreeArrays, *, max_batch: int = 4096,
-                 donate: bool = False):
+                 donate: bool = False, device_splits: bool = True):
         self.tree = tree
         self.max_batch = int(max_batch)
         self.donate = donate
+        self.device_splits = device_splits
 
     # -- host escalation ---------------------------------------------------
     def _escalate(self, statuses: np.ndarray, ops, xs, oids) -> np.ndarray:
-        rows = [i for i, st in enumerate(statuses)
-                if st in (ST_OVERFLOW, ST_UNDERFLOW)]
-        if not rows:
-            return statuses
-        from repro.core.engine import _HostView
-        hv = _HostView(self.tree)
-        for i in rows:
-            if ops[i] == OP_INSERT:
-                hv.insert_with_split(np.asarray(xs[i], np.float32),
-                                     int(oids[i]))
-                statuses[i] = ST_APPLIED
-            else:
-                ok = hv.delete_with_merge(np.asarray(xs[i], np.float32),
-                                          int(oids[i]))
-                statuses[i] = ST_APPLIED if ok else ST_NOTFOUND
-        self.tree = hv.to_tree()
+        self.tree = escalate_rows(self.tree, statuses, ops, xs, oids)
         return statuses
 
     # -- public API --------------------------------------------------------
     def apply(self, ops, xs, oids) -> BatchResult:
         """Apply a mutation log in order.  ops [B] (OP_*), xs [B, dim],
-        oids [B].  Returns per-row statuses; the updated tree is
-        ``self.tree``."""
+        oids [B] (non-negative).  Returns per-row statuses; the updated
+        tree is ``self.tree``."""
         ops = np.asarray(ops, np.int32)
         xs = np.asarray(xs, np.float32)
         oids = np.asarray(oids, np.int32)
         assert ops.shape == oids.shape == xs.shape[:1], \
             (ops.shape, oids.shape, xs.shape)
+        check_oids(oids)
         statuses = np.zeros(len(ops), np.int32)
-        n_fast = n_esc = 0
+        n_fast = n_esc = n_split = 0
         cohorts = cut_cohorts(oids)
         for start, end in cohorts:
             for cs in range(start, end, self.max_batch):
@@ -129,9 +165,11 @@ class MutationBatcher:
                 st = self._apply_cohort(ops[cs:ce], xs[cs:ce], oids[cs:ce])
                 n_esc += int(np.isin(st, (ST_OVERFLOW, ST_UNDERFLOW)).sum())
                 n_fast += int((st == ST_APPLIED).sum())
+                n_split += int((st == ST_SPLIT).sum())
+                st[st == ST_SPLIT] = ST_APPLIED
                 statuses[cs:ce] = self._escalate(st, ops[cs:ce], xs[cs:ce],
                                                  oids[cs:ce])
-        return BatchResult(statuses, n_fast, n_esc, len(cohorts))
+        return BatchResult(statuses, n_fast, n_esc, len(cohorts), n_split)
 
     def _apply_cohort(self, ops, xs, oids) -> np.ndarray:
         n = len(ops)
@@ -143,7 +181,8 @@ class MutationBatcher:
             xs = np.concatenate([xs, np.zeros((pad, xs.shape[1]),
                                               np.float32)])
         tree, st = smtree.apply_mutations(self.tree, ops, xs, oids,
-                                          donate=self.donate)
+                                          donate=self.donate,
+                                          splits=self.device_splits)
         st = np.array(jax.device_get(st[:n]))   # copy: escalation mutates
         self.tree = tree
         return st

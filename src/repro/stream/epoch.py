@@ -9,13 +9,17 @@ through the batcher.  Handoff is O(1) (a dict insert); no copy, no lock on
 the data plane (DESIGN.md §10).
 
     mgr = EpochManager(tree0)
-    e, t = mgr.acquire()          # reader pins the current version
-    ...query t...                 # immutable, whatever the writer does
-    mgr.release(e)                # retirement happens here if superseded
+    with mgr.reading() as t:      # reader pins the current version
+        ...query t...             # immutable, whatever the writer does
     mgr.publish(new_tree)         # writer hands off the next epoch
+
+(``acquire``/``release`` remain for readers whose pin outlives a single
+scope; ``reading()`` is the recommended form — it cannot leak a pin on an
+exception mid-descent.)
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 from typing import Any
 
@@ -39,11 +43,16 @@ class EpochManager:
     # -- reader side -------------------------------------------------------
     @property
     def epoch(self) -> int:
-        return self._latest
+        # locked: an unlocked read can observe _latest mid-publish on
+        # another thread (torn against _versions/_refs bookkeeping)
+        with self._lock:
+            return self._latest
 
     def current(self) -> tuple[int, Any]:
-        """Borrow the latest version without pinning (single-threaded
-        readers that finish before the next retire)."""
+        """Borrow the latest version without pinning.  Only safe for
+        readers that provably finish before the writer's next publish can
+        retire it — a long descent over a borrowed tree races
+        ``_retire_locked``.  Serving paths should use ``reading()``."""
         with self._lock:
             return self._latest, self._versions[self._latest]
 
@@ -53,6 +62,20 @@ class EpochManager:
             e = self._latest
             self._refs[e] += 1
             return e, self._versions[e]
+
+    @contextlib.contextmanager
+    def reading(self):
+        """Context manager over acquire/release: pins the latest version
+        for the duration of the block and releases it even on error.
+
+            with mgr.reading() as tree:
+                ...query tree...
+        """
+        e, tree = self.acquire()
+        try:
+            yield tree
+        finally:
+            self.release(e)
 
     def release(self, epoch: int) -> None:
         with self._lock:

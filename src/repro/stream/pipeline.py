@@ -22,11 +22,13 @@ replay.  Replay routes every record back through the identical code paths
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from repro.core import smtree
 from repro.core.smtree import OP_DELETE, OP_INSERT, TreeArrays, empty_tree
-from repro.stream.batcher import BatchResult, MutationBatcher
+from repro.stream.batcher import (BatchResult, MutationBatcher, check_oids,
+                                  cut_cohorts, escalate_rows, pad_to_bucket)
 from repro.stream.epoch import EpochManager
 from repro.stream.rebalance import (collect_stats, live_objects,
                                     needs_rebalance, rebalance_shards)
@@ -41,15 +43,32 @@ def _mutation_log(xs, oids, op: int):
     return np.full(len(oids), op, np.int32), xs, oids
 
 
+def _pad_cohort(ops, xs, oids, owner, max_batch: int):
+    """Pad a cohort slice to its power-of-two bucket with NOP rows (oid -1,
+    owner 0 — inert on every shard) so the collective jit cache stays one
+    entry per bucket size, exactly like the batcher's host path."""
+    n = len(ops)
+    bucket = pad_to_bucket(n, max_batch)
+    if bucket == n:
+        return ops, xs, oids, owner
+    pad = bucket - n
+    return (np.concatenate([ops, np.full(pad, smtree.OP_NOP, np.int32)]),
+            np.concatenate([xs, np.zeros((pad, xs.shape[1]), np.float32)]),
+            np.concatenate([oids, np.full(pad, -1, np.int32)]),
+            np.concatenate([owner, np.zeros(pad, np.int32)]))
+
+
 class StreamingEngine:
     """WAL-backed batched mutation pipeline over a single SM-tree."""
 
     def __init__(self, tree: TreeArrays, *, wal: WriteAheadLog | None = None,
-                 ckpt=None, max_batch: int = 4096, donate: bool = False):
+                 ckpt=None, max_batch: int = 4096, donate: bool = False,
+                 device_splits: bool = True):
         # donation would consume the buffers published as the previous
         # epoch out from under pinned readers — see MutationBatcher
         self.batcher = MutationBatcher(tree, max_batch=max_batch,
-                                       donate=donate)
+                                       donate=donate,
+                                       device_splits=device_splits)
         self.wal = wal
         self.ckpt = ckpt          # dist.checkpoint.CheckpointManager
         self.epochs = EpochManager(tree)
@@ -62,7 +81,10 @@ class StreamingEngine:
     # -- mutations ---------------------------------------------------------
     def apply(self, ops, xs, oids, *, log: bool = True) -> BatchResult:
         """Apply one mutation batch; frames it into the WAL first so an
-        acknowledged batch is always replayable."""
+        acknowledged batch is always replayable.  Negative oids are rejected
+        here — before the WAL append — so a bad batch can neither collide
+        with the batcher's pad sentinel nor poison replay."""
+        check_oids(oids)
         if log and self.wal is not None:
             self.wal.append_batch(np.asarray(ops, np.int8), xs, oids)
         res = self.batcher.apply(ops, xs, oids)
@@ -126,21 +148,50 @@ def _tree_template(extra: dict, max_nodes: int | None = None) -> TreeArrays:
 class StreamingForest:
     """WAL-backed batched mutation pipeline over a sharded SM-forest.
 
-    Host-centric control plane: shards are held as per-shard TreeArrays and
-    mutated shard-at-a-time (the mesh-resident stacked form for shard_map
-    serving is materialised on demand via ``stacked()`` /
-    ``core.distributed.forest_apply_mutations``)."""
+    Two control-plane modes:
+
+      * host-centric (``mesh=None``): shards are held as per-shard
+        TreeArrays and mutated shard-at-a-time through per-shard batchers —
+        each shard's cohorts still run the fused device scan + split pass.
+      * mesh-resident (``mesh=`` a Mesh whose ``axis`` has one device per
+        shard): the stacked forest lives on the mesh and every WAL batch is
+        applied as cut-cohorts → one ``forest_apply_mutations`` collective →
+        one ``forest_apply_splits`` collective over the compacted overflow
+        rows → psum'd statuses.  Tree pages never leave HBM; the host sees
+        only the per-row status vectors.  Residual escalations (multi-level
+        or root splits, merges) unstack the affected shards to the host
+        control plane — the rare path.
+
+    Both modes produce bitwise-identical shards for conflict-free batches
+    (tests/test_device_split.py): the collective is the same masked scan +
+    split pass the batcher runs, and host escalation uses the same code in
+    the same (overflow-first) order."""
 
     def __init__(self, trees: list[TreeArrays], *,
                  wal: WriteAheadLog | None = None, ckpt=None,
                  max_batch: int = 4096, max_skew: float = 1.5,
-                 min_objects: int = 64):
-        self.batchers = [MutationBatcher(t, max_batch=max_batch)
+                 min_objects: int = 64, mesh=None, axis: str = "model",
+                 device_splits: bool = True):
+        self.device_splits = device_splits
+        self.batchers = [MutationBatcher(t, max_batch=max_batch,
+                                         device_splits=device_splits)
                          for t in trees]
         self.wal = wal
         self.ckpt = ckpt
+        self.max_batch = int(max_batch)
         self.max_skew = max_skew
         self.min_objects = min_objects
+        self.mesh = mesh
+        self.axis = axis
+        if mesh is not None and mesh.shape[axis] != len(trees):
+            raise ValueError(
+                f"mesh axis {axis!r} has {mesh.shape[axis]} devices for "
+                f"{len(trees)} shards (need exactly one per shard)")
+        # mesh mode: the stacked forest is the source of truth between
+        # rebalances; None = truth lives in the per-shard batchers
+        self._stacked: TreeArrays | None = None
+        self._unstack_cache: tuple | None = None   # (stacked, shard views)
+        self._shard_nodes = [t.max_nodes for t in trees]
         self.epochs = EpochManager(tuple(self.trees))
         self.owner: dict[int, int] = {}
         self._step = 0
@@ -149,6 +200,16 @@ class StreamingForest:
 
     @property
     def trees(self) -> list[TreeArrays]:
+        if self._stacked is not None:
+            # cache the unstacked view per stacked-forest identity: slicing
+            # materialises per-shard copies on CPU, and epoch publication +
+            # stats read this after every batch
+            if (self._unstack_cache is None
+                    or self._unstack_cache[0] is not self._stacked):
+                from repro.core.distributed import unstack_forest
+                self._unstack_cache = (self._stacked, unstack_forest(
+                    self._stacked, max_nodes=self._shard_nodes))
+            return self._unstack_cache[1]
         return [b.tree for b in self.batchers]
 
     @property
@@ -191,28 +252,128 @@ class StreamingForest:
         ops = np.asarray(ops, np.int32)
         xs = np.asarray(xs, np.float32)
         oids = np.asarray(oids, np.int32)
+        check_oids(oids)
         if log and self.wal is not None:
             self.wal.append_batch(ops.astype(np.int8), xs, oids)
         owner = self.route(ops, oids)
-        statuses = np.zeros(len(ops), np.int32)
-        n_fast = n_esc = n_coh = 0
-        for s in range(self.n_shards):
-            rows = np.nonzero(owner == s)[0]
-            if not len(rows):
-                continue
-            r = self.batchers[s].apply(ops[rows], xs[rows], oids[rows])
-            statuses[rows] = r.statuses
-            n_fast += r.n_fast
-            n_esc += r.n_escalated
-            n_coh += r.n_cohorts
-        applied = statuses == smtree.ST_APPLIED
+        if self.mesh is not None:
+            res = self._apply_mesh(ops, xs, oids, owner)
+        else:
+            res = self._apply_host(ops, xs, oids, owner)
+        applied = res.statuses == smtree.ST_APPLIED
         for i in np.nonzero(applied)[0]:
             if ops[i] == OP_INSERT:
                 self.owner[int(oids[i])] = int(owner[i])
             else:
                 self.owner.pop(int(oids[i]), None)
         self.epochs.publish(tuple(self.trees))
-        return BatchResult(statuses, n_fast, n_esc, n_coh)
+        return res
+
+    def _apply_host(self, ops, xs, oids, owner) -> BatchResult:
+        """Host-centric path: route rows to their shard's batcher.
+
+        Cohorts are cut on the *global* log — the same boundaries the mesh
+        path's collectives use — so escalation interleaves with the scans
+        at identical points in every shard's op sequence and the two modes
+        stay bitwise-interchangeable (a shard-local cut would let one
+        shard's scan run ahead of another shard's repeat-induced
+        boundary)."""
+        statuses = np.zeros(len(ops), np.int32)
+        n_fast = n_esc = n_split = 0
+        cohorts = cut_cohorts(oids)
+        for start, end in cohorts:
+            for cs in range(start, end, self.max_batch):
+                ce = min(cs + self.max_batch, end)
+                for s in range(self.n_shards):
+                    rows = cs + np.nonzero(owner[cs:ce] == s)[0]
+                    if not len(rows):
+                        continue
+                    r = self.batchers[s].apply(ops[rows], xs[rows],
+                                               oids[rows])
+                    statuses[rows] = r.statuses
+                    n_fast += r.n_fast
+                    n_esc += r.n_escalated
+                    n_split += r.n_split
+        return BatchResult(statuses, n_fast, n_esc, len(cohorts), n_split)
+
+    def _apply_mesh(self, ops, xs, oids, owner) -> BatchResult:
+        """Mesh-resident path: cut-cohorts → one collective apply + one
+        collective split pass per cohort → psum'd statuses; host escalation
+        only for the residual multi-level rows."""
+        from repro.core import distributed as dist
+        if self._stacked is None:
+            self._stacked = dist.stack_trees([b.tree for b in self.batchers])
+        forest = self._stacked
+        statuses = np.zeros(len(ops), np.int32)
+        n_fast = n_esc = n_split = 0
+        cohorts = cut_cohorts(oids)
+        for start, end in cohorts:
+            for cs in range(start, end, self.max_batch):
+                ce = min(cs + self.max_batch, end)
+                c_ops, c_xs, c_oids, c_owner = _pad_cohort(
+                    ops[cs:ce], xs[cs:ce], oids[cs:ce], owner[cs:ce],
+                    self.max_batch)
+                forest, st = dist.forest_apply_mutations(
+                    forest, self.mesh, c_ops, c_xs, c_oids, c_owner,
+                    axis=self.axis)
+                st = np.array(jax.device_get(st))[:ce - cs]
+                ovf = (np.nonzero((st == smtree.ST_OVERFLOW)
+                                  & (c_ops[:ce - cs] == OP_INSERT))[0]
+                       if self.device_splits else np.array([], np.int64))
+                # power-of-two-ladder split collectives (bounded jit cache
+                # per forest geometry, no padded NOP steps — a pad costs
+                # as much as a real split); stopping at the first
+                # still-blocked chunk is conservative but bitwise-safe —
+                # the host control plane produces the identical split for
+                # any row the device would have absorbed
+                c0 = 0
+                for w in smtree.split_chunks(len(ovf)):
+                    chunk = ovf[c0:c0 + w]
+                    c0 += w
+                    k = len(chunk)
+                    k_ops = np.full(w, smtree.OP_NOP, np.int32)
+                    k_ops[:k] = OP_INSERT
+                    k_xs = np.zeros((w, xs.shape[1]), np.float32)
+                    k_xs[:k] = c_xs[chunk]
+                    k_oids = np.full(w, -1, np.int32)
+                    k_oids[:k] = c_oids[chunk]
+                    k_owner = np.zeros(w, np.int32)
+                    k_owner[:k] = c_owner[chunk]
+                    forest, k_st = dist.forest_apply_splits(
+                        forest, self.mesh, k_ops, k_xs, k_oids, k_owner,
+                        axis=self.axis)
+                    k_st = np.asarray(jax.device_get(k_st))[:k]
+                    st[chunk[k_st == smtree.ST_SPLIT]] = smtree.ST_SPLIT
+                    if (k_st == smtree.ST_OVERFLOW).any():
+                        break
+                esc = np.isin(st, (smtree.ST_OVERFLOW, smtree.ST_UNDERFLOW))
+                n_esc += int(esc.sum())
+                n_split += int((st == smtree.ST_SPLIT).sum())
+                n_fast += int((st == smtree.ST_APPLIED).sum())
+                st[st == smtree.ST_SPLIT] = smtree.ST_APPLIED
+                if esc.any():
+                    forest = self._escalate_mesh(
+                        forest, st, ops[cs:ce], xs[cs:ce], oids[cs:ce],
+                        owner[cs:ce])
+                statuses[cs:ce] = st
+        self._stacked = forest
+        return BatchResult(statuses, n_fast, n_esc, len(cohorts), n_split)
+
+    def _escalate_mesh(self, forest, st, ops, xs, oids, owner):
+        """Unstack only to run the host control plane on the shards that
+        still hold unresolved rows, then restack (the rare path)."""
+        from repro.core import distributed as dist
+        trees = dist.unstack_forest(forest, max_nodes=self._shard_nodes)
+        esc = np.nonzero(np.isin(st, (smtree.ST_OVERFLOW,
+                                      smtree.ST_UNDERFLOW)))[0]
+        for s in sorted(set(int(owner[i]) for i in esc)):
+            rows = np.array([i for i in esc if owner[i] == s])
+            sub = st[rows].copy()
+            trees[s] = escalate_rows(trees[s], sub, ops[rows], xs[rows],
+                                     oids[rows])
+            st[rows] = sub
+        self._shard_nodes = [t.max_nodes for t in trees]
+        return dist.stack_trees(trees)
 
     def insert_batch(self, xs, oids, **kw) -> BatchResult:
         ops, xs, oids = _mutation_log(xs, oids, OP_INSERT)
@@ -224,14 +385,17 @@ class StreamingForest:
 
     # -- queries (host-side scatter-gather; mesh serving uses forest_knn) --
     def knn(self, queries, *, k: int = 8, max_frontier: int = 64):
-        """Global kNN over the current epoch's shards: per-shard cohort
-        descent + host top-k merge.  Returns (dists [b, k], ids [b, k])."""
-        _, trees = self.epochs.current()
-        ds, ids = [], []
-        for t in trees:
-            res = smtree.knn(t, queries, k=k, max_frontier=max_frontier)
-            ds.append(np.asarray(res.dists))
-            ids.append(np.asarray(res.ids))
+        """Global kNN over a *pinned* epoch's shards: per-shard cohort
+        descent + host top-k merge.  Returns (dists [b, k], ids [b, k]).
+        The pin (``EpochManager.reading``) keeps the version resident for
+        the whole descent even if a concurrent writer publishes and retires
+        epochs mid-query."""
+        with self.epochs.reading() as trees:
+            ds, ids = [], []
+            for t in trees:
+                res = smtree.knn(t, queries, k=k, max_frontier=max_frontier)
+                ds.append(np.asarray(res.dists))
+                ids.append(np.asarray(res.ids))
         d = np.concatenate(ds, axis=1)
         i = np.concatenate(ids, axis=1)
         order = np.argsort(d, axis=1, kind="stable")[:, :k]
@@ -255,12 +419,18 @@ class StreamingForest:
         trees, moved, _ = rebalance_shards(self.trees, seed=seed)
         for b, t in zip(self.batchers, trees):
             b.tree = t
+        # rebuilds happen host-side: drop the mesh-resident stacked form,
+        # the next collective apply restacks from the fresh shards
+        self._stacked = None
+        self._shard_nodes = [t.max_nodes for t in trees]
         self.n_rebalances += 1
         self._rebuild_ownership()
         self.epochs.publish(tuple(self.trees))
 
     # -- snapshots ---------------------------------------------------------
     def stacked(self) -> TreeArrays:
+        if self._stacked is not None:
+            return self._stacked
         from repro.core.distributed import stack_trees
         return stack_trees(self.trees)
 

@@ -105,6 +105,66 @@ def scenario_forest_stream():
     assert (ids0[ok] == new_ids[ok]).all()
 
 
+def scenario_forest_device_splits():
+    """Mesh-resident mutation control plane on 8 shards: near-capacity
+    bulk builds force leaf splits, the StreamingForest mesh path resolves
+    them through the forest_apply_splits collective, and every shard stays
+    bitwise-equal to the host-centric batcher path."""
+    from repro.core.distributed import build_forest_trees
+    from repro.core.engine import SMTreeEngine
+    from repro.core.smtree import OP_DELETE, OP_INSERT, ST_APPLIED
+    from repro.stream import StreamingForest
+    mesh = jax.make_mesh((8,), ("model",))
+    rng = np.random.default_rng(17)
+    X = rng.random((2048, 6)).astype(np.float32)
+
+    def build():
+        return [t for t in build_forest_trees(X, 8, capacity=8)]
+
+    sf_mesh = StreamingForest(build(), mesh=mesh)
+    sf_host = StreamingForest(build())
+    live = set(range(2048))
+    vec = {i: X[i] for i in range(2048)}
+    nid = 10_000
+    n_split = 0
+    with _use_mesh(mesh):
+        for step in range(5):
+            ops, xs, oids = [], [], []
+            for _ in range(128):
+                if live and rng.random() < 0.2:
+                    v = int(sorted(live)[rng.integers(len(live))])
+                    live.discard(v)
+                    ops.append(OP_DELETE)
+                    oids.append(v)
+                    xs.append(vec[v])
+                else:
+                    ops.append(OP_INSERT)
+                    oids.append(nid)
+                    v = rng.random(6).astype(np.float32)
+                    xs.append(v)
+                    vec[nid] = v
+                    live.add(nid)
+                    nid += 1
+            ops = np.array(ops, np.int32)
+            xs = np.stack(xs).astype(np.float32)
+            oids = np.array(oids, np.int32)
+            rm = sf_mesh.apply(ops, xs, oids)
+            rh = sf_host.apply(ops, xs, oids)
+            assert (rm.statuses == rh.statuses).all(), step
+            assert (rm.statuses == ST_APPLIED).all(), np.bincount(rm.statuses)
+            n_split += rm.n_split
+            assert rm.n_split == rh.n_split, (rm.n_split, rh.n_split)
+            for s, (a, b) in enumerate(zip(sf_mesh.trees, sf_host.trees)):
+                for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                    np.testing.assert_array_equal(
+                        np.asarray(la), np.asarray(lb),
+                        err_msg=f"shard {s} diverged at step {step}")
+    assert n_split > 0, "workload never exercised a device split"
+    assert sf_mesh.owner == sf_host.owner
+    for t in sf_mesh.trees:
+        SMTreeEngine(t).validate()
+
+
 def scenario_forest_knn_cohort_parity():
     """forest_knn static-height cohort path == per-query fallback."""
     from repro.core.distributed import build_forest, forest_knn

@@ -13,6 +13,7 @@ SCENARIOS = [
     "forest_brute_matches_tree",
     "forest_delete",
     "forest_stream",
+    "forest_device_splits",
     "forest_knn_cohort_parity",
     "train_step_sharded",
     "elastic_reshard",
