@@ -279,11 +279,12 @@ def _forest_apply_mutations_fn(mesh: Mesh, axis: str):
         me = jax.lax.axis_index(axis)
         mine = owner == me
         local_ops = jnp.where(mine, ops, smtree.OP_NOP)
-        # splits=False: statuses are abstract here; the split pass runs as
-        # its own collective (forest_apply_splits) over the compacted
-        # overflow rows
+        # splits/merges=False: statuses are abstract here; the split and
+        # merge passes run as their own collectives (forest_apply_splits /
+        # forest_apply_merges) over the compacted escalation rows
         tree, status = smtree.apply_mutations(tree, local_ops, xs, oids,
-                                              donate=False, splits=False)
+                                              donate=False, splits=False,
+                                              merges=False)
         status = jax.lax.psum(jnp.where(mine, status, 0), axis)
         return _restack(forest_slice, tree), status
 
@@ -316,6 +317,41 @@ def _forest_apply_splits_fn(mesh: Mesh, axis: str):
         mine = owner == me
         local_ops = jnp.where(mine, ops, smtree.OP_NOP)
         tree, status = smtree.apply_splits(tree, local_ops, xs, oids,
+                                           donate=False)
+        status = jax.lax.psum(jnp.where(mine, status, 0), axis)
+        return _restack(forest_slice, tree), status
+
+    return run
+
+
+def forest_apply_merges(forest: TreeArrays, mesh: Mesh, ops: jax.Array,
+                        oids: jax.Array, owner: jax.Array, *,
+                        axis: str = "model"):
+    """On-mesh merge collective: resolve a compacted batch of ST_UNDERFLOW
+    delete rows (in log order, owner-routed like ``forest_apply_splits``)
+    through each shard's device merge pass (``smtree.apply_merges``).
+    Returns (forest, statuses [K]): ST_MERGE where a shard absorbed the
+    row on device (merges never allocate, so no row ever blocks).  Tree
+    pages never leave HBM; only the status vector does.  No ``xs``: the
+    merge machinery locates targets by object id alone, exactly like the
+    host's ``delete_with_merge``."""
+    return _forest_apply_merges_fn(mesh, axis)(
+        forest, jnp.asarray(ops, jnp.int32), jnp.asarray(oids, jnp.int32),
+        jnp.asarray(owner, jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _forest_apply_merges_fn(mesh: Mesh, axis: str):
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(axis), P(None), P(None), P(None)),
+                       out_specs=(P(axis), P(None)), check_rep=False)
+    def run(forest_slice, ops, oids, owner):
+        tree = _local_tree(forest_slice)
+        me = jax.lax.axis_index(axis)
+        mine = owner == me
+        local_ops = jnp.where(mine, ops, smtree.OP_NOP)
+        tree, status = smtree.apply_merges(tree, local_ops, oids,
                                            donate=False)
         status = jax.lax.psum(jnp.where(mine, status, 0), axis)
         return _restack(forest_slice, tree), status

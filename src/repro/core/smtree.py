@@ -109,9 +109,12 @@ def packed_free_list(alive) -> tuple[np.ndarray, np.ndarray]:
     *lowest* free id — popping on device allocates exactly the node the
     host control plane's ``_HostView.alloc`` (lowest free index) would
     pick, which is what keeps device splits bitwise-equal to host splits.
-    The device only ever pops (merges — the only freeing edits — escalate
-    to the host, which recomputes the packed ring wholesale in
-    ``to_tree``), so descending order is an invariant, not a sort."""
+    Descending order is maintained on both ends: device pops scrub the
+    top slot, device frees (the merge pass) insert at the sorted position
+    (``_push_free``), and the rare host escalation recomputes the ring
+    wholesale here via ``to_tree`` — all three leave the identical packed
+    representation, so arbitrary push/pop interleavings keep device and
+    host allocation choices aligned."""
     alive = np.asarray(alive)
     free = np.nonzero(~alive)[0][::-1].astype(np.int32)
     out = np.full(alive.shape[0], -1, np.int32)
@@ -743,6 +746,9 @@ ST_NOP, ST_APPLIED, ST_OVERFLOW, ST_UNDERFLOW, ST_NOTFOUND = 0, 1, 2, 3, 4
 # leaf split or an escalation-time re-check that found room.  Callers
 # (stream/batcher.py) normalise it to ST_APPLIED after counting.
 ST_SPLIT = 5
+# Resolved by the on-device merge pass (apply_merges): an underflow delete
+# absorbed without leaving HBM.  Normalised to ST_APPLIED like ST_SPLIT.
+ST_MERGE = 6
 
 
 def _apply_row(t: TreeArrays, vecs0: jax.Array, op, x, oid, leaf0, found0):
@@ -906,7 +912,8 @@ def _apply_mutations_jit(donate: bool):
 
 
 def apply_mutations(tree: TreeArrays, ops, xs, oids, *,
-                    donate: bool | None = None, splits: bool = True):
+                    donate: bool | None = None, splits: bool = True,
+                    merges: bool = True):
     """Batched insert/delete apply.  Returns (tree, statuses [B] int32).
 
     ops: [B] int32 opcodes, xs: [B, dim] f32, oids: [B] int32.  Ops apply in
@@ -917,28 +924,43 @@ def apply_mutations(tree: TreeArrays, ops, xs, oids, *,
     With ``splits`` (default), overflow rows are resolved by the on-device
     split pass (``apply_splits``) before returning: the common single-level
     leaf split never leaves HBM, and such rows come back as ``ST_SPLIT``.
+    With ``merges`` (default), underflow rows are then resolved by the
+    on-device merge pass (``apply_merges``, rows come back ``ST_MERGE``) —
+    but only when *no* ST_OVERFLOW row survived the split pass: the host
+    reference (``escalate_rows``) resolves all overflows before any
+    underflow, so a residual blocked overflow must reach the host first or
+    the structure-edit order (and hence the bitwise tree) would diverge.
     The orchestration reads the status vector (a [B]-int sync the stream
     batcher pays anyway); in traced contexts (shard_map — where statuses
-    are abstract) the flag is a no-op and the caller runs the split
-    collective itself (``core.distributed.forest_apply_splits``)."""
+    are abstract) both flags are no-ops and the caller runs the
+    collectives itself (``core.distributed.forest_apply_splits`` /
+    ``forest_apply_merges``)."""
     if donate is None:
         donate = jax.default_backend() not in ("cpu",)
     ops = jnp.asarray(ops, jnp.int32)
     xs = jnp.asarray(xs, jnp.float32)
     oids = jnp.asarray(oids, jnp.int32)
     tree, status = _apply_mutations_jit(bool(donate))(tree, ops, xs, oids)
-    if splits:
+    if splits or merges:
         try:
             st_host = np.asarray(status)
-        except jax.errors.ConcretizationTypeError:
+        except (jax.errors.ConcretizationTypeError,
+                jax.errors.TracerArrayConversionError):
             return tree, status
+        dirty = 0
         # the post-scan tree is an exclusively-owned intermediate (callers
-        # only ever see the final return), so the split chain can donate
-        # its buffers even where the scan itself must not (the scan input
-        # is the caller's live tree, typically pinned by an epoch)
-        tree, st_host, n_split = resolve_overflows(
-            tree, ops, xs, oids, st_host, donate=True)
-        if n_split:
+        # only ever see the final return), so the split/merge chain can
+        # donate its buffers even where the scan itself must not (the scan
+        # input is the caller's live tree, typically pinned by an epoch)
+        if splits:
+            tree, st_host, n_split = resolve_overflows(
+                tree, ops, xs, oids, st_host, donate=True)
+            dirty += n_split
+        if merges and not (st_host == ST_OVERFLOW).any():
+            tree, st_host, n_merge = resolve_underflows(
+                tree, ops, oids, st_host, donate=True)
+            dirty += n_merge
+        if dirty:
             status = jnp.asarray(st_host)
     return tree, status
 
@@ -946,37 +968,49 @@ def apply_mutations(tree: TreeArrays, ops, xs, oids, *,
 # --------------------------------------------------------------------------
 # On-device node splits (the mesh-resident mutation control plane)
 # --------------------------------------------------------------------------
-def _promote_and_partition(t: TreeArrays, D, Radd):
+def _promote_and_partition(t: TreeArrays, D, Radd, uvalid, n, min_side,
+                           max_moves: int):
     """mM_RAD promotion + generalized-hyperplane partition of one pending
     entry set, decision-for-decision equal to core/split.py:minmax_split.
 
     D: [m, m] pairwise distances between the pending reference values;
     Radd: [m] the per-entry radius term of the radius scoring matrix
-    C = D + Radd[None, :] (zeros for leaf sets).  Returns the slot layout
-    both halves will be written with: (pi, pj, sel_i, sel_j, pres_i,
-    pres_j, n_i, n_j, r_i, r_j), where sel_*/pres_* are [cap] member
-    indices / occupancy masks in the exact member order the host's
-    sequential ``_rebalance`` produces.
+    C = D + Radd[None, :] (zeros for leaf sets); uvalid: [m] member mask —
+    the split pass passes all-true (its pending set is exactly cap + 1
+    rows), the merge pass's re-split passes ``arange(2*cap) < n`` for the
+    dynamically-sized union of two nodes.  ``n``/``min_side`` may be
+    traced; ``max_moves`` is a static upper bound on rebalance moves (the
+    loop body no-ops once both sides meet min_side, so a loose bound only
+    costs dead iterations).  Returns the slot layout both halves will be
+    written with: (pi, pj, sel_i, sel_j, pres_i, pres_j, n_i, n_j, r_i,
+    r_j), where sel_*/pres_* are [cap] member indices / occupancy masks in
+    the exact member order the host's sequential ``_rebalance`` produces.
     """
     cap = t.capacity
-    m = cap + 1
+    m = D.shape[0]
     # all ordered pairs in one fused 3-D reduction ([P, m] gather forms
     # cost ~25x more per scan step on XLA:CPU); the row-major argmin over
     # the masked upper triangle keeps the first minimal pair, matching
-    # np.argmin over triu_indices exactly.  Values are f32-identical to
-    # the host's f64-cast copies, so every comparison agrees.
+    # np.argmin over triu_indices exactly (padding sits at indices >= n,
+    # so masking the j axis of the triangle drops every invalid pair).
+    # Values are f32-identical to the host's f64-cast copies, so every
+    # comparison agrees.
     Cmat = D + Radd[None, :]                                     # [m, m]
     toi3 = D[:, None, :] <= D[None, :, :]                        # [m, m, m]
-    cand_ri = jnp.max(jnp.where(toi3, Cmat[:, None, :], -_INF), axis=-1)
-    cand_rj = jnp.max(jnp.where(toi3, -_INF, Cmat[None, :, :]), axis=-1)
+    kval = uvalid[None, None, :]
+    cand_ri = jnp.max(jnp.where(toi3 & kval, Cmat[:, None, :], -_INF),
+                      axis=-1)
+    cand_rj = jnp.max(jnp.where(~toi3 & kval, Cmat[None, :, :], -_INF),
+                      axis=-1)
     cand_ri = jnp.where(jnp.isfinite(cand_ri), cand_ri, 0.0)
     cand_rj = jnp.where(jnp.isfinite(cand_rj), cand_rj, 0.0)
     triu = jnp.asarray(np.triu(np.ones((m, m), bool), k=1))
     best = jnp.argmin(jnp.where(
-        triu, jnp.maximum(cand_ri, cand_rj), _INF).reshape(-1))
+        triu & uvalid[None, :], jnp.maximum(cand_ri, cand_rj),
+        _INF).reshape(-1))
     pi = (best // m).astype(jnp.int32)
     pj = (best % m).astype(jnp.int32)
-    mask_i = D[pi] <= D[pj]                                      # [m]
+    mask_i = (D[pi] <= D[pj]) & uvalid                           # [m]
 
     # sequential min-fill rebalance, order-exactly: host side lists are the
     # ascending initial members plus moved entries in move order (only one
@@ -986,8 +1020,6 @@ def _promote_and_partition(t: TreeArrays, D, Radd):
     # (fori rather than unrolled: same runtime, ~1s less compile — and the
     # split scan's compile is the one-time cost every new tree geometry
     # pays.)
-    from repro.core.split import min_side_for
-    min_side = min_side_for(m, cap, t.min_fill)
     Dpi = D[pi]
     Dpj = D[pj]
 
@@ -995,8 +1027,9 @@ def _promote_and_partition(t: TreeArrays, D, Radd):
         mask, stamp = carry
         n_i = jnp.sum(mask)
         need_i = n_i < min_side
-        need_j = (m - n_i) < min_side
-        cand_i = jnp.argmin(jnp.where(mask, _INF, Dpi)).astype(jnp.int32)
+        need_j = (n - n_i) < min_side
+        cand_i = jnp.argmin(
+            jnp.where(mask | ~uvalid, _INF, Dpi)).astype(jnp.int32)
         cand_j = jnp.argmin(jnp.where(mask, Dpj, _INF)).astype(jnp.int32)
         mv = jnp.where(need_i, cand_i, cand_j)
         do = need_i | need_j
@@ -1005,14 +1038,14 @@ def _promote_and_partition(t: TreeArrays, D, Radd):
         return mask, stamp
 
     mask_i, stamp = jax.lax.fori_loop(
-        0, min_side, _rb, (mask_i, jnp.arange(m, dtype=jnp.int32)))
+        0, max_moves, _rb, (mask_i, jnp.arange(m, dtype=jnp.int32)))
     n_i = jnp.sum(mask_i).astype(jnp.int32)
-    n_j = m - n_i
+    n_j = n - n_i
     BIG = jnp.int32(2 * m + 2)
     ord_i = jnp.argsort(jnp.where(mask_i, stamp, BIG))
-    ord_j = jnp.argsort(jnp.where(mask_i, BIG, stamp))
+    ord_j = jnp.argsort(jnp.where(mask_i | ~uvalid, BIG, stamp))
     slots = jnp.arange(cap, dtype=jnp.int32)
-    sel_i = ord_i[:cap]      # n_i, n_j <= cap - 1 (min_side >= 2)
+    sel_i = ord_i[:cap]      # n_i, n_j <= cap (min_side >= m - cap)
     sel_j = ord_j[:cap]
     pres_i = slots < n_i
     pres_j = slots < n_j
@@ -1068,6 +1101,31 @@ def _pop_free(t: TreeArrays, do):
         t, free_list=free_list, free_head=t.free_head - inc,
         n_nodes=jnp.where(do, jnp.maximum(t.n_nodes, n2 + 1),
                           t.n_nodes)), n2
+
+
+def _push_free(t: TreeArrays, f, do):
+    """Masked free-ring push: insert node id ``f`` at its *descending-
+    sorted* position, not on top of the stack.  The ring's contract is
+    ``free_list[:free_head] == packed_free_list(alive)`` — the dead ids in
+    descending order, so the top of the stack is the lowest free id and a
+    device pop allocates exactly what the host's ``alloc`` would.  A plain
+    LIFO push of a freed id would break that the moment a later split pops
+    it back while a lower id sits buried below; the sorted insert keeps the
+    packed representation bitwise-equal to the host's wholesale recompute
+    in ``to_tree``.  O(N) masked shift per push — merges free at most
+    O(height) nodes per row, and N-sized masked moves are exactly what the
+    rest of the pass does anyway."""
+    N = t.max_nodes
+    fl = t.free_list
+    idx = jnp.arange(N, dtype=jnp.int32)
+    live = idx < t.free_head
+    pos = jnp.sum((live & (fl > f)).astype(jnp.int32))
+    shifted = fl[jnp.maximum(idx - 1, 0)]
+    newfl = jnp.where(idx < pos, fl,
+                      jnp.where(idx == pos, f, shifted))
+    inc = do.astype(jnp.int32)
+    return dataclasses.replace(
+        t, free_list=jnp.where(do, newfl, fl), free_head=t.free_head + inc)
 
 
 def _split_row(t: TreeArrays, op, x, oid, blocked):
@@ -1161,8 +1219,12 @@ def _split_row(t: TreeArrays, op, x, oid, blocked):
         cur = s["cur"]
         D = _metric_eval(t.metric, V[:, None, :], V[None, :, :])
         Radd = jnp.where(s["pend_leaf"], jnp.zeros_like(R), R)
+        from repro.core.split import min_side_for
+        ms = min_side_for(cap + 1, cap, t.min_fill)
         (pi, pj, sel_i, sel_j, pres_i, pres_j, n_i, n_j, r_i,
-         r_j) = _promote_and_partition(t, D, Radd)
+         r_j) = _promote_and_partition(
+            t, D, Radd, jnp.ones((cap + 1,), bool), cap + 1, ms,
+            max_moves=ms)
 
         parent = t.parent[cur]          # read before any pointer writes
         pslot_c = jnp.maximum(t.pslot[cur], 0)
@@ -1371,3 +1433,395 @@ def resolve_overflows(tree: TreeArrays, ops, xs, oids, statuses, *,
         if (st == ST_OVERFLOW).any():
             break   # blocked: the rest goes to the host in log order
     return tree, out, n_resolved
+
+
+# --------------------------------------------------------------------------
+# On-device node merges (delete underflow — the symmetric half of the
+# mesh-resident mutation control plane)
+# --------------------------------------------------------------------------
+def _remove_entry_masked(t: TreeArrays, node, s, do):
+    """Host ``remove_entry`` as masked writes: swap-remove slot ``s`` of
+    ``node`` (the last entry fills the hole; a swapped *internal* child's
+    pslot is re-aimed), clear the tail slot, decrement count.  Write
+    ordering handles ``s == last`` exactly like ``_apply_row``'s delete;
+    everything drops when ``do`` is False."""
+    N = t.max_nodes
+    _fl = dict(mode="drop", unique_indices=True)
+    nc = jnp.minimum(jnp.maximum(node, 0), N - 1)
+    last = jnp.maximum(t.count[nc] - 1, 0)
+    row = jnp.where(do, nc, N)
+    t = dataclasses.replace(
+        t,
+        vecs=t.vecs.at[row, s].set(t.vecs[nc, last], **_fl),
+        radius=t.radius.at[row, s].set(t.radius[nc, last], **_fl),
+        pdist=t.pdist.at[row, s].set(t.pdist[nc, last], **_fl),
+        child=t.child.at[row, s].set(t.child[nc, last], **_fl),
+        oid=t.oid.at[row, s].set(t.oid[nc, last], **_fl))
+    # swapped child's pslot: host skips when s == last (the entry at s IS
+    # the removed one) and at leaves (child -1 drops the write anyway)
+    c_sw = t.child[nc, last]
+    sw_do = do & (s != last) & ~t.is_leaf[nc] & (c_sw >= 0)
+    t = dataclasses.replace(
+        t, pslot=t.pslot.at[jnp.where(sw_do, c_sw, N)].set(s, **_fl))
+    return dataclasses.replace(
+        t,
+        valid=t.valid.at[row, last].set(False, **_fl),
+        child=t.child.at[row, last].set(-1, **_fl),
+        oid=t.oid.at[row, last].set(-1, **_fl),
+        count=t.count.at[row].add(-1, **_fl))
+
+
+def _free_node_masked(t: TreeArrays, node, do):
+    """Host ``free`` as masked writes: alive/valid cleared, count zeroed,
+    parent/pslot detached — vecs/radius/pdist/child/oid stay *stale*,
+    exactly as the host leaves them (``alloc`` scrubs on reuse) — plus the
+    sorted free-ring push."""
+    N = t.max_nodes
+    cap = t.capacity
+    row = jnp.where(do, node, N)
+    t = dataclasses.replace(
+        t,
+        alive=t.alive.at[row].set(False, mode="drop"),
+        valid=t.valid.at[row].set(jnp.zeros((cap,), bool), mode="drop"),
+        count=t.count.at[row].set(0, mode="drop"),
+        parent=t.parent.at[row].set(-1, mode="drop"),
+        pslot=t.pslot.at[row].set(-1, mode="drop"))
+    return _push_free(t, node, do)
+
+
+def _merge_row(t: TreeArrays, op, oid):
+    """One underflow delete resolved on device: the scan body of
+    ``apply_merges``, bitwise-faithful to ``_HostView.delete_with_merge``:
+
+      * re-locate the object on the *live* tree (earlier rows in this pass
+        may have moved entries across nodes) with the host's first-hit
+        (row-major) semantics, and swap-remove it from its leaf;
+      * propagate underflow as a bounded while_loop: pick the nearest
+        sibling by routing-object distance (first-minimal, self excluded),
+        then either **merge** into it (total fits: ordered appends, free
+        the donor onto the ring at its sorted position, swap-remove the
+        parent entry, refresh the sibling entry's radius) or
+        **redistribute** (re-split the union with minmax_split's exact
+        promotion/member order across the same two nodes, parent entries
+        rewritten in place);
+      * fold radii up the final node's parent chain and collapse
+        single-entry internal roots on device, freeing each onto the ring.
+
+    Merges only ever *free* nodes, so — unlike the split pass — no row can
+    block on ring exhaustion: the device absorbs every underflow.  Same
+    shape discipline as ``_split_row``: straight-line masked ``mode="drop"``
+    writes, no cond/switch on tree state."""
+    cap = t.capacity
+    N = t.max_nodes
+    _fl = dict(mode="drop", unique_indices=True)
+    want = op == OP_DELETE
+    # negative oids (the NOP pad sentinel) never match, mirroring
+    # delete_fast — a pad row in a merge chunk must be inert even against
+    # a (boundary-rejected, but defence-in-depth) planted -1 entry
+    hit = (t.oid == oid) & t.valid & (oid >= 0)
+    found = want & jnp.any(hit)
+    flat = jnp.argmax(hit.reshape(-1))
+    leaf = (flat // cap).astype(jnp.int32)
+    slot = (flat % cap).astype(jnp.int32)
+    t = _remove_entry_masked(t, leaf, slot, found)
+
+    def cond_fn(s):
+        return s["go"]
+
+    def body(s):
+        t = s["t"]
+        cur = s["cur"]
+        parent = t.parent[cur]          # >= 0: the loop excludes the root
+        p = jnp.maximum(parent, 0)
+        islot = jnp.maximum(t.pslot[cur], 0)
+        m = t.count[p]
+        slots = jnp.arange(cap, dtype=jnp.int32)
+        # nearest sibling entry by routing-object distance; invalid slots
+        # and self are +inf, so argmin's first-minimal matches the host's
+        # argmin over d[:m] with d[islot] = inf (f64 casts of f32 values
+        # compare identically)
+        d = _metric_eval(t.metric, t.vecs[p, islot][None, :], t.vecs[p])
+        d = jnp.where((slots < m) & (slots != islot), d, _INF)
+        j = jnp.argmin(d).astype(jnp.int32)
+        sib = t.child[p, j]
+        sb = jnp.maximum(sib, 0)
+        cm = t.count[cur]
+        ns = t.count[sb]
+        total = ns + cm
+        do_merge = total <= cap
+
+        # ---- merge branch: append cur's entries to sib in slot order
+        # (the host's append_entry loop), free cur, swap-remove the parent
+        # entry, refresh the sibling entry's covering radius
+        sv = t.vecs[p, j]
+        pd_m = _metric_eval(t.metric, t.vecs[cur], sv[None, :])   # [cap]
+        rowM = jnp.where(do_merge, sb, N)
+        # targets of valid members stay < cap (total <= cap here); masked
+        # rows land at cap + k — distinct and all dropped
+        tgt = jnp.where(slots < cm, ns + slots, cap + slots)
+        kids = t.child[cur]
+        t = dataclasses.replace(
+            t,
+            vecs=t.vecs.at[rowM, tgt].set(t.vecs[cur], **_fl),
+            radius=t.radius.at[rowM, tgt].set(t.radius[cur], **_fl),
+            pdist=t.pdist.at[rowM, tgt].set(pd_m, **_fl),
+            child=t.child.at[rowM, tgt].set(kids, **_fl),
+            oid=t.oid.at[rowM, tgt].set(t.oid[cur], **_fl),
+            valid=t.valid.at[rowM, tgt].set(True, **_fl),
+            count=t.count.at[rowM].add(cm, **_fl))
+        kidrow = jnp.where(do_merge & (slots < cm) & (kids >= 0), kids, N)
+        t = dataclasses.replace(
+            t,
+            parent=t.parent.at[kidrow].set(sb, **_fl),
+            pslot=t.pslot.at[kidrow].set(ns + slots, **_fl))
+        t = _free_node_masked(t, cur, do_merge)
+        t = _remove_entry_masked(t, p, islot, do_merge)
+        # islot removal may have moved entry j — re-read sib's live pslot
+        jj = jnp.maximum(t.pslot[sb], 0)
+        contrib = t.pdist[sb] + jnp.where(t.is_leaf[sb], 0.0, t.radius[sb])
+        fr = jnp.max(jnp.where(t.valid[sb], contrib, -_INF))
+        t = dataclasses.replace(
+            t, radius=t.radius.at[jnp.where(do_merge, p, N), jj].set(
+                fr, **_fl))
+
+        # ---- redistribute branch: re-split the union of sib + cur across
+        # the same two nodes (no alloc, no free).  All merge-branch writes
+        # above dropped in this case, so the reads below see the pre-branch
+        # state.  The union is dynamically sized (cap < total <= 2*cap):
+        # sib's entries first, then cur's — the host's vstack order.
+        do_rs = ~do_merge
+        M = 2 * cap
+        ks = jnp.arange(M, dtype=jnp.int32)
+        in_sib = ks < ns
+        src_row = jnp.where(in_sib, sb, cur)
+        src_slot = jnp.clip(jnp.where(in_sib, ks, ks - ns), 0, cap - 1)
+        V = t.vecs[src_row, src_slot]
+        R = t.radius[src_row, src_slot]
+        C = t.child[src_row, src_slot]
+        O = t.oid[src_row, src_slot]
+        uvalid = ks < total
+        D = _metric_eval(t.metric, V[:, None, :], V[None, :, :])
+        Radd = jnp.where(t.is_leaf[cur], jnp.zeros_like(R), R)
+        # min_side_for, with the dynamic member count: the total - cap
+        # term guarantees neither side overflows
+        min_side = jnp.maximum(
+            2, jnp.maximum(jnp.minimum(t.min_fill, total // 2),
+                           total - cap))
+        (pi, pj, sel_i, sel_j, pres_i, pres_j, n_i, n_j, r_i,
+         r_j) = _promote_and_partition(t, D, Radd, uvalid, total, min_side,
+                                       max_moves=cap)
+        t = _write_half(t, jnp.where(do_rs, sb, N), V, R, C, O, D[pi],
+                        sel_i, pres_i, n_i)
+        t = _write_half(t, jnp.where(do_rs, cur, N), V, R, C, O, D[pj],
+                        sel_j, pres_j, n_j)
+        gp = t.parent[p]
+        gv = t.vecs[jnp.maximum(gp, 0), jnp.maximum(t.pslot[p], 0)]
+        has_gp = gp >= 0
+        pd_i = jnp.where(has_gp, _metric_eval(t.metric, V[pi], gv), 0.0)
+        pd_j = jnp.where(has_gp, _metric_eval(t.metric, V[pj], gv), 0.0)
+        rowP = jnp.where(do_rs, p, N)
+        rowPs = jnp.where(do_rs, sb, N)
+        rowPc = jnp.where(do_rs, cur, N)
+        t = dataclasses.replace(
+            t,
+            vecs=t.vecs.at[rowP, j].set(V[pi], **_fl)
+                       .at[rowP, islot].set(V[pj], **_fl),
+            radius=t.radius.at[rowP, j].set(r_i, **_fl)
+                           .at[rowP, islot].set(r_j, **_fl),
+            pdist=t.pdist.at[rowP, j].set(pd_i, **_fl)
+                         .at[rowP, islot].set(pd_j, **_fl),
+            child=t.child.at[rowP, j].set(sb, **_fl)
+                         .at[rowP, islot].set(cur, **_fl),
+            parent=t.parent.at[rowPs].set(p, **_fl)
+                           .at[rowPc].set(p, **_fl),
+            pslot=t.pslot.at[rowPs].set(j, **_fl)
+                         .at[rowPc].set(islot, **_fl))
+
+        go = (p != t.root) & (t.count[p] < t.min_fill)
+        return dict(t=t, cur=p, go=go)
+
+    s = jax.lax.while_loop(
+        cond_fn, body,
+        dict(t=t, cur=leaf,
+             go=found & (leaf != t.root) & (t.count[leaf] < t.min_fill)))
+    t = s["t"]
+
+    # fold_up(cur): recompute radii along the final node's parent chain
+    # (not-found rows climb from the root, an empty chain)
+    pnF, psF = path_to_root(t, jnp.where(found, s["cur"], t.root))
+    t = _refresh_path_radii(t, pnF, psF)
+
+    # root collapse: free single-entry internal roots onto the ring (the
+    # host loop, including multi-level collapse after deep cascades)
+    def rc_cond(s2):
+        return s2["go"]
+
+    def rc_body(s2):
+        t = s2["t"]
+        old = t.root
+        newr = t.child[old, 0]
+        t = dataclasses.replace(
+            t, root=newr, height=t.height - 1,
+            parent=t.parent.at[newr].set(-1),
+            pslot=t.pslot.at[newr].set(-1))
+        t = _free_node_masked(t, old, jnp.asarray(True))
+        return dict(t=t, go=~t.is_leaf[t.root] & (t.count[t.root] == 1))
+
+    s2 = jax.lax.while_loop(
+        rc_cond, rc_body,
+        dict(t=t, go=found & ~t.is_leaf[t.root] & (t.count[t.root] == 1)))
+    t = s2["t"]
+
+    status = jnp.where(want, jnp.where(found, ST_MERGE, ST_NOTFOUND),
+                       ST_NOP).astype(jnp.int32)
+    return t, status
+
+
+def _apply_merges_impl(tree: TreeArrays, ops: jax.Array, oids: jax.Array):
+    def step(t, row):
+        op, oid = row
+        return _merge_row(t, op, oid)
+
+    return jax.lax.scan(step, tree, (ops, oids))
+
+
+@functools.cache
+def _apply_merges_jit(donate: bool):
+    return jax.jit(_apply_merges_impl,
+                   donate_argnums=(0,) if donate else ())
+
+
+def apply_merges(tree: TreeArrays, ops, oids, *,
+                 donate: bool | None = None):
+    """On-device merge pass over a compacted batch of underflow deletes.
+
+    ops/oids: [K] rows previously reported ST_UNDERFLOW by
+    ``apply_mutations`` (pad with OP_NOP / oid -1), in log order.  Returns
+    (tree, statuses [K]): ST_MERGE for resolved rows, ST_NOTFOUND for
+    targets that vanished (cannot happen inside a conflict-free cohort,
+    kept for the host path's semantics), ST_NOP for pads.  Merges never
+    allocate, so — unlike ``apply_splits`` — no row ever blocks."""
+    if donate is None:
+        donate = jax.default_backend() not in ("cpu",)
+    ops = jnp.asarray(ops, jnp.int32)
+    oids = jnp.asarray(oids, jnp.int32)
+    return _apply_merges_jit(bool(donate))(tree, ops, oids)
+
+
+# Dispatch widths for the merge pass.  Unlike the split ladder (one fixed
+# SPLIT_CHUNK entry, because a blocked row forces a host decision between
+# chunks), merge chunks dispatch back-to-back with no intervening sync —
+# so per-dispatch overhead, not padded-NOP waste, dominates bulk
+# underflow batches (delete-heavy streams routinely underflow ~25% of a
+# 256-row cohort).  Two widths bound the jit cache at two entries per
+# geometry: the bulk width swallows big runs in one dispatch, the small
+# width keeps sparse batches (the common case) from paying 56 NOP rows.
+MERGE_CHUNK = 8
+MERGE_CHUNK_MAX = 64
+
+
+def merge_chunks(n: int):
+    """Dispatch-width cover of ``n`` rows (each chunk padded by the
+    dispatcher).  Full MERGE_CHUNK_MAX chunks, then either one more MAX
+    chunk (when the remainder would need >2 small dispatches — overhead
+    beats pad waste) or small chunks."""
+    out = []
+    while n >= MERGE_CHUNK_MAX:
+        out.append(MERGE_CHUNK_MAX)
+        n -= MERGE_CHUNK_MAX
+    if n > 2 * MERGE_CHUNK:
+        out.append(MERGE_CHUNK_MAX)
+        n = 0
+    while n > 0:
+        out.append(MERGE_CHUNK)
+        n -= MERGE_CHUNK
+    return out
+
+
+def resolve_underflows(tree: TreeArrays, ops, oids, statuses, *,
+                       donate: bool | None = None):
+    """Compact a batch's ST_UNDERFLOW rows and run the device merge pass.
+
+    statuses: [B] int32 on the host.  Returns (tree, statuses, n_resolved)
+    with resolved rows re-marked ST_MERGE.  Callers must only invoke this
+    once no ST_OVERFLOW rows remain (the host reference resolves *all*
+    overflows before *any* underflow — ``escalate_rows`` — and the device
+    path must replay the same structure-edit order to stay bitwise-
+    transparent); ``apply_mutations``/the stream pipeline enforce that."""
+    statuses = np.asarray(statuses)
+    ops_np = np.asarray(ops)
+    idx = np.nonzero((statuses == ST_UNDERFLOW) & (ops_np == OP_DELETE))[0]
+    if not len(idx):
+        return tree, statuses, 0
+    oids_np = np.asarray(oids, np.int32)
+    out = statuses.copy()
+    c0 = 0
+    pending = []
+    # dispatch every chunk back-to-back and sync the statuses once at the
+    # end: merges never block (unlike the split ladder, which must stop at
+    # the first blocked chunk), so there is no decision to make between
+    # chunks and no reason to stall the dispatch queue on a host
+    # round-trip per chunk
+    for w in merge_chunks(len(idx)):
+        chunk = idx[c0:c0 + w]
+        c0 += w
+        k = len(chunk)
+        ops_k = np.full(w, OP_NOP, np.int32)
+        ops_k[:k] = OP_DELETE
+        oids_k = np.full(w, -1, np.int32)
+        oids_k[:k] = oids_np[chunk]
+        tree, st = apply_merges(tree, ops_k, oids_k, donate=donate)
+        pending.append((chunk, k, st))
+    for chunk, k, st in pending:
+        out[chunk] = np.asarray(jax.device_get(st))[:k]
+    return tree, out, len(idx)
+
+
+# --------------------------------------------------------------------------
+# Ahead-of-time free-ring headroom (node-table growth off the hot path)
+# --------------------------------------------------------------------------
+def needs_headroom(tree: TreeArrays, *, frac: float = 1 / 16) -> bool:
+    """True when the free ring is low enough that a mutation batch could
+    plausibly exhaust it mid-pass (the one split-path escalation left).
+    The watermark is ``frac`` of the node table, floored at MAX_HEIGHT + 1
+    — the worst case a *single* overflow row can allocate — so growth
+    always fires before a row can block.  Syncs one scalar."""
+    wm = max(MAX_HEIGHT + 1, int(tree.max_nodes * frac))
+    return int(jax.device_get(tree.free_head)) < wm
+
+
+def grow_tree(tree: TreeArrays, *, factor: int = 2) -> TreeArrays:
+    """Host-side node-table growth: pad every [N, ...] leaf to
+    ``factor * max_nodes`` dead rows (the host ``_HostView._grow`` layout:
+    child/oid/parent/pslot pad to -1, is_leaf to True) and recompute the
+    packed free ring.  The new ids are the *highest*, so they join the
+    descending ring at the bottom and every pre-growth allocation decision
+    is unchanged — growth is behaviour-transparent to the mutation order.
+
+    This is the ahead-of-time escape from the last host escalation: the
+    stream pipelines call it at snapshot/rebalance/epoch-publish points
+    when ``needs_headroom`` fires, so ring exhaustion stops being a
+    mid-batch event at all.  Changes array shapes (one recompile per new
+    geometry — the cost doubling amortises away)."""
+    if factor < 2:
+        raise ValueError(f"factor must be >= 2, got {factor}")
+    N = tree.max_nodes
+    pad_n = N * (factor - 1)
+    fields = {}
+    alive_np = None
+    for name in ("vecs", "radius", "pdist", "child", "oid", "valid",
+                 "count", "is_leaf", "alive", "parent", "pslot"):
+        a = np.asarray(jax.device_get(getattr(tree, name)))
+        pad = np.zeros((pad_n,) + a.shape[1:], a.dtype)
+        if name in ("child", "oid", "parent", "pslot"):
+            pad -= 1
+        if name == "is_leaf":
+            pad |= True
+        a = np.concatenate([a, pad], axis=0)
+        if name == "alive":
+            alive_np = a
+        fields[name] = jnp.asarray(a)
+    free_list, free_head = packed_free_list(alive_np)
+    return dataclasses.replace(
+        tree, **fields, free_list=jnp.asarray(free_list),
+        free_head=jnp.asarray(free_head), max_nodes=N * factor)

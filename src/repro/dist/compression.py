@@ -33,34 +33,68 @@ def _quantize(g: jax.Array, scale: jax.Array) -> jax.Array:
     return jnp.clip(jnp.round(g / scale), -_QMAX, _QMAX).astype(jnp.int8)
 
 
-def compressed_mean_hook(grads, mode: str = "int8"):
+def compressed_mean_hook(grads, mode: str = "int8", ef=None):
     """Quantize-dequantize every floating grad leaf (int8, shared f32 scale).
 
     No-op passthrough for ``mode`` in (None, 'none').  Leaf dtypes are
-    preserved so the optimizer update is oblivious to compression."""
-    if mode in (None, "none", False):
-        return grads
+    preserved so the optimizer update is oblivious to compression.
 
-    def leaf(g):
+    With ``ef`` (a grads-shaped tree of error-feedback residuals, or None
+    for the first step), the residual is folded into the gradient *before*
+    quantisation — standard EF-SGD: q(g + e_prev) — and the call returns
+    ``(grads_out, ef_next)`` where ``ef_next = (g + e_prev) - deq(...)``.
+    Threading ``ef_next`` back in each step makes the quantisation error a
+    delayed correction instead of a bias: the running sum of dequantized
+    gradients tracks the running sum of true gradients to within one
+    quantisation step (tests/test_error_feedback.py), which is what
+    restores convergence parity at int8.  Without ``ef`` the return is
+    just ``grads_out`` (the pre-EF API, unchanged)."""
+    if mode in (None, "none", False):
+        return grads if ef is None else (grads, ef)
+
+    def leaf(g, e=None):
         if not jnp.issubdtype(g.dtype, jnp.floating):
-            return g
+            return g, e     # EF placeholder passes through untouched
         gf = g.astype(jnp.float32)
+        if e is not None:
+            gf = gf + e.astype(jnp.float32)
         scale = _scale_of(gf)
         q = _quantize(gf, scale)
-        return (q.astype(jnp.float32) * scale).astype(g.dtype)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), (gf - deq).astype(g.dtype)
 
-    return jax.tree.map(leaf, grads)
+    if ef is None:
+        return jax.tree.map(lambda g: leaf(g)[0], grads)
+    pairs = jax.tree.map(leaf, grads, ef)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2  # noqa: E731
+    out = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    ef_next = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return out, ef_next
 
 
-def compressed_psum_mean(tree, axis_name: str):
+def init_ef_state(params):
+    """Zero error-feedback residuals shaped like the floating param/grad
+    leaves (non-floating leaves carry a zero scalar placeholder so the
+    tree structure matches)."""
+    return jax.tree.map(
+        lambda p: (jnp.zeros_like(p)
+                   if jnp.issubdtype(p.dtype, jnp.floating)
+                   else jnp.zeros((), jnp.float32)), params)
+
+
+def compressed_psum_mean(tree, axis_name: str, ef=None):
     """Compressed mean all-reduce over ``axis_name`` (shard_map context).
 
     Returns (mean_tree, err_tree): the dequantized cross-rank mean per leaf,
-    and the local error-feedback residual g - deq(q(g))."""
+    and the local error-feedback residual g - deq(q(g)).  With ``ef`` the
+    previous residual is folded in before quantisation (EF-SGD), so the
+    returned err_tree is the *next* EF state to thread back in."""
     n = jax.lax.psum(1, axis_name)
 
-    def leaf(g):
+    def leaf(g, e=None):
         gf = g.astype(jnp.float32)
+        if e is not None:
+            gf = gf + e.astype(jnp.float32)
         scale = _scale_of(gf, axis_name)
         q = _quantize(gf, scale)
         deq = q.astype(jnp.float32) * scale
@@ -69,8 +103,9 @@ def compressed_psum_mean(tree, axis_name: str):
         err = (gf - deq).astype(g.dtype)
         return mean, err
 
-    pairs = jax.tree.map(leaf, tree)
     is_pair = lambda x: isinstance(x, tuple) and len(x) == 2  # noqa: E731
+    pairs = (jax.tree.map(leaf, tree) if ef is None
+             else jax.tree.map(leaf, tree, ef))
     mean = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
     err = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
     return mean, err

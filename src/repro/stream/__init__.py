@@ -4,8 +4,8 @@ Turns the SM-tree's O(h) insert/delete fast paths into a serving-grade
 write pipeline:
 
   * ``batcher``   — conflict-free mutation cohorts applied by one jitted
-    ``lax.scan`` per cohort; overflow/underflow rows escalate to the host
-    control plane.
+    ``lax.scan`` per cohort; overflow/underflow rows resolve through the
+    on-device split/merge passes (host escalation is the cold assert-path).
   * ``wal``       — append-only write-ahead log (segment rotation, strict
     JSON manifest); every acknowledged batch is replayable.
   * ``epoch``     — epoch-based snapshot handoff: readers pin immutable

@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core import smtree
 from repro.core.smtree import (OP_DELETE, OP_INSERT, OP_NOP, ST_APPLIED,
-                               ST_NOTFOUND, ST_OVERFLOW, ST_SPLIT,
+                               ST_MERGE, ST_NOTFOUND, ST_OVERFLOW, ST_SPLIT,
                                ST_UNDERFLOW, TreeArrays)
 
 __all__ = ["MutationBatcher", "BatchResult", "cut_cohorts", "pad_to_bucket",
@@ -45,6 +45,7 @@ class BatchResult:
     n_escalated: int          # rows resolved by the host control plane
     n_cohorts: int
     n_split: int = 0          # rows resolved by the on-device split pass
+    n_merge: int = 0          # rows resolved by the on-device merge pass
 
 
 def check_oids(oids: np.ndarray) -> None:
@@ -129,16 +130,20 @@ class MutationBatcher:
     (stream/epoch.py) holds the same arrays the next batch would consume.
     The stream pipeline therefore leaves donation off.
 
-    ``device_splits=False`` disables the on-device single-level split pass
-    (every overflow escalates to the host, the PR-3 behaviour) — kept as the
-    benchmark baseline and the bitwise-transparency test reference."""
+    ``device_splits=False`` disables the on-device split pass (every
+    overflow escalates to the host, the PR-3 behaviour) and
+    ``device_merges=False`` the on-device merge pass (every underflow
+    escalates, the PR-4 behaviour) — kept as benchmark baselines and the
+    bitwise-transparency test references."""
 
     def __init__(self, tree: TreeArrays, *, max_batch: int = 4096,
-                 donate: bool = False, device_splits: bool = True):
+                 donate: bool = False, device_splits: bool = True,
+                 device_merges: bool = True):
         self.tree = tree
         self.max_batch = int(max_batch)
         self.donate = donate
         self.device_splits = device_splits
+        self.device_merges = device_merges
 
     # -- host escalation ---------------------------------------------------
     def _escalate(self, statuses: np.ndarray, ops, xs, oids) -> np.ndarray:
@@ -157,7 +162,7 @@ class MutationBatcher:
             (ops.shape, oids.shape, xs.shape)
         check_oids(oids)
         statuses = np.zeros(len(ops), np.int32)
-        n_fast = n_esc = n_split = 0
+        n_fast = n_esc = n_split = n_merge = 0
         cohorts = cut_cohorts(oids)
         for start, end in cohorts:
             for cs in range(start, end, self.max_batch):
@@ -166,10 +171,12 @@ class MutationBatcher:
                 n_esc += int(np.isin(st, (ST_OVERFLOW, ST_UNDERFLOW)).sum())
                 n_fast += int((st == ST_APPLIED).sum())
                 n_split += int((st == ST_SPLIT).sum())
-                st[st == ST_SPLIT] = ST_APPLIED
+                n_merge += int((st == ST_MERGE).sum())
+                st[np.isin(st, (ST_SPLIT, ST_MERGE))] = ST_APPLIED
                 statuses[cs:ce] = self._escalate(st, ops[cs:ce], xs[cs:ce],
                                                  oids[cs:ce])
-        return BatchResult(statuses, n_fast, n_esc, len(cohorts), n_split)
+        return BatchResult(statuses, n_fast, n_esc, len(cohorts), n_split,
+                           n_merge)
 
     def _apply_cohort(self, ops, xs, oids) -> np.ndarray:
         n = len(ops)
@@ -182,7 +189,8 @@ class MutationBatcher:
                                               np.float32)])
         tree, st = smtree.apply_mutations(self.tree, ops, xs, oids,
                                           donate=self.donate,
-                                          splits=self.device_splits)
+                                          splits=self.device_splits,
+                                          merges=self.device_merges)
         st = np.array(jax.device_get(st[:n]))   # copy: escalation mutates
         self.tree = tree
         return st

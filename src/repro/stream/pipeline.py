@@ -59,18 +59,31 @@ def _pad_cohort(ops, xs, oids, owner, max_batch: int):
 
 
 class StreamingEngine:
-    """WAL-backed batched mutation pipeline over a single SM-tree."""
+    """WAL-backed batched mutation pipeline over a single SM-tree.
+
+    ``headroom_frac`` arms ahead-of-time free-ring growth: after each
+    batch — an epoch-publish point, never mid-pass — the node table is
+    doubled (``smtree.grow_tree``) whenever the free ring sits below
+    ``max(MAX_HEIGHT + 1, headroom_frac * max_nodes)``, so ring
+    exhaustion (the one split-path host escalation left) stops being a
+    mid-batch event.  Growth is deterministic in the mutation sequence,
+    which the WAL replay contract requires.  ``None`` disables it (the
+    PR-4 behaviour: exhaustion escalates so the host can ``_grow``)."""
 
     def __init__(self, tree: TreeArrays, *, wal: WriteAheadLog | None = None,
                  ckpt=None, max_batch: int = 4096, donate: bool = False,
-                 device_splits: bool = True):
+                 device_splits: bool = True, device_merges: bool = True,
+                 headroom_frac: float | None = 1 / 16):
         # donation would consume the buffers published as the previous
         # epoch out from under pinned readers — see MutationBatcher
         self.batcher = MutationBatcher(tree, max_batch=max_batch,
                                        donate=donate,
-                                       device_splits=device_splits)
+                                       device_splits=device_splits,
+                                       device_merges=device_merges)
         self.wal = wal
         self.ckpt = ckpt          # dist.checkpoint.CheckpointManager
+        self.headroom_frac = headroom_frac
+        self.n_grows = 0
         self.epochs = EpochManager(tree)
         self._step = 0
 
@@ -88,6 +101,11 @@ class StreamingEngine:
         if log and self.wal is not None:
             self.wal.append_batch(np.asarray(ops, np.int8), xs, oids)
         res = self.batcher.apply(ops, xs, oids)
+        if (self.headroom_frac is not None
+                and smtree.needs_headroom(self.tree,
+                                          frac=self.headroom_frac)):
+            self.batcher.tree = smtree.grow_tree(self.tree)
+            self.n_grows += 1
         self.epochs.publish(self.tree)
         return res
 
@@ -171,10 +189,15 @@ class StreamingForest:
                  wal: WriteAheadLog | None = None, ckpt=None,
                  max_batch: int = 4096, max_skew: float = 1.5,
                  min_objects: int = 64, mesh=None, axis: str = "model",
-                 device_splits: bool = True):
+                 device_splits: bool = True, device_merges: bool = True,
+                 headroom_frac: float | None = 1 / 16):
         self.device_splits = device_splits
+        self.device_merges = device_merges
+        self.headroom_frac = headroom_frac
+        self.n_grows = 0
         self.batchers = [MutationBatcher(t, max_batch=max_batch,
-                                         device_splits=device_splits)
+                                         device_splits=device_splits,
+                                         device_merges=device_merges)
                          for t in trees]
         self.wal = wal
         self.ckpt = ckpt
@@ -266,8 +289,32 @@ class StreamingForest:
                 self.owner[int(oids[i])] = int(owner[i])
             else:
                 self.owner.pop(int(oids[i]), None)
+        self._ensure_headroom()
         self.epochs.publish(tuple(self.trees))
         return res
+
+    def _ensure_headroom(self) -> None:
+        """Ahead-of-time free-ring growth (epoch-publish point): double any
+        shard whose ring fell below the watermark, so the next batch's
+        split pass cannot exhaust it mid-collective.  Both control-plane
+        modes read the same per-shard scalars and grow at the same points,
+        which keeps mesh ≡ host bitwise (and WAL replay deterministic)."""
+        if self.headroom_frac is None:
+            return
+        needy = [s for s, t in enumerate(self.trees)
+                 if smtree.needs_headroom(t, frac=self.headroom_frac)]
+        if not needy:
+            return
+        trees = list(self.trees)
+        for s in needy:
+            trees[s] = smtree.grow_tree(trees[s])
+        for b, t in zip(self.batchers, trees):
+            b.tree = t
+        # growth is host-side: drop the mesh-resident stacked form, the
+        # next collective apply restacks from the fresh shards
+        self._stacked = None
+        self._shard_nodes = [t.max_nodes for t in trees]
+        self.n_grows += len(needy)
 
     def _apply_host(self, ops, xs, oids, owner) -> BatchResult:
         """Host-centric path: route rows to their shard's batcher.
@@ -279,7 +326,7 @@ class StreamingForest:
         shard's scan run ahead of another shard's repeat-induced
         boundary)."""
         statuses = np.zeros(len(ops), np.int32)
-        n_fast = n_esc = n_split = 0
+        n_fast = n_esc = n_split = n_merge = 0
         cohorts = cut_cohorts(oids)
         for start, end in cohorts:
             for cs in range(start, end, self.max_batch):
@@ -294,18 +341,22 @@ class StreamingForest:
                     n_fast += r.n_fast
                     n_esc += r.n_escalated
                     n_split += r.n_split
-        return BatchResult(statuses, n_fast, n_esc, len(cohorts), n_split)
+                    n_merge += r.n_merge
+        return BatchResult(statuses, n_fast, n_esc, len(cohorts), n_split,
+                           n_merge)
 
     def _apply_mesh(self, ops, xs, oids, owner) -> BatchResult:
         """Mesh-resident path: cut-cohorts → one collective apply + one
-        collective split pass per cohort → psum'd statuses; host escalation
-        only for the residual multi-level rows."""
+        collective split pass + one collective merge pass per cohort →
+        psum'd statuses; host escalation only for the residual rows (a
+        blocked split chain — ring exhaustion — which ahead-of-time
+        headroom growth makes a cold assert-path)."""
         from repro.core import distributed as dist
         if self._stacked is None:
             self._stacked = dist.stack_trees([b.tree for b in self.batchers])
         forest = self._stacked
         statuses = np.zeros(len(ops), np.int32)
-        n_fast = n_esc = n_split = 0
+        n_fast = n_esc = n_split = n_merge = 0
         cohorts = cut_cohorts(oids)
         for start, end in cohorts:
             for cs in range(start, end, self.max_batch):
@@ -346,18 +397,54 @@ class StreamingForest:
                     st[chunk[k_st == smtree.ST_SPLIT]] = smtree.ST_SPLIT
                     if (k_st == smtree.ST_OVERFLOW).any():
                         break
+                # merge collectives: underflow rows resolve on device only
+                # once every overflow row has (the host reference resolves
+                # all overflows before any underflow; a residual blocked
+                # split must reach the host first to keep the structure-
+                # edit order — and the bitwise tree — identical)
+                unf = (np.nonzero((st == smtree.ST_UNDERFLOW)
+                                  & (c_ops[:ce - cs] == OP_DELETE))[0]
+                       if (self.device_merges
+                           and not (st == smtree.ST_OVERFLOW).any())
+                       else np.array([], np.int64))
+                # unlike the split ladder there is no blocked-chunk
+                # decision between merge dispatches (merges never
+                # allocate), so every chunk is dispatched back-to-back
+                # and the statuses sync once — one host round-trip per
+                # cohort instead of one per chunk
+                c0 = 0
+                pending = []
+                for w in smtree.merge_chunks(len(unf)):
+                    chunk = unf[c0:c0 + w]
+                    c0 += w
+                    k = len(chunk)
+                    k_ops = np.full(w, smtree.OP_NOP, np.int32)
+                    k_ops[:k] = OP_DELETE
+                    k_oids = np.full(w, -1, np.int32)
+                    k_oids[:k] = c_oids[chunk]
+                    k_owner = np.zeros(w, np.int32)
+                    k_owner[:k] = c_owner[chunk]
+                    forest, k_st = dist.forest_apply_merges(
+                        forest, self.mesh, k_ops, k_oids, k_owner,
+                        axis=self.axis)
+                    pending.append((chunk, k, k_st))
+                for chunk, k, k_st in pending:
+                    st[chunk] = np.asarray(jax.device_get(k_st))[:k]
                 esc = np.isin(st, (smtree.ST_OVERFLOW, smtree.ST_UNDERFLOW))
                 n_esc += int(esc.sum())
                 n_split += int((st == smtree.ST_SPLIT).sum())
+                n_merge += int((st == smtree.ST_MERGE).sum())
                 n_fast += int((st == smtree.ST_APPLIED).sum())
-                st[st == smtree.ST_SPLIT] = smtree.ST_APPLIED
+                st[np.isin(st, (smtree.ST_SPLIT, smtree.ST_MERGE))] = \
+                    smtree.ST_APPLIED
                 if esc.any():
                     forest = self._escalate_mesh(
                         forest, st, ops[cs:ce], xs[cs:ce], oids[cs:ce],
                         owner[cs:ce])
                 statuses[cs:ce] = st
         self._stacked = forest
-        return BatchResult(statuses, n_fast, n_esc, len(cohorts), n_split)
+        return BatchResult(statuses, n_fast, n_esc, len(cohorts), n_split,
+                           n_merge)
 
     def _escalate_mesh(self, forest, st, ops, xs, oids, owner):
         """Unstack only to run the host control plane on the shards that
@@ -425,6 +512,7 @@ class StreamingForest:
         self._shard_nodes = [t.max_nodes for t in trees]
         self.n_rebalances += 1
         self._rebuild_ownership()
+        self._ensure_headroom()   # rebalance is a headroom-growth point too
         self.epochs.publish(tuple(self.trees))
 
     # -- snapshots ---------------------------------------------------------

@@ -16,7 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.dist import sharding as shd
-from repro.dist.compression import compressed_mean_hook
+from repro.dist.compression import compressed_mean_hook, init_ef_state
 from repro.models import model as M
 from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, \
     init_opt_state
@@ -29,6 +29,7 @@ class TrainSettings:
     moe_aux_weight: float = 0.01
     z_loss_weight: float = 1e-3
     grad_compression: str = "none"     # none | int8
+    error_feedback: bool = False       # persistent EF state for int8 grads
     attn_impl: str | None = None       # None -> models.attention.ATTN_IMPL
     seq_parallel: bool = False         # Megatron SP on the residual stream
 
@@ -48,18 +49,42 @@ def loss_and_aux(params, cfg: ArchConfig, batch, settings: TrainSettings):
 
 def make_train_step(cfg: ArchConfig, mesh, inputs_spec: dict,
                     settings: TrainSettings = TrainSettings()):
-    """Returns (step_fn, Shardings) for this arch on this mesh."""
+    """Returns (step_fn, Shardings) for this arch on this mesh.
 
-    def step_fn(params, opt_state: AdamWState, batch):
+    With ``settings.error_feedback`` (and int8 compression), the step
+    carries *persistent EF state*: ``step_fn(params, opt_state, ef, batch)
+    -> (params, opt_state, ef, metrics)`` — the int8 quantisation residual
+    is folded into the next step's gradient instead of being dropped, so
+    long-run compressed training tracks uncompressed within one
+    quantisation step per update (the ROADMAP EF-wiring item; parity smoke
+    test in tests/test_error_feedback.py).  Initialise with
+    ``init_ef_state(params)``; the returned shardings dict gains an
+    ``"ef"`` entry (same specs as params, residuals live where their
+    gradients do).  Without the flag the signature is unchanged."""
+    use_ef = settings.error_feedback and settings.grad_compression == "int8"
+
+    def _grads_and_metrics(params, batch):
         shd.set_sequence_parallel(settings.seq_parallel)
         (total, metrics), grads = jax.value_and_grad(
             loss_and_aux, has_aux=True)(params, cfg, batch, settings)
+        return total, metrics, grads
+
+    def step_fn(params, opt_state: AdamWState, batch):
+        total, metrics, grads = _grads_and_metrics(params, batch)
         if settings.grad_compression == "int8":
             grads = compressed_mean_hook(grads)
         params, opt_state, opt_metrics = adamw_update(
             settings.opt, params, grads, opt_state)
         return params, opt_state, {**metrics, **opt_metrics,
                                    "total_loss": total}
+
+    def step_fn_ef(params, opt_state: AdamWState, ef, batch):
+        total, metrics, grads = _grads_and_metrics(params, batch)
+        grads, ef = compressed_mean_hook(grads, ef=ef)
+        params, opt_state, opt_metrics = adamw_update(
+            settings.opt, params, grads, opt_state)
+        return params, opt_state, ef, {**metrics, **opt_metrics,
+                                       "total_loss": total}
 
     # shardings
     pspecs = shd.param_pspecs(cfg, M.param_specs(cfg), mesh)
@@ -79,9 +104,15 @@ def make_train_step(cfg: ArchConfig, mesh, inputs_spec: dict,
 
     shardings = dict(params=param_sh, opt=opt_sh, batch=batch_sh,
                      metrics=metrics_sh, pspecs=pspecs)
+    if use_ef:
+        # residuals are grad-shaped: shard them exactly like the params
+        shardings["ef"] = param_sh
+        return step_fn_ef, shardings
     return step_fn, shardings
 
 
-def init_all(cfg: ArchConfig, rng):
+def init_all(cfg: ArchConfig, rng, *, error_feedback: bool = False):
     params = M.init_params(cfg, rng)
+    if error_feedback:
+        return params, init_opt_state(params), init_ef_state(params)
     return params, init_opt_state(params)

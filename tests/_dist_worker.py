@@ -165,6 +165,72 @@ def scenario_forest_device_splits():
         SMTreeEngine(t).validate()
 
 
+def scenario_forest_device_merges():
+    """Delete-heavy mesh drill on 8 shards: underflow merges resolve
+    through the forest_apply_merges collective (zero host escalations),
+    every shard stays bitwise-equal to the host-centric batcher path, and
+    the packed free ring keeps matching the wholesale recompute after
+    device pushes."""
+    from repro.core.distributed import build_forest_trees
+    from repro.core.engine import SMTreeEngine
+    from repro.core.smtree import OP_DELETE, OP_INSERT, ST_APPLIED
+    from repro.core.smtree import packed_free_list
+    from repro.stream import StreamingForest
+    mesh = jax.make_mesh((8,), ("model",))
+    rng = np.random.default_rng(23)
+    X = rng.random((2048, 6)).astype(np.float32)
+
+    def build():
+        return [t for t in build_forest_trees(X, 8, capacity=8)]
+
+    sf_mesh = StreamingForest(build(), mesh=mesh)
+    sf_host = StreamingForest(build())
+    live = set(range(2048))
+    vec = {i: X[i] for i in range(2048)}
+    nid = 10_000
+    n_merge = 0
+    with _use_mesh(mesh):
+        for step in range(5):
+            ops, xs, oids = [], [], []
+            for _ in range(128):
+                if live and rng.random() < 0.75:
+                    v = int(sorted(live)[rng.integers(len(live))])
+                    live.discard(v)
+                    ops.append(OP_DELETE)
+                    oids.append(v)
+                    xs.append(vec[v])
+                else:
+                    ops.append(OP_INSERT)
+                    oids.append(nid)
+                    v = rng.random(6).astype(np.float32)
+                    xs.append(v)
+                    vec[nid] = v
+                    live.add(nid)
+                    nid += 1
+            ops = np.array(ops, np.int32)
+            xs = np.stack(xs).astype(np.float32)
+            oids = np.array(oids, np.int32)
+            rm = sf_mesh.apply(ops, xs, oids)
+            rh = sf_host.apply(ops, xs, oids)
+            assert (rm.statuses == rh.statuses).all(), step
+            assert (rm.statuses == ST_APPLIED).all(), np.bincount(rm.statuses)
+            assert rm.n_escalated == 0, \
+                f"device merges must absorb all underflows, step {step}"
+            assert rm.n_merge == rh.n_merge, (rm.n_merge, rh.n_merge)
+            n_merge += rm.n_merge
+            for s, (a, b) in enumerate(zip(sf_mesh.trees, sf_host.trees)):
+                for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                    np.testing.assert_array_equal(
+                        np.asarray(la), np.asarray(lb),
+                        err_msg=f"shard {s} diverged at step {step}")
+    assert n_merge > 0, "workload never exercised a device merge"
+    for t in sf_mesh.trees:
+        fl, fh = packed_free_list(np.asarray(t.alive))
+        np.testing.assert_array_equal(np.asarray(t.free_list), fl)
+        assert int(t.free_head) == int(fh)
+        SMTreeEngine(t).validate()
+
+
 def scenario_forest_knn_cohort_parity():
     """forest_knn static-height cohort path == per-query fallback."""
     from repro.core.distributed import build_forest, forest_knn

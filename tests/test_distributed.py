@@ -14,6 +14,7 @@ SCENARIOS = [
     "forest_delete",
     "forest_stream",
     "forest_device_splits",
+    "forest_device_merges",
     "forest_knn_cohort_parity",
     "train_step_sharded",
     "elastic_reshard",

@@ -57,7 +57,10 @@ def test_batched_mixed_stream_matches_semantics():
     b = MutationBatcher(tree)
     res = b.apply(ops, xs, oids)
     assert (res.statuses == ST_APPLIED).all()
-    assert res.n_escalated > 0, "want escalations exercised (capacity 8)"
+    # capacity 8 must push rows off the fast path; since PR 4/5 those
+    # resolve as device splits/merges rather than host escalations
+    assert res.n_escalated + res.n_split + res.n_merge > 0, \
+        "want structure edits exercised (capacity 8)"
     eng = SMTreeEngine(b.tree)
     eng.validate()
     assert eng.n_objects == 600 - 150 + 80
@@ -293,6 +296,61 @@ def test_wal_corrupt_sealed_segment_raises(tmp_path):
         f.write(b"\xff\xff\xff")
     with pytest.raises(ValueError, match="corrupt sealed"):
         list(iter_wal(d))
+
+
+def test_wal_group_commit_concurrent_appends(tmp_path):
+    """Group commit coalesces concurrent fsyncs but must lose nothing:
+    every acknowledged append replays, seqs are unique and ordered, and
+    segment rotation under concurrency keeps sealed segments durable."""
+    import threading
+    d = str(tmp_path / "wal")
+    wal = WriteAheadLog(d, segment_max_records=16, sync=True,
+                        group_commit=True)
+    T, PER = 4, 24
+    errs = []
+
+    def worker(t):
+        try:
+            for i in range(PER):
+                oids = (np.arange(3, dtype=np.int32)
+                        + 1000 * t + 10 * i)
+                wal.append_batch(np.full(3, OP_INSERT, np.int8),
+                                 np.zeros((3, 4), np.float32), oids)
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(T)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wal.close()
+    assert not errs, errs
+    recs = list(iter_wal(d))
+    assert len(recs) == T * PER
+    seqs = [r.seq for r in recs]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    # every frame acknowledged is covered by some fsync
+    assert wal._synced == wal._appended == T * PER
+
+
+def test_wal_group_commit_single_thread_equivalent(tmp_path):
+    """Single-threaded, group commit degenerates to fsync-per-append and
+    replays identically to the plain sync mode."""
+    xs = np.ones((2, 3), np.float32)
+    logs = {}
+    for name, group in (("plain", False), ("group", True)):
+        d = str(tmp_path / name)
+        wal = WriteAheadLog(d, sync=True, group_commit=group)
+        for i in range(5):
+            wal.append_batch(np.full(2, OP_INSERT, np.int8), xs,
+                             np.arange(2 * i, 2 * i + 2))
+        wal.close()
+        logs[name] = list(iter_wal(d))
+    for a, b in zip(logs["plain"], logs["group"]):
+        assert a.seq == b.seq
+        np.testing.assert_array_equal(a.oids, b.oids)
 
 
 # ---------------------------------------------------------------------------
