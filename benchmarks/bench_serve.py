@@ -1,0 +1,271 @@
+"""Serving front-end benchmarks: the PR-6 acceptance matrix.
+
+Closed-loop drill at 64 concurrent clients against the async admission
+queue: coalesced-cohort dispatch (width 64, the one jitted geometry)
+vs per-request dispatch (width 1 — the pre-front-end shape where every
+query pays its own device round-trip).  The acceptance row is
+``serve_coalesce_speedup_c64`` (>= 3x).  Also records open-loop p50/p99
+at half the measured capacity, sustained QPS while the mutation
+scheduler streams add/evict batches through the same engine, and the
+WAL-shipping replica's catch-up rate + digest check.
+
+Scale envs: REPRO_BENCH_SMOKE=1 (tiny, CI) / REPRO_BENCH_FULL=1.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.smtree import OP_DELETE, OP_INSERT, bulk_build
+from repro.data.datagen import make_dataset
+
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+if SMOKE:
+    N = 2_000
+    PER_CLIENT = 4
+    REPLICA_BATCHES = 4
+elif FULL:
+    N = 50_000
+    PER_CLIENT = 48
+    REPLICA_BATCHES = 32
+else:
+    N = 20_000
+    PER_CLIENT = 24
+    REPLICA_BATCHES = 16
+DIM = 10
+CAPACITY = 32
+CLIENTS = 64
+W = 64          # coalesced cohort width
+K = 8
+MF = 64
+
+
+def _closed_loop(fe, Q, per_client: int, n_clients: int = CLIENTS) -> float:
+    """n_clients closed-loop threads, each submitting one query at a time;
+    returns wall-clock QPS over the whole drill."""
+    start = threading.Barrier(n_clients + 1)
+    errors: list[Exception] = []
+
+    def client(cid: int):
+        try:
+            start.wait(60)
+            for j in range(per_client):
+                fe.submit(Q[(cid * per_client + j) % len(Q)]).result(300)
+        except Exception as exc:  # noqa: BLE001 — fail the bench loudly
+            errors.append(exc)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    start.wait(60)
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return n_clients * per_client / dt
+
+
+def _dispatch_rows(report, eng, Q):
+    """Coalesced (width 64) vs per-request (width 1) closed-loop QPS."""
+    from repro.serve.frontend import FrontendConfig, ServeFrontend
+    rates = {}
+    # the SLO is sized to the cohort descent (~tens of ms at this N): tight
+    # enough to matter, loose enough that closed-loop clients refill the
+    # width between dispatches.  Width 1 dispatches immediately regardless
+    # (queue nonempty == batch full), so the SLO only shapes the wide leg.
+    for width, label, per in ((W, "coalesced", PER_CLIENT),
+                              (1, "perreq", max(2, PER_CLIENT // 4))):
+        fe = ServeFrontend(eng, FrontendConfig(
+            cohort_width=width, slo_ms=25.0, k=K, max_frontier=MF))
+        with fe:
+            fe.knn(Q[:width])       # warm this width's jit entry in place
+            qps = _closed_loop(fe, Q, per)
+        rates[label] = qps
+        report(f"serve_{label}_qps_c{CLIENTS}", round(qps, 0))
+        if label == "coalesced":
+            report(f"serve_mean_cohort_fill_c{CLIENTS}",
+                   round(fe.stats.mean_fill, 1))
+            report(f"serve_p50_ms_c{CLIENTS}",
+                   round(fe.stats.latency_ms(50), 2))
+            report(f"serve_p99_ms_c{CLIENTS}",
+                   round(fe.stats.latency_ms(99), 2))
+    report(f"serve_coalesce_speedup_c{CLIENTS}",
+           round(rates["coalesced"] / rates["perreq"], 2))
+    return rates
+
+
+def _openloop_rows(report, eng, Q, capacity_qps: float):
+    """Fixed-rate arrivals at ~50% of measured coalesced capacity: the
+    latency distribution when the queue is not saturated by backpressure
+    (closed-loop latencies measure the clients, open-loop measures the
+    SLO dispatch rule)."""
+    from repro.serve.frontend import FrontendConfig, ServeFrontend
+    rate = max(50.0, 0.5 * capacity_qps)
+    n = int(min(CLIENTS * PER_CLIENT, max(64, rate * 2)))
+    fe = ServeFrontend(eng, FrontendConfig(cohort_width=W, slo_ms=2.0,
+                                           k=K, max_frontier=MF))
+    with fe:
+        fe.knn(Q[:W])               # warm
+        tickets = []
+        t_next = time.perf_counter()
+        for j in range(n):
+            now = time.perf_counter()
+            if t_next > now:
+                time.sleep(t_next - now)
+            tickets.append(fe.submit(Q[j % len(Q)]))
+            t_next += 1.0 / rate
+        for t in tickets:
+            t.result(300)
+        report("serve_openloop_rate_qps", round(rate, 0))
+        report("serve_openloop_p50_ms", round(fe.stats.latency_ms(50), 2))
+        report("serve_openloop_p99_ms", round(fe.stats.latency_ms(99), 2))
+
+
+def _mutation_rows(report, eng, Q, X):
+    """Sustained QPS while the scheduler interleaves mutation batches —
+    the workload the alternating query/mutate loop used to serialize."""
+    from repro.serve.frontend import FrontendConfig, ServeFrontend
+    fe = ServeFrontend(eng, FrontendConfig(cohort_width=W, slo_ms=25.0,
+                                           k=K, max_frontier=MF))
+    stop = threading.Event()
+    n_batches = [0]
+    B = 128
+    fresh = make_dataset("uniform", 1 << 14, seed=100)[:, :DIM].copy()
+
+    def writer():
+        step = 0
+        while not stop.is_set():
+            ins = (10 * N + step * B + np.arange(B)).astype(np.int32)
+            dele = (step * B + np.arange(B)).astype(np.int32)
+            ops = np.concatenate([np.full(B, OP_INSERT, np.int32),
+                                  np.full(B, OP_DELETE, np.int32)])
+            xs = np.concatenate([fresh[(step * B + np.arange(B))
+                                       % len(fresh)],
+                                 X[dele % len(X)]]).astype(np.float32)
+            oids = np.concatenate([ins, dele])
+            try:
+                fe.submit_mutations(ops, xs, oids).result(300)
+            except Exception:  # noqa: BLE001 — end of useful stream
+                break
+            n_batches[0] += 1
+            step += 1
+
+    with fe:
+        fe.knn(Q[:W])               # warm the query geometry
+        # warm the mutation pipeline too: the batcher's cohort scan AND the
+        # split/merge ladder compiles are seconds-scale and must not eat
+        # the timed window (same pattern as bench_stream._time_stream)
+        import jax
+        from repro.core import smtree
+        for w in (smtree.SPLIT_CHUNK,):
+            scratch = jax.tree.map(lambda a: jax.numpy.array(a, copy=True),
+                                   eng.tree)
+            smtree.apply_splits(scratch,
+                                np.full(w, smtree.OP_NOP, np.int32),
+                                np.zeros((w, DIM), np.float32),
+                                np.full(w, -1, np.int32), donate=True)
+        for w in (smtree.MERGE_CHUNK, smtree.MERGE_CHUNK_MAX):
+            scratch = jax.tree.map(lambda a: jax.numpy.array(a, copy=True),
+                                   eng.tree)
+            smtree.apply_merges(scratch,
+                                np.full(w, smtree.OP_NOP, np.int32),
+                                np.full(w, -1, np.int32), donate=True)
+        # the writer's batch is one conflict-free cohort of 2B rows, which
+        # the batcher pads to the 2B power-of-two bucket — warm exactly that
+        # scan geometry (insert B fresh + delete B absent ids), then undo
+        warm = np.arange(20 * N, 20 * N + B, dtype=np.int32)
+        fe.submit_mutations(
+            np.concatenate([np.full(B, OP_INSERT, np.int32),
+                            np.full(B, OP_DELETE, np.int32)]),
+            np.concatenate([fresh[:B], fresh[:B]]).astype(np.float32),
+            np.concatenate([warm, warm + B])).result(600)
+        fe.submit_mutations(np.full(B, OP_DELETE, np.int32),
+                            fresh[:B].astype(np.float32), warm).result(600)
+        th = threading.Thread(target=writer)
+        th.start()
+        try:
+            qps = _closed_loop(fe, Q, PER_CLIENT)
+        finally:
+            stop.set()
+            th.join(timeout=300)
+    report(f"serve_coalesced_qps_under_mutation_c{CLIENTS}", round(qps, 0))
+    report("serve_mutation_batches_during_drill", n_batches[0])
+
+
+def _replica_rows(report):
+    """Follower catch-up rate over a shipped WAL + the digest check."""
+    from repro.stream import (Replica, StreamingEngine, WriteAheadLog,
+                              ledger_digest)
+    d = tempfile.mkdtemp(prefix="replbench")
+    try:
+        n = min(N, 8_192)
+        X = make_dataset("clustered", n, seed=7)[:, :DIM].copy()
+        tree = bulk_build(X, capacity=CAPACITY, slack=3.0)
+        leader = StreamingEngine(tree, wal=WriteAheadLog(
+            os.path.join(d, "wal"), segment_max_records=8))
+        B = 256
+        fresh = make_dataset("uniform", REPLICA_BATCHES * B, seed=11)
+        for i in range(REPLICA_BATCHES):
+            half = B // 2
+            ins = (10 * n + i * half + np.arange(half)).astype(np.int32)
+            dele = (i * half + np.arange(half)).astype(np.int32)
+            ops = np.concatenate([np.full(half, OP_INSERT, np.int32),
+                                  np.full(half, OP_DELETE, np.int32)])
+            xs = np.concatenate(
+                [fresh[i * half:(i + 1) * half, :DIM],
+                 X[dele]]).astype(np.float32)
+            leader.apply(ops, xs, np.concatenate([ins, dele]))
+        # leader's applies warmed the in-process jit cache, so catch-up
+        # times the replay pipeline, not compilation
+        rep = Replica(StreamingEngine(tree), os.path.join(d, "wal"))
+        target = leader.wal.next_seq - 1
+        t0 = time.perf_counter()
+        while rep.applied_seq < target:
+            rep.poll()
+        dt = time.perf_counter() - t0
+        report("replica_catchup_ops_per_s",
+               round(REPLICA_BATCHES * B / dt, 0))
+        seq, dg = ledger_digest(leader)
+        try:
+            rep.verify(seq, dg)
+            ok = 1
+        except AssertionError:
+            ok = 0
+        report("replica_digest_match", ok)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def run(report):
+    import jax
+    from repro.core import smtree
+    from repro.stream import StreamingEngine
+
+    rng = np.random.default_rng(1)
+    X = make_dataset("clustered", N, seed=7)[:, :DIM].copy()
+    # slack so the mutation drill never triggers a mid-run headroom
+    # doubling (a growth recompiles every jit entry for the new geometry)
+    tree = bulk_build(X, capacity=CAPACITY, slack=3.0)
+    Q = (X[rng.integers(0, N, 1024)] + 0.01).astype(np.float32)
+
+    # warm both dispatch geometries (the cohort width and the width-1
+    # per-request leg) outside every timed window
+    for w in (W, 1):
+        jax.block_until_ready(
+            smtree.knn(tree, Q[:w], k=K, max_frontier=MF).dists)
+
+    eng = StreamingEngine(tree)
+    rates = _dispatch_rows(report, eng, Q)
+    _openloop_rows(report, eng, Q, rates["coalesced"])
+    _mutation_rows(report, eng, Q, X)
+    _replica_rows(report)

@@ -26,6 +26,7 @@ _SUITES = [
     ("paper_delete", "paper_delete"),     # Fig. 10 + occupancy
     ("bench_engine", "bench_engine"),     # JAX engine throughput
     ("bench_stream", "bench_stream"),     # mutation-stream throughput
+    ("bench_serve", "bench_serve"),       # serving front-end + replicas
     ("bench_kernels", "bench_kernels"),   # kernel validation/baseline
     ("roofline", "roofline_table"),       # 40-cell dry-run table
 ]

@@ -112,6 +112,27 @@ def build_forest(X: np.ndarray, mesh: Mesh, *, axis: str = "model",
     return jax.device_put(forest, NamedSharding(mesh, P(axis))), spec
 
 
+def place_forest(trees_or_forest, mesh: Mesh, *,
+                 axis: str = "model") -> TreeArrays:
+    """Make a host-side forest mesh-resident: shards sharded one-per-device
+    over ``axis`` so ``forest_knn`` serves straight from HBM.
+
+    This is the read-replica fan-out step (stream/replica.py): a follower
+    restores + tails the WAL entirely on host, then each published epoch's
+    shard list is placed here and queried through the same collectives as
+    the leader — identical bytes, different devices.  Accepts either a
+    ``list[TreeArrays]`` (stacked and padded first) or an
+    already-stacked forest."""
+    forest = (trees_or_forest if isinstance(trees_or_forest, TreeArrays)
+              else stack_trees(list(trees_or_forest)))
+    n_shards = forest.root.shape[0]
+    if mesh.shape[axis] != n_shards:
+        raise ValueError(
+            f"mesh axis {axis!r} has {mesh.shape[axis]} devices for "
+            f"{n_shards} shards (need exactly one per shard)")
+    return jax.device_put(forest, NamedSharding(mesh, P(axis)))
+
+
 def _local_tree(forest_slice: TreeArrays) -> TreeArrays:
     """Strip the leading length-1 shard axis inside shard_map."""
     return dataclasses.replace(

@@ -33,9 +33,29 @@ def _build_store(args, cfg, mesh=None):
     store = KnnLmDatastore(KnnLmConfig(lam=args.lam, metric="l2"),
                            cfg.d_model, mesh=mesh)
     store.build(keys, vals)
-    if getattr(args, "knn_mutate", False):
+    if getattr(args, "knn_mutate", False) or getattr(args, "frontend", False):
         store.enable_stream()   # batched add/evict via repro.stream
+    if getattr(args, "frontend", False):
+        # async serving front-end: retrieval coalesces into epoch-pinned
+        # cohorts, mutations ride the scheduler between epoch publishes —
+        # this replaces the old alternating query/mutate decode loop
+        store.enable_frontend(cohort_width=args.cohort_width or args.batch,
+                              slo_ms=args.slo_ms)
     return store
+
+
+def _finish_frontend(store) -> str:
+    """Drain the scheduler (all submitted mutations applied) and format
+    the serving counters for the run summary."""
+    if store is None or store.frontend is None:
+        return ""
+    store.frontend.drain()
+    s = store.frontend.stats.snapshot()
+    store.close_frontend()
+    return (f", frontend: {s['n_cohorts']} cohorts "
+            f"(fill {s['mean_cohort_fill']}, "
+            f"{s['n_mutation_batches']} mutation batches, "
+            f"p50 {s['p50_ms']}ms p99 {s['p99_ms']}ms)")
 
 
 class _WindowMutator:
@@ -94,6 +114,7 @@ def serve_sharded(args, cfg):
                                sh["cache"])
         mix_fn = None
         mutator = None
+        store = None
         if args.knn:
             store = _build_store(args, cfg, mesh=mesh)
             mix_fn, _ = make_knnlm_mixer(cfg, mesh, shape, store,
@@ -119,13 +140,14 @@ def serve_sharded(args, cfg):
             out.append(tok)
         jax.block_until_ready(tok)
         decode_s = time.time() - t0
+        fe = _finish_frontend(store)
     toks = np.stack([np.asarray(t) for t in out], axis=1)
     mut = (f", {mutator.n_ops} live mutations "
            f"({mutator.n_ops / decode_s:.0f} ops/s)" if mutator else "")
     print(f"[serve] mesh {dict(mesh.shape)} batch {args.batch}: "
           f"prefill {prefill_s:.2f}s, decode {args.steps} steps in "
           f"{decode_s:.2f}s ({decode_s / args.steps * 1e3:.1f} ms/step"
-          f"{', kNN-LM mixed' if mix_fn else ''}{mut})")
+          f"{', kNN-LM mixed' if mix_fn else ''}{mut}{fe})")
     print("[serve] sample:", toks[0][:12])
     return toks
 
@@ -143,6 +165,17 @@ def main(argv=None):
                     help="with --knn: live sliding-window add/evict of "
                          "datastore entries each decode step (batched "
                          "through the repro.stream pipeline)")
+    ap.add_argument("--frontend", action="store_true",
+                    help="with --knn: route retrieval through the async "
+                         "serving front-end (admission queue -> epoch-"
+                         "pinned cohorts; mutations ride the scheduler "
+                         "between epoch publishes)")
+    ap.add_argument("--slo-ms", type=float, default=5.0,
+                    help="front-end admission SLO: a partial cohort "
+                         "dispatches once its oldest request is this old")
+    ap.add_argument("--cohort-width", type=int, default=0,
+                    help="front-end cohort width (0: use --batch); one "
+                         "jitted kNN geometry per width")
     ap.add_argument("--lam", type=float, default=0.3)
     ap.add_argument("--mesh", default="single", choices=["single", "host"],
                     help="'host': sharded decode over all host devices")
@@ -193,13 +226,14 @@ def main(argv=None):
         out.append(tok)
     jax.block_until_ready(tok)   # async dispatch: sync before timing
     decode_s = time.time() - t0
+    fe = _finish_frontend(store)
     toks = np.stack([np.asarray(t) for t in out], axis=1)
     mut = (f", {mutator.n_ops} live mutations "
            f"({mutator.n_ops / decode_s:.0f} ops/s)" if mutator else "")
     print(f"[serve] batch {args.batch}: prefill {prefill_s:.2f}s, "
           f"decode {args.steps} steps in {decode_s:.2f}s "
           f"({decode_s / args.steps * 1e3:.1f} ms/step"
-          f"{', kNN-LM mixed' if store else ''}{mut})")
+          f"{', kNN-LM mixed' if store else ''}{mut}{fe})")
     print("[serve] sample:", toks[0][:12])
     return toks
 

@@ -1,0 +1,374 @@
+"""Async serving front-end: admission queue + cohort scheduler.
+
+The engine's cohort descent is 6-7x faster than per-request dispatch
+(BENCH_PR2/PR5), but only a caller that already *has* a [b, dim] batch can
+reach it.  This module forms those batches from independent clients:
+
+  * **Admission queue** — clients ``submit()`` single queries (or
+    ``submit_many`` a block) and get tickets; a dispatcher thread coalesces
+    pending requests into **fixed-geometry cohorts** under a latency SLO.
+    The dispatch rule is *deadline-or-batch-full*: a cohort launches the
+    moment ``cohort_width`` requests are waiting, or when the oldest
+    admitted request has been queued for ``slo_ms`` — whichever comes
+    first.  Cohorts are always padded to ``cohort_width`` (pad rows are
+    zero queries whose results are discarded), so **one jitted geometry
+    serves all traffic** — no per-burst-size recompiles, ever.
+  * **Epoch pinning** — each cohort runs under the existing
+    ``EpochManager.reading()`` contract: the snapshot is pinned before the
+    descent starts and released after results are sliced out, so a
+    concurrent writer can publish and retire epochs freely and no query
+    ever observes a tree swap mid-cohort.  Every ticket records the epoch
+    that answered it.
+  * **Cohort scheduler** — mutation batches go through a second queue
+    drained by a writer thread that applies them via the engine's
+    WAL-first ``apply`` (each apply ends in an epoch publish).  Queries
+    never block on a mutation batch: reads come from pinned epochs on the
+    dispatcher thread while the writer churns the next version.  This
+    replaces the alternating query/mutate loop ``launch/serve.py`` ran
+    before: mutations now ride behind serving instead of stalling it.
+
+Works over a ``StreamingEngine`` (single tree) or ``StreamingForest``
+(pinned epoch = tuple of shard trees; per-shard descent + host top-k
+merge, the same read path ``StreamingForest.knn`` uses).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from repro.core import smtree
+
+__all__ = ["FrontendConfig", "FrontendStats", "QueryTicket",
+           "MutationTicket", "ServeFrontend", "pinned_knn"]
+
+
+@dataclasses.dataclass
+class FrontendConfig:
+    cohort_width: int = 64    # fixed dispatch geometry (pad-to-width)
+    slo_ms: float = 5.0       # max queue age before a partial cohort ships
+    k: int = 8
+    max_frontier: int = 64
+    queue_cap: int = 4096     # admission bound (submit blocks when full)
+
+
+def pinned_knn(pinned, queries: np.ndarray, *, k: int, max_frontier: int):
+    """kNN over one pinned epoch: a single tree, or a tuple of forest
+    shards (per-shard cohort descent + host top-k merge — the forest read
+    path, shared here so the front-end serves both layouts)."""
+    if not isinstance(pinned, (tuple, list)):
+        pinned = (pinned,)
+    ds, ids = [], []
+    for t in pinned:
+        res = smtree.knn(t, queries, k=k, max_frontier=max_frontier)
+        ds.append(np.asarray(res.dists))
+        ids.append(np.asarray(res.ids))
+    d = np.concatenate(ds, axis=1)
+    i = np.concatenate(ids, axis=1)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    return np.take_along_axis(d, order, 1), np.take_along_axis(i, order, 1)
+
+
+class QueryTicket:
+    """One admitted query.  ``result()`` blocks until its cohort ran."""
+    __slots__ = ("q", "t_submit", "t_done", "epoch", "dists", "ids", "err",
+                 "_event")
+
+    def __init__(self, q: np.ndarray):
+        self.q = q
+        self.t_submit = time.monotonic()
+        self.t_done = None
+        self.epoch = None        # epoch number the cohort was pinned to
+        self.dists = None        # [k] f32
+        self.ids = None          # [k] i32
+        self.err = None
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None):
+        """(dists [k], ids [k]) — raises the cohort's error, if any."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("query ticket not served within timeout")
+        if self.err is not None:
+            raise self.err
+        return self.dists, self.ids
+
+    @property
+    def latency_s(self) -> float:
+        return (self.t_done or time.monotonic()) - self.t_submit
+
+
+class MutationTicket:
+    """One queued mutation batch; resolves to its ``BatchResult``."""
+    __slots__ = ("ops", "xs", "oids", "res", "err", "_event")
+
+    def __init__(self, ops, xs, oids):
+        self.ops, self.xs, self.oids = ops, xs, oids
+        self.res = None
+        self.err = None
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("mutation batch not applied within timeout")
+        if self.err is not None:
+            raise self.err
+        return self.res
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    """Serving counters (updated under the front-end lock)."""
+    n_queries: int = 0
+    n_cohorts: int = 0
+    n_full_dispatch: int = 0      # cohorts shipped because width was reached
+    n_deadline_dispatch: int = 0  # cohorts shipped by the SLO deadline
+    n_mutation_batches: int = 0
+    fill_sum: int = 0             # real (unpadded) rows across cohorts
+    latencies_s: list = dataclasses.field(default_factory=list)
+
+    def observe_cohort(self, fill: int, full: bool, lats) -> None:
+        self.n_cohorts += 1
+        self.n_queries += fill
+        self.fill_sum += fill
+        if full:
+            self.n_full_dispatch += 1
+        else:
+            self.n_deadline_dispatch += 1
+        self.latencies_s.extend(lats)
+        if len(self.latencies_s) > 1 << 16:   # bounded reservoir
+            del self.latencies_s[:len(self.latencies_s) >> 1]
+
+    @property
+    def mean_fill(self) -> float:
+        return self.fill_sum / max(1, self.n_cohorts)
+
+    def latency_ms(self, pct: float) -> float:
+        if not self.latencies_s:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latencies_s), pct) * 1e3)
+
+    def snapshot(self) -> dict:
+        return {"n_queries": self.n_queries, "n_cohorts": self.n_cohorts,
+                "n_full_dispatch": self.n_full_dispatch,
+                "n_deadline_dispatch": self.n_deadline_dispatch,
+                "n_mutation_batches": self.n_mutation_batches,
+                "mean_cohort_fill": round(self.mean_fill, 2),
+                "p50_ms": round(self.latency_ms(50), 3),
+                "p99_ms": round(self.latency_ms(99), 3)}
+
+
+class ServeFrontend:
+    """Admission queue + cohort scheduler over a streaming engine/forest.
+
+    ``engine`` must expose ``.epochs`` (an ``EpochManager``) and
+    ``.apply(ops, xs, oids)`` (the WAL-first batch apply that publishes an
+    epoch) — both ``StreamingEngine`` and ``StreamingForest`` qualify.
+    ``knn_fn(pinned, queries) -> (dists [b,k], ids [b,k])`` overrides the
+    default pinned descent (``pinned_knn``).
+
+    Use as a context manager, or ``start()``/``stop()`` explicitly::
+
+        with ServeFrontend(eng, FrontendConfig(cohort_width=64)) as fe:
+            d, i = fe.knn(queries)            # coalesced, epoch-pinned
+            fe.submit_mutations(ops, xs, oids)  # rides behind serving
+    """
+
+    def __init__(self, engine, cfg: FrontendConfig | None = None, *,
+                 knn_fn=None):
+        self.engine = engine
+        self.cfg = cfg or FrontendConfig()
+        if self.cfg.cohort_width < 1:
+            raise ValueError("cohort_width must be >= 1")
+        self._knn_fn = knn_fn or (lambda pinned, q: pinned_knn(
+            pinned, q, k=self.cfg.k, max_frontier=self.cfg.max_frontier))
+        self.stats = FrontendStats()
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._queue: list[QueryTicket] = []
+        self._mutations: list[MutationTicket] = []
+        self._inflight = 0            # queries taken off the queue, not done
+        self._mut_inflight = 0
+        self._running = False
+        self._threads: list[threading.Thread] = []
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "ServeFrontend":
+        with self._lock:
+            if self._running:
+                return self
+            self._running = True
+        self._threads = [
+            threading.Thread(target=self._dispatch_loop,
+                             name="frontend-dispatch", daemon=True),
+            threading.Thread(target=self._mutation_loop,
+                             name="frontend-mutate", daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Stop the worker threads.  ``drain=True`` (default) serves every
+        admitted request and applies every queued mutation first; False
+        fails the leftovers with a RuntimeError."""
+        if drain and self._running:
+            self.drain()
+        with self._cond:
+            self._running = False
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join(timeout=30)
+        self._threads = []
+        with self._cond:
+            leftovers = self._queue + self._mutations
+            self._queue, self._mutations = [], []
+        for tk in leftovers:
+            tk.err = RuntimeError("front-end stopped before dispatch")
+            tk._event.set()
+
+    def __enter__(self) -> "ServeFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=exc == (None, None, None))
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Block until both queues are empty and nothing is in flight."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while (self._queue or self._mutations or self._inflight
+                   or self._mut_inflight):
+                left = None if deadline is None \
+                    else max(0.0, deadline - time.monotonic())
+                if left == 0.0:
+                    raise TimeoutError("front-end did not drain in time")
+                self._cond.wait(left if left is not None else 0.1)
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, q: np.ndarray) -> QueryTicket:
+        """Admit one query [dim]; returns its ticket.  Blocks while the
+        admission queue is at ``queue_cap`` (backpressure, not load-shed:
+        the SLO is best-effort under overload)."""
+        if not self._running:
+            raise RuntimeError("front-end not started")
+        tk = QueryTicket(np.asarray(q, np.float32))
+        with self._cond:
+            while len(self._queue) >= self.cfg.queue_cap and self._running:
+                self._cond.wait(0.05)
+            if not self._running:
+                raise RuntimeError("front-end stopped")
+            self._queue.append(tk)
+            self._cond.notify_all()
+        return tk
+
+    def submit_many(self, qs: np.ndarray) -> list[QueryTicket]:
+        """Admit a [b, dim] block as b tickets (they coalesce like any
+        other traffic — a b <= width block from one client usually lands
+        in a single cohort)."""
+        return [self.submit(q) for q in np.asarray(qs, np.float32)]
+
+    def knn(self, qs: np.ndarray, timeout: float | None = 60.0):
+        """Synchronous convenience: admit [b, dim], wait, return
+        (dists [b, k], ids [b, k])."""
+        tickets = self.submit_many(qs)
+        out = [t.result(timeout) for t in tickets]
+        return (np.stack([d for d, _ in out]),
+                np.stack([i for _, i in out]))
+
+    def submit_mutations(self, ops, xs, oids) -> MutationTicket:
+        """Queue one mutation batch for the scheduler; returns a ticket
+        resolving to its ``BatchResult``.  Fire-and-forget callers simply
+        drop the ticket — ``drain()``/``stop()`` still applies it."""
+        if not self._running:
+            raise RuntimeError("front-end not started")
+        tk = MutationTicket(np.asarray(ops, np.int32),
+                            np.asarray(xs, np.float32),
+                            np.asarray(oids, np.int32))
+        with self._cond:
+            self._mutations.append(tk)
+            self._cond.notify_all()
+        return tk
+
+    # -- dispatcher (query cohorts) ---------------------------------------
+    def _dispatch_loop(self) -> None:
+        W = self.cfg.cohort_width
+        slo_s = self.cfg.slo_ms / 1e3
+        while True:
+            with self._cond:
+                while not self._queue and self._running:
+                    self._cond.wait(0.05)
+                if not self._queue:
+                    return                      # stopped and empty
+                # deadline-or-batch-full: wait for a full cohort only
+                # until the oldest admitted request hits the SLO
+                deadline = self._queue[0].t_submit + slo_s
+                while len(self._queue) < W and self._running:
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        break
+                    self._cond.wait(left)
+                batch = self._queue[:W]
+                del self._queue[:len(batch)]
+                self._inflight += len(batch)
+                self._cond.notify_all()
+            self._run_cohort(batch, full=len(batch) == W)
+
+    def _run_cohort(self, batch: list[QueryTicket], *, full: bool) -> None:
+        W = self.cfg.cohort_width
+        n = len(batch)
+        try:
+            dim = batch[0].q.shape[-1]
+            Q = np.zeros((W, dim), np.float32)   # pad-to-width: one geometry
+            for r, tk in enumerate(batch):
+                Q[r] = tk.q
+            with self.engine.epochs.reading(with_epoch=True) as (e, pinned):
+                d, ids = self._knn_fn(pinned, Q)
+            d, ids = np.asarray(d)[:n], np.asarray(ids)[:n]
+            t_done = time.monotonic()
+            for r, tk in enumerate(batch):
+                tk.dists, tk.ids, tk.epoch = d[r], ids[r], e
+                tk.t_done = t_done
+        except Exception as exc:  # noqa: BLE001 — fail the cohort's tickets
+            for tk in batch:
+                tk.err = exc
+        finally:
+            for tk in batch:
+                tk._event.set()
+            with self._cond:
+                self._inflight -= n
+                self.stats.observe_cohort(
+                    n, full,
+                    [tk.latency_s for tk in batch if tk.err is None])
+                self._cond.notify_all()
+
+    # -- scheduler (mutation batches) -------------------------------------
+    def _mutation_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._mutations and self._running:
+                    self._cond.wait(0.05)
+                if not self._mutations:
+                    return                      # stopped and empty
+                tk = self._mutations.pop(0)
+                self._mut_inflight += 1
+            try:
+                # the engine's WAL-first apply; ends in an epoch publish,
+                # so the batch becomes visible to the *next* cohort pin —
+                # in-flight cohorts keep their pinned snapshot
+                tk.res = self.engine.apply(tk.ops, tk.xs, tk.oids)
+            except Exception as exc:  # noqa: BLE001 — fail the ticket
+                tk.err = exc
+            finally:
+                tk._event.set()
+                with self._cond:
+                    self._mut_inflight -= 1
+                    self.stats.n_mutation_batches += 1
+                    self._cond.notify_all()

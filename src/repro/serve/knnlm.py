@@ -54,6 +54,7 @@ class KnnLmDatastore:
         self._vals_buf = self.values
         self.engine: SMTreeEngine | None = None
         self.stream = None   # repro.stream.StreamingEngine when enabled
+        self.frontend = None  # serve.frontend.ServeFrontend when enabled
 
     def _place(self):
         """Replicate tree pages over the mesh (queries shard, pages don't)."""
@@ -112,6 +113,37 @@ class KnnLmDatastore:
         self.stream = StreamingEngine(self.engine.tree, wal=wal, **kw)
         return self.stream
 
+    def enable_frontend(self, **cfg):
+        """Serve retrieval through the async front-end: queries coalesce
+        into epoch-pinned cohorts, ``add_batch``/``evict_batch`` ride the
+        mutation scheduler (applied between epoch publishes) instead of
+        stalling the decode loop.  Requires ``enable_stream`` first."""
+        if self.stream is None:
+            raise ValueError("enable_stream() before enable_frontend()")
+        from repro.serve.frontend import FrontendConfig, ServeFrontend
+        cfg.setdefault("k", self.cfg.k)
+        cfg.setdefault("max_frontier", self.cfg.max_frontier)
+        self.frontend = ServeFrontend(self.stream,
+                                      FrontendConfig(**cfg)).start()
+        return self.frontend
+
+    def close_frontend(self) -> None:
+        if self.frontend is not None:
+            self.frontend.stop()
+            self.frontend = None
+            self._sync_engine_tree()
+
+    def _sync_engine_tree(self) -> None:
+        """Resync ``engine.tree`` from the *published* epoch — never from
+        ``stream.tree``, which is the batcher's live working reference and
+        can be mid-churn (half-applied cohorts of the current batch) when a
+        concurrent scheduler thread is applying.  Non-stream readers of
+        ``engine.tree`` (engine.knn/validate, ``_place``) must only ever
+        observe epoch-published versions, same as the ``knn_logits``
+        pinned-read path."""
+        if self.stream is not None:
+            _, self.engine.tree = self.stream.epochs.current()
+
     def _append_history(self, keys: np.ndarray, values: np.ndarray) -> None:
         """Amortised-O(1) append to the oid-indexed key/value history.
 
@@ -141,9 +173,14 @@ class KnnLmDatastore:
         values = np.asarray(values, np.int32)
         oids = (len(self.values) + np.arange(len(values))).astype(np.int32)
         self._append_history(keys, values)
-        if self.stream is not None:
+        if self.frontend is not None:
+            from repro.core.smtree import OP_INSERT as _OP_I
+            self.frontend.submit_mutations(
+                np.full(len(oids), _OP_I, np.int32), keys, oids)
+            self._sync_engine_tree()
+        elif self.stream is not None:
             self.stream.insert_batch(keys, oids)
-            self.engine.tree = self.stream.tree
+            self._sync_engine_tree()
         else:
             for k, o in zip(keys, oids):
                 self.engine.insert(k, int(o))
@@ -153,11 +190,18 @@ class KnnLmDatastore:
     def evict_batch(self, oids: np.ndarray) -> int:
         """Batched online eviction (sliding-window memory); returns the
         number of entries actually removed."""
-        from repro.core.smtree import ST_APPLIED
+        from repro.core.smtree import OP_DELETE as _OP_D, ST_APPLIED
         oids = np.asarray(oids, np.int32)
-        if self.stream is not None:
+        if self.frontend is not None:
+            # async: the scheduler applies between epoch publishes; the
+            # count isn't known yet, so report the rows *submitted*
+            self.frontend.submit_mutations(
+                np.full(len(oids), _OP_D, np.int32), self.keys[oids], oids)
+            self._sync_engine_tree()
+            n = len(oids)
+        elif self.stream is not None:
             res = self.stream.delete_batch(self.keys[oids], oids)
-            self.engine.tree = self.stream.tree
+            self._sync_engine_tree()
             n = int((res.statuses == ST_APPLIED).sum())
         else:
             n = sum(self.evict(int(o)) for o in oids)
@@ -171,16 +215,21 @@ class KnnLmDatastore:
         (``EpochManager.reading``), so a concurrent ``add_batch`` /
         ``evict_batch`` writer can publish and retire versions without ever
         dropping the tree this query is descending."""
-        if self.stream is not None:
+        if self.frontend is not None:
+            # coalesced path: the decode step's [b, D] block is admitted
+            # as b tickets and lands in one epoch-pinned cohort alongside
+            # any other concurrent traffic
+            d, ids = self.frontend.knn(np.asarray(h, np.float32))
+        elif self.stream is not None:
             from repro.core import smtree
             with self.stream.epochs.reading() as tree:
                 res = smtree.knn(tree, self.shard_queries(h), k=self.cfg.k,
                                  max_frontier=self.cfg.max_frontier)
+            d, ids = res.dists, np.asarray(res.ids)
         else:
             res = self.engine.knn(self.shard_queries(h), k=self.cfg.k,
                                   max_frontier=self.cfg.max_frontier)
-        d = res.dists                                     # [b, k]
-        ids = np.asarray(res.ids)                          # [b, k]
+            d, ids = res.dists, np.asarray(res.ids)       # [b, k]
         vals = jnp.asarray(np.where(ids >= 0, self.values[np.maximum(ids, 0)],
                                     0))
         w = jax.nn.softmax(jnp.where(jnp.isfinite(d),

@@ -14,10 +14,17 @@ write pipeline:
     streams (the ROADMAP forest-rebalancing item).
   * ``pipeline``  — ``StreamingEngine`` / ``StreamingForest`` orchestrators
     with snapshot + WAL-tail restore (bitwise-deterministic).
+  * ``replica``   — WAL-shipping read replicas: followers that tail the
+    leader's segments (torn-tail-tolerant ``tail_wal`` cursor), replay
+    through the same pipeline, publish bitwise-identical epochs, and
+    verify it via digest exchange.
 """
 from repro.stream.batcher import MutationBatcher, cut_cohorts  # noqa: F401
 from repro.stream.epoch import EpochManager  # noqa: F401
 from repro.stream.pipeline import StreamingEngine, StreamingForest  # noqa: F401
 from repro.stream.rebalance import (collect_stats, needs_rebalance,  # noqa: F401
                                     rebalance_shards)
-from repro.stream.wal import WriteAheadLog, iter_wal  # noqa: F401
+from repro.stream.replica import (DigestMismatch, Replica,  # noqa: F401
+                                  ledger_digest, tree_digest)
+from repro.stream.wal import (WalCursor, WriteAheadLog, iter_wal,  # noqa: F401
+                              tail_wal)

@@ -64,18 +64,28 @@ class EpochManager:
             return e, self._versions[e]
 
     @contextlib.contextmanager
-    def reading(self):
+    def reading(self, *, with_epoch: bool = False):
         """Context manager over acquire/release: pins the latest version
         for the duration of the block and releases it even on error.
 
             with mgr.reading() as tree:
                 ...query tree...
-        """
+
+        ``with_epoch=True`` yields ``(epoch, tree)`` instead — serving
+        paths that report which snapshot answered a request (the front-end
+        tags every cohort, the replica digest exchange names the epoch it
+        verified) need the number without giving up the context-manager
+        pin discipline."""
         e, tree = self.acquire()
         try:
-            yield tree
+            yield (e, tree) if with_epoch else tree
         finally:
             self.release(e)
+
+    def refs(self, epoch: int) -> int:
+        """Current pin count for ``epoch`` (diagnostics/tests)."""
+        with self._lock:
+            return self._refs.get(epoch, 0)
 
     def release(self, epoch: int) -> None:
         with self._lock:

@@ -92,13 +92,15 @@ def _decode_header(header: dict) -> tuple[int, WalRecord | None]:
                         params=header.get("params", {}))
 
 
-def _scan_segment(path: str, *, sealed: bool):
-    """(records, valid_byte_length) of one segment.  A truncated/corrupt
-    tail frame is tolerated (scan stops, its bytes excluded from
-    valid_byte_length) only when ``sealed`` is False."""
+def _scan_segment(path: str, *, sealed: bool, start: int = 0):
+    """(records, valid_byte_length) of one segment, scanning from byte
+    ``start`` (which must sit on a frame boundary — e.g. a prior scan's
+    returned length).  A truncated/corrupt tail frame is tolerated (scan
+    stops, its bytes excluded from valid_byte_length) only when ``sealed``
+    is False."""
     with open(path, "rb") as f:
         data = f.read()
-    off, total = 0, len(data)
+    off, total = start, len(data)
     records: list[WalRecord] = []
 
     def torn(msg: str):
@@ -166,6 +168,64 @@ def iter_wal(directory: str, after_seq: int = -1) -> Iterator[WalRecord]:
                                  sealed=sealed):
             if rec.seq > after_seq:
                 yield rec
+
+
+@dataclasses.dataclass
+class WalCursor:
+    """Resumable position of a WAL follower (stream/replica.py).
+
+    ``segment``/``offset`` name the next unread byte; ``seq`` is the last
+    record applied (records at or below it are skipped on overlap, so a
+    cursor restored from a snapshot's ``wal_seq`` with segment/offset 0
+    fast-forwards correctly).  The offset always lands on a frame
+    boundary: a torn tail frame in the active segment leaves the cursor
+    *before* it, and the next poll re-reads from there — once the leader's
+    append completes, the same bytes parse and the record flows through.
+    """
+    seq: int = -1
+    segment: int = 0
+    offset: int = 0
+
+
+def tail_wal(directory: str,
+             cursor: WalCursor) -> tuple[list[WalRecord], WalCursor]:
+    """One follower poll: all complete records past ``cursor``, plus the
+    advanced cursor.  Safe to call while the leader appends — sealed
+    segments are immutable, and the active segment's torn tail (a frame
+    mid-append, or mid-shipment on a lagging mount) terminates the poll
+    cleanly at the last complete frame.  Sealed segments wholly below the
+    cursor's seq are skipped without reading their frames."""
+    names = _scan_dir(directory)
+    cur = dataclasses.replace(cursor)
+    out: list[WalRecord] = []
+    sealed_meta: dict[str, dict] = {}
+    mpath = os.path.join(directory, _MANIFEST)
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            sealed_meta = {s["name"]: s for s in json.load(f)["segments"]}
+    for i, name in enumerate(names):
+        idx = _segment_index(name)
+        if idx < cur.segment:
+            continue
+        path = os.path.join(directory, name)
+        sealed = name in sealed_meta or i < len(names) - 1
+        start = cur.offset if idx == cur.segment else 0
+        entry = sealed_meta.get(name)
+        if (sealed and start == 0 and entry is not None
+                and entry.get("last_seq") is not None
+                and entry["last_seq"] <= cur.seq):
+            # snapshot fast-forward: this whole segment predates the cursor
+            cur.segment, cur.offset = idx, os.path.getsize(path)
+            continue
+        records, end = _scan_segment(path, sealed=sealed, start=start)
+        for rec in records:
+            if rec.seq > cur.seq:
+                out.append(rec)
+                cur.seq = rec.seq
+        cur.segment, cur.offset = idx, end
+        if not sealed:
+            break   # the active segment is always the last one scanned
+    return out, cur
 
 
 class WriteAheadLog:

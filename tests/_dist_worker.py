@@ -250,6 +250,67 @@ def scenario_forest_knn_cohort_parity():
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-6)
 
 
+def scenario_replica_forest_mesh():
+    """WAL-shipping follower of a StreamingForest: tails the leader's
+    segments on host, verifies bitwise equality by digest exchange, then
+    places its shards on the mesh (place_forest) and serves exact kNN
+    through the same forest_knn collectives as the leader."""
+    import tempfile
+    from repro.core.distributed import (build_forest_trees, forest_knn,
+                                        place_forest)
+    from repro.core.metric import pairwise
+    from repro.core.smtree import OP_DELETE, OP_INSERT, ST_APPLIED
+    from repro.stream import (Replica, StreamingForest, WriteAheadLog,
+                              ledger_digest)
+    mesh = jax.make_mesh((8,), ("model",))
+    rng = np.random.default_rng(29)
+    X = rng.random((2048, 8)).astype(np.float32)
+    live = set(range(2048))
+    vec = {i: X[i] for i in range(2048)}
+    nid = 10_000
+    with tempfile.TemporaryDirectory() as d:
+        wal_dir = os.path.join(d, "wal")
+        leader = StreamingForest(build_forest_trees(X, 8, capacity=8),
+                                 wal=WriteAheadLog(wal_dir,
+                                                   segment_max_records=2))
+        rep = Replica(StreamingForest(build_forest_trees(X, 8, capacity=8)),
+                      wal_dir)
+        for _ in range(3):
+            ops, xs, oids = [], [], []
+            for _ in range(128):
+                if live and rng.random() < 0.4:
+                    v = int(sorted(live)[rng.integers(len(live))])
+                    live.discard(v)
+                    ops.append(OP_DELETE)
+                    oids.append(v)
+                    xs.append(vec[v])
+                else:
+                    x = rng.random(8).astype(np.float32)
+                    vec[nid] = x
+                    live.add(nid)
+                    ops.append(OP_INSERT)
+                    oids.append(nid)
+                    xs.append(x)
+                    nid += 1
+            res = leader.apply(np.array(ops, np.int32),
+                               np.stack(xs).astype(np.float32),
+                               np.array(oids, np.int32))
+            assert (res.statuses == ST_APPLIED).all()
+        seq, dg = ledger_digest(leader)
+        rep.verify(seq, dg)                # bitwise, or DigestMismatch
+        # read fan-out: the follower's published epoch goes mesh-resident
+        with rep.epochs.reading() as shards:
+            forest = place_forest(list(shards), mesh)
+            Q = np.stack([vec[o] for o in sorted(live)[:16]]) + 0.003
+            with _use_mesh(mesh):
+                d_got, ids = forest_knn(forest, mesh,
+                                        jnp.asarray(Q, jnp.float32), k=3,
+                                        max_frontier=256)
+        keys = np.stack([vec[o] for o in sorted(live)])
+        want = np.sort(pairwise(shards[0].metric, Q, keys), axis=1)[:, :3]
+        np.testing.assert_allclose(np.asarray(d_got), want, atol=1e-5)
+
+
 def scenario_train_step_sharded():
     """2x4 mesh end-to-end: sharded train step runs and loss decreases."""
     import dataclasses

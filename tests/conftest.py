@@ -63,3 +63,10 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:
     _install_hypothesis_stub()
+else:
+    # Weekly CI runs the property tests much deeper than the PR gate:
+    # select with --hypothesis-profile=nightly (real hypothesis only; the
+    # stub above ignores profiles and keeps its fixed example budget).
+    from hypothesis import settings
+
+    settings.register_profile("nightly", max_examples=500, deadline=None)

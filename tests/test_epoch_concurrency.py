@@ -1,0 +1,135 @@
+"""Epoch pinning under concurrent publish.
+
+The contracts the serving front-end leans on:
+
+  * a reader inside ``EpochManager.reading()`` never observes the tree
+    swap mid-cohort — the pinned version stays resident (its buffers are
+    not retired) no matter how many epochs the writer publishes;
+  * release-after-publish frees the superseded snapshot **exactly once**
+    (verified with ``weakref.finalize`` — the version object is collected
+    after the last release, never before, never twice).
+"""
+import gc
+import threading
+import weakref
+
+import numpy as np
+import pytest
+
+from repro.stream.epoch import EpochManager
+
+
+class _Snap:
+    """Weakref-able stand-in for a published tree version."""
+
+    def __init__(self, n: int = 0):
+        self.n = n
+
+
+def test_pin_survives_concurrent_publishes():
+    mgr = EpochManager(_Snap(0))
+    with mgr.reading(with_epoch=True) as (e, t):
+        for i in range(1, 6):
+            mgr.publish(_Snap(i))
+        assert mgr.refs(e) == 1
+        assert t.n == 0                      # still the pinned version
+        assert e in mgr.resident             # not retired while pinned
+        with mgr.reading(with_epoch=True) as (e2, t2):
+            assert e2 == e + 5 and t2.n == 5  # new readers get the latest
+    assert e not in mgr.resident             # released -> retired
+
+
+def test_release_after_publish_frees_exactly_once():
+    mgr = EpochManager(_Snap())
+    freed = []
+    e, t = mgr.acquire()
+    weakref.finalize(t, freed.append, e)
+    del t
+    mgr.publish(_Snap())
+    gc.collect()
+    assert freed == []          # superseded but pinned: must stay resident
+    mgr.release(e)
+    gc.collect()
+    assert freed == [e]         # freed on release — and only once
+    with pytest.raises(KeyError):
+        mgr.release(e)          # retired epochs cannot be double-released
+
+
+def test_double_release_rejected():
+    mgr = EpochManager(_Snap())
+    e, _ = mgr.acquire()
+    mgr.release(e)
+    with pytest.raises((KeyError, ValueError)):
+        mgr.release(e)
+
+
+def test_pin_hammer_many_readers_one_writer():
+    """4 readers pin/verify/release in a tight loop while the writer
+    publishes 300 epochs; no pinned version is ever retired early, and
+    the steady state is clean (refs 0, only the latest resident)."""
+    mgr = EpochManager(np.full(4, 0))
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                with mgr.reading(with_epoch=True) as (e, t):
+                    a = np.asarray(t).copy()
+                    assert mgr.refs(e) >= 1
+                    assert e in mgr.resident
+                    np.testing.assert_array_equal(np.asarray(t), a)
+        except Exception as exc:  # noqa: BLE001 — surface to main thread
+            errors.append(exc)
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for th in threads:
+        th.start()
+    for i in range(1, 301):
+        mgr.publish(np.full(4, i))
+    stop.set()
+    for th in threads:
+        th.join(timeout=30)
+    assert not errors, errors[0]
+    assert mgr.refs(mgr.epoch) == 0
+    assert mgr.resident == [mgr.epoch]
+    assert mgr.epoch == 300
+
+
+def test_frontend_cohort_never_observes_swap():
+    """End-to-end pin check through the front-end: a cohort that pins
+    epoch 0 and then stalls mid-descent while the writer publishes epoch 1
+    must answer from epoch 0 — the freshly inserted exact-duplicate point
+    (distance 0) is invisible to it, and visible to the next cohort."""
+    from repro.core.smtree import bulk_build
+    from repro.serve.frontend import (FrontendConfig, ServeFrontend,
+                                      pinned_knn)
+    from repro.stream import StreamingEngine
+
+    n, dim = 256, 5
+    X = np.random.default_rng(11).random((n, dim)).astype(np.float32)
+    eng = StreamingEngine(bulk_build(X, capacity=8))
+    pinned_evt, gate = threading.Event(), threading.Event()
+
+    def stalling_knn(pinned, q):
+        pinned_evt.set()            # cohort has its pin
+        assert gate.wait(30)        # ...while the writer publishes
+        return pinned_knn(pinned, q, k=1, max_frontier=256)
+
+    newpt = np.full((1, dim), 0.5, np.float32)
+    fe = ServeFrontend(eng, FrontendConfig(cohort_width=1, slo_ms=1.0, k=1),
+                       knn_fn=stalling_knn).start()
+    try:
+        tk = fe.submit(newpt[0])
+        assert pinned_evt.wait(30)
+        eng.insert_batch(newpt, np.array([n], np.int32))  # publish epoch 1
+        gate.set()
+        d, ids = tk.result(30)
+        assert tk.epoch == 0
+        assert ids[0] != n, "cohort observed a tree swap mid-descent"
+        tk2 = fe.submit(newpt[0])
+        d2, ids2 = tk2.result(30)
+        assert tk2.epoch == 1
+        assert ids2[0] == n and d2[0] <= 1e-6
+    finally:
+        fe.stop()

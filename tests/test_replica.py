@@ -1,0 +1,206 @@
+"""WAL tailing + WAL-shipping read replicas.
+
+Covers the follower cursor (incremental tail, segment rotation, snapshot
+fast-forward, torn-tail resume), bitwise replication of a StreamingEngine
+and a rebalancing StreamingForest, snapshot bootstrap, and the digest
+exchange catching real divergence."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.distributed import build_forest_trees
+from repro.core.smtree import OP_DELETE, OP_INSERT, ST_APPLIED, bulk_build
+from repro.dist.checkpoint import CheckpointManager
+from repro.stream import (DigestMismatch, Replica, StreamingEngine,
+                          StreamingForest, WalCursor, WriteAheadLog,
+                          ledger_digest, tail_wal, tree_digest)
+from repro.stream.wal import KIND_BATCH, WalRecord, _encode
+
+DIM = 6
+
+
+def _batch(rng, n, start_oid):
+    ops = np.full(n, OP_INSERT, np.int8)
+    xs = rng.random((n, DIM)).astype(np.float32)
+    oids = (start_oid + np.arange(n)).astype(np.int32)
+    return ops, xs, oids
+
+
+# -- tail_wal cursor ------------------------------------------------------
+
+def test_tail_wal_incremental(tmp_path):
+    rng = np.random.default_rng(0)
+    wal = WriteAheadLog(str(tmp_path), segment_max_records=3)
+    cur = WalCursor()
+    for i in range(7):
+        wal.append_batch(*_batch(rng, 4, 10 * i))
+        recs, cur = tail_wal(str(tmp_path), cur)
+        assert [r.seq for r in recs] == [i]     # exactly the new record
+        assert cur.seq == i
+    recs, cur = tail_wal(str(tmp_path), cur)
+    assert recs == []                           # idempotent at the tip
+
+
+def test_tail_wal_snapshot_fast_forward(tmp_path):
+    """A cursor born from a snapshot (seq set, position 0) skips sealed
+    segments wholly below it without re-yielding their records."""
+    rng = np.random.default_rng(1)
+    wal = WriteAheadLog(str(tmp_path), segment_max_records=2)
+    for i in range(6):
+        wal.append_batch(*_batch(rng, 2, 10 * i))
+    recs, cur = tail_wal(str(tmp_path), WalCursor(seq=3))
+    assert [r.seq for r in recs] == [4, 5]
+    np.testing.assert_array_equal(recs[0].oids, np.arange(40, 42))
+
+
+def test_tail_wal_torn_tail_resume(tmp_path):
+    """A frame the leader is mid-append on parks the cursor at the last
+    complete frame; once the rest of the bytes land, the same cursor picks
+    the record up whole."""
+    rng = np.random.default_rng(2)
+    wal = WriteAheadLog(str(tmp_path), segment_max_records=100)
+    wal.append_batch(*_batch(rng, 4, 0))
+    wal.append_batch(*_batch(rng, 4, 10))
+    wal.close()
+    seg = sorted(p for p in os.listdir(tmp_path)
+                 if p.endswith(".wal"))[-1]
+    path = tmp_path / seg
+    whole = os.path.getsize(path)
+    ops, xs, oids = _batch(rng, 4, 20)
+    frame = _encode(WalRecord(KIND_BATCH, 2, ops=ops, oids=oids, xs=xs))
+    with open(path, "ab") as f:                 # half a frame: torn tail
+        f.write(frame[:len(frame) // 2])
+    recs, cur = tail_wal(str(tmp_path), WalCursor())
+    assert [r.seq for r in recs] == [0, 1]
+    assert cur.offset == whole                  # parked before the torn frame
+    recs, cur = tail_wal(str(tmp_path), cur)
+    assert recs == []                           # still torn: no progress
+    with open(path, "ab") as f:
+        f.write(frame[len(frame) // 2:])        # append completes
+    recs, cur = tail_wal(str(tmp_path), cur)
+    assert [r.seq for r in recs] == [2]
+    np.testing.assert_array_equal(recs[0].oids, oids)
+    np.testing.assert_array_equal(recs[0].xs, xs)
+
+
+# -- replicas -------------------------------------------------------------
+
+def _mixed_stream(leader, rng, vec, live, nid, steps=4, n=48):
+    for _ in range(steps):
+        ops, xs, oids = [], [], []
+        for _ in range(n):
+            if live and rng.random() < 0.4:
+                v = int(sorted(live)[rng.integers(len(live))])
+                live.discard(v)
+                ops.append(OP_DELETE)
+                oids.append(v)
+                xs.append(vec[v])
+            else:
+                x = rng.random(DIM).astype(np.float32)
+                vec[nid] = x
+                live.add(nid)
+                ops.append(OP_INSERT)
+                oids.append(nid)
+                xs.append(x)
+                nid += 1
+        res = leader.apply(np.array(ops, np.int32),
+                           np.stack(xs).astype(np.float32),
+                           np.array(oids, np.int32))
+        assert (res.statuses == ST_APPLIED).all()
+    return nid
+
+
+def test_replica_engine_bitwise(tmp_path):
+    rng = np.random.default_rng(3)
+    X = rng.random((400, DIM)).astype(np.float32)
+    tree0 = bulk_build(X, capacity=8)
+    leader = StreamingEngine(tree0, wal=WriteAheadLog(
+        str(tmp_path / "wal"), segment_max_records=3))
+    rep = Replica(StreamingEngine(tree0), str(tmp_path / "wal"))
+    vec = {i: X[i] for i in range(400)}
+    _mixed_stream(leader, rng, vec, set(range(400)), 400)
+    seq, dg = ledger_digest(leader)
+    rep.verify(seq, dg)                         # raises on any divergence
+    assert rep.applied_seq == seq
+    for a, b in zip(jax.tree.leaves(leader.tree),
+                    jax.tree.leaves(rep.follower.tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_replica_from_snapshot_and_background_tail(tmp_path):
+    rng = np.random.default_rng(4)
+    X = rng.random((400, DIM)).astype(np.float32)
+    leader = StreamingEngine(
+        bulk_build(X, capacity=8),
+        wal=WriteAheadLog(str(tmp_path / "wal"), segment_max_records=3),
+        ckpt=CheckpointManager(str(tmp_path / "ck"), async_write=False))
+    vec = {i: X[i] for i in range(400)}
+    live = set(range(400))
+    nid = _mixed_stream(leader, rng, vec, live, 400, steps=2)
+    leader.snapshot()
+    rep = Replica.from_snapshot(str(tmp_path / "ck"), str(tmp_path / "wal"))
+    assert rep.applied_seq == 1                 # snapshot high-water mark
+    with rep:                                   # background tailing thread
+        _mixed_stream(leader, rng, vec, live, nid, steps=3)
+        seq, dg = ledger_digest(leader)
+        rep.verify(seq, dg)
+    for a, b in zip(jax.tree.leaves(leader.tree),
+                    jax.tree.leaves(rep.follower.tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_replica_forest_replays_rebalance(tmp_path):
+    """A follower replays rebalance records (recorded seed) at the same
+    point in the mutation order and lands bitwise on the leader's shards,
+    ownership map included."""
+    rng = np.random.default_rng(5)
+    X = rng.random((800, DIM)).astype(np.float32)
+    leader = StreamingForest(
+        build_forest_trees(X, 4, capacity=8),
+        wal=WriteAheadLog(str(tmp_path / "wal"), segment_max_records=4),
+        min_objects=64, max_skew=1.3)
+    rep = Replica(StreamingForest(build_forest_trees(X, 4, capacity=8),
+                                  min_objects=64, max_skew=1.3),
+                  str(tmp_path / "wal"))
+    victims = np.array([o for o in range(800) if o % 4 == 0][:150])
+    res = leader.delete_batch(X[victims], victims)
+    assert (res.statuses == ST_APPLIED).all()
+    assert leader.maintenance(), "skew should trigger a rebalance"
+    vec = {i: X[i] for i in range(800)}
+    _mixed_stream(leader, rng, vec, set(range(800)) - set(victims.tolist()),
+                  800, steps=2)
+    seq, dg = ledger_digest(leader)
+    rep.verify(seq, dg)
+    assert rep.follower.n_rebalances == 1
+    assert rep.follower.owner == leader.owner
+    for a, b in zip(jax.tree.leaves(leader.stacked()),
+                    jax.tree.leaves(rep.follower.stacked())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_replica_rejects_wal_owning_follower(tmp_path):
+    tree = bulk_build(np.random.default_rng(6).random(
+        (64, DIM)).astype(np.float32), capacity=8)
+    follower = StreamingEngine(tree, wal=WriteAheadLog(str(tmp_path / "w2")))
+    with pytest.raises(ValueError, match="must not own a WAL"):
+        Replica(follower, str(tmp_path / "wal"))
+
+
+def test_digest_exchange_catches_divergence(tmp_path):
+    rng = np.random.default_rng(7)
+    X = rng.random((300, DIM)).astype(np.float32)
+    leader = StreamingEngine(bulk_build(X, capacity=8),
+                             wal=WriteAheadLog(str(tmp_path / "wal")))
+    # follower bootstrapped from the WRONG snapshot: replay still runs,
+    # digests must disagree
+    Y = rng.random((300, DIM)).astype(np.float32)
+    rep = Replica(StreamingEngine(bulk_build(Y, capacity=8)),
+                  str(tmp_path / "wal"))
+    leader.insert_batch(rng.random((16, DIM)).astype(np.float32),
+                        np.arange(300, 316, dtype=np.int32))
+    seq, dg = ledger_digest(leader)
+    with pytest.raises(DigestMismatch):
+        rep.verify(seq, dg)
+    assert tree_digest(leader.tree) != tree_digest(rep.follower.tree)

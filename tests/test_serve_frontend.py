@@ -1,0 +1,167 @@
+"""Front-end unit tests: deadline-or-batch-full dispatch, pad-to-width
+fixed geometry, epoch tagging, the mutation scheduler, and the
+KnnLmDatastore published-epoch resync regression."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.metric import pairwise
+from repro.core.smtree import OP_INSERT, ST_APPLIED, bulk_build
+from repro.serve.frontend import FrontendConfig, ServeFrontend, pinned_knn
+from repro.stream import StreamingEngine
+
+N, DIM = 384, 6
+
+
+def _engine(seed=0, n=N):
+    X = np.random.default_rng(seed).random((n, DIM)).astype(np.float32)
+    return StreamingEngine(bulk_build(X, capacity=8)), X
+
+
+def test_full_cohort_dispatches_immediately():
+    eng, X = _engine()
+    Q = np.random.default_rng(1).random((8, DIM)).astype(np.float32)
+    cfg = FrontendConfig(cohort_width=8, slo_ms=10_000.0, k=3,
+                         max_frontier=256)
+    with ServeFrontend(eng, cfg) as fe:
+        d, ids = fe.knn(Q)     # exactly one full-width cohort
+    want = np.sort(pairwise(eng.tree.metric, Q, X), axis=1)[:, :3]
+    np.testing.assert_allclose(d, want, atol=1e-5)
+    assert fe.stats.n_cohorts == 1
+    assert fe.stats.n_full_dispatch == 1
+    assert fe.stats.n_deadline_dispatch == 0
+    assert fe.stats.mean_fill == 8
+
+
+def test_partial_cohort_ships_at_deadline():
+    eng, X = _engine()
+    Q = np.random.default_rng(2).random((3, DIM)).astype(np.float32)
+    cfg = FrontendConfig(cohort_width=8, slo_ms=40.0, k=2, max_frontier=256)
+    with ServeFrontend(eng, cfg) as fe:
+        tickets = fe.submit_many(Q)        # 3 < width: only the SLO fires
+        out = [t.result(30) for t in tickets]
+    d = np.stack([d for d, _ in out])
+    want = np.sort(pairwise(eng.tree.metric, Q, X), axis=1)[:, :2]
+    np.testing.assert_allclose(d, want, atol=1e-5)   # pad rows discarded
+    assert fe.stats.n_deadline_dispatch >= 1
+    assert fe.stats.n_queries == 3
+
+
+def test_tickets_record_their_epoch_and_see_publishes():
+    eng, X = _engine()
+    cfg = FrontendConfig(cohort_width=1, slo_ms=5.0, k=1, max_frontier=256)
+    newpt = np.full((1, DIM), 0.5, np.float32)
+    with ServeFrontend(eng, cfg) as fe:
+        tk0 = fe.submit(newpt[0])
+        tk0.result(30)
+        assert tk0.epoch == 0
+        mt = fe.submit_mutations(np.full(1, OP_INSERT, np.int32), newpt,
+                                 np.array([N], np.int32))
+        res = mt.result(30)
+        assert (res.statuses == ST_APPLIED).all()
+        tk1 = fe.submit(newpt[0])
+        d, ids = tk1.result(30)
+        assert tk1.epoch == 1
+        assert ids[0] == N and d[0] <= 1e-6   # the insert is visible now
+
+
+def test_cohort_error_fails_its_tickets():
+    eng, _ = _engine()
+
+    def bad_knn(pinned, q):
+        raise RuntimeError("descent exploded")
+
+    cfg = FrontendConfig(cohort_width=1, slo_ms=5.0)
+    with ServeFrontend(eng, cfg, knn_fn=bad_knn) as fe:
+        tk = fe.submit(np.zeros(DIM, np.float32))
+        with pytest.raises(RuntimeError, match="descent exploded"):
+            tk.result(30)
+
+
+def test_stop_drains_and_rejects_new_work():
+    eng, _ = _engine()
+    fe = ServeFrontend(eng, FrontendConfig(cohort_width=4, slo_ms=20.0,
+                                           k=1)).start()
+    tickets = fe.submit_many(np.zeros((6, DIM), np.float32))
+    fe.stop()                       # drain=True: everything admitted serves
+    assert all(t.done() and t.err is None for t in tickets)
+    with pytest.raises(RuntimeError):
+        fe.submit(np.zeros(DIM, np.float32))
+    with pytest.raises(RuntimeError):
+        fe.submit_mutations(np.zeros(1, np.int32), np.zeros((1, DIM)),
+                            np.zeros(1, np.int32))
+
+
+def test_pinned_knn_forest_merge():
+    from repro.core.distributed import build_forest_trees
+    X = np.random.default_rng(5).random((400, DIM)).astype(np.float32)
+    shards = tuple(build_forest_trees(X, 2, capacity=8))
+    d, ids = pinned_knn(shards, X[:10] + 0.001, k=3, max_frontier=256)
+    want = np.sort(pairwise(shards[0].metric, X[:10] + 0.001, X),
+                   axis=1)[:, :3]
+    np.testing.assert_allclose(d, want, atol=1e-5)
+
+
+# -- KnnLmDatastore regression: engine reads come from the published epoch
+
+
+def _store():
+    from repro.serve.knnlm import KnnLmConfig, KnnLmDatastore
+    rng = np.random.default_rng(7)
+    keys = rng.random((256, DIM)).astype(np.float32)
+    vals = rng.integers(0, 50, 256).astype(np.int32)
+    store = KnnLmDatastore(KnnLmConfig(k=3, capacity=8, metric="l2"), DIM)
+    store.build(keys, vals)
+    return store, rng
+
+
+def test_knnlm_sync_uses_published_epoch_not_working_tree():
+    """Regression: ``engine.tree`` must resync from the *published* epoch.
+    ``stream.tree`` is the batcher's live working reference — mid-batch it
+    holds half-applied cohorts no reader may observe."""
+    store, rng = _store()
+    store.enable_stream()
+    published = store.stream.epochs.current()[1]
+    # simulate the mid-batch window: the batcher's working tree runs ahead
+    # of the last publish
+    store.stream.batcher.tree = bulk_build(
+        rng.random((64, DIM)).astype(np.float32), capacity=8)
+    assert store.stream.tree is not published
+    store._sync_engine_tree()
+    assert store.engine.tree is published
+
+
+def test_knnlm_add_evict_resync_published():
+    store, rng = _store()
+    store.enable_stream()
+    oids = store.add_batch(rng.random((8, DIM)).astype(np.float32),
+                           rng.integers(0, 50, 8).astype(np.int32))
+    assert store.engine.tree is store.stream.epochs.current()[1]
+    assert store.evict_batch(oids[:4]) == 4
+    assert store.engine.tree is store.stream.epochs.current()[1]
+
+
+def test_knnlm_frontend_roundtrip():
+    import jax.numpy as jnp
+    store, rng = _store()
+    store.enable_stream()
+    store.enable_frontend(cohort_width=4, slo_ms=20.0)
+    try:
+        h = rng.random((4, DIM)).astype(np.float32)
+        logp = store.knn_logits(jnp.asarray(h), 50)
+        assert logp.shape == (4, 50)
+        assert np.isfinite(np.asarray(logp)).all()
+        oids = store.add_batch(rng.random((4, DIM)).astype(np.float32),
+                               rng.integers(0, 50, 4).astype(np.int32))
+        assert store.evict_batch(oids) == 4    # rows *submitted*
+        store.frontend.drain(timeout=60)
+        assert store.frontend.stats.n_mutation_batches == 2
+        # submit-time resyncs may lag the async applies; a fresh sync
+        # must land exactly on the now-published epoch
+        store._sync_engine_tree()
+        assert store.engine.tree is store.stream.epochs.current()[1]
+    finally:
+        store.close_frontend()
+    assert store.frontend is None
