@@ -9,6 +9,10 @@ at half the measured capacity, sustained QPS while the mutation
 scheduler streams add/evict batches through the same engine, and the
 WAL-shipping replica's catch-up rate + digest check.
 
+PR-7 rows: socket-shipped replica catch-up ops/s, degraded-mode read
+QPS (leaderless router, bounded-staleness replica reads), and
+``failover_ms`` — leader kill to promoted-replica first read.
+
 Scale envs: REPRO_BENCH_SMOKE=1 (tiny, CI) / REPRO_BENCH_FULL=1.
 """
 from __future__ import annotations
@@ -246,6 +250,95 @@ def _replica_rows(report):
         shutil.rmtree(d, ignore_errors=True)
 
 
+def _failover_rows(report):
+    """The PR-7 failover drill, timed: socket-shipped catch-up rate,
+    degraded-mode read QPS with the leader declared down, and the
+    leader-kill -> promoted-and-serving latency (lease acquire + tail
+    drain + digest verify + fenced WAL attach + first leader-mode read)."""
+    from repro.serve.frontend import FrontendConfig, ServeFrontend
+    from repro.serve.router import ReplicaRouter
+    from repro.stream import (LeaseStore, ShippedReplica, StreamingEngine,
+                              WalShipServer, WriteAheadLog, ledger_digest,
+                              promote)
+    d = tempfile.mkdtemp(prefix="failbench")
+    server = rep = router = fe2 = None
+    try:
+        n = min(N, 8_192)
+        X = make_dataset("clustered", n, seed=7)[:, :DIM].copy()
+        tree = bulk_build(X, capacity=CAPACITY, slack=3.0)
+        leader = StreamingEngine(tree, wal=WriteAheadLog(
+            os.path.join(d, "wal"), segment_max_records=8))
+        B = 256
+        fresh = make_dataset("uniform", REPLICA_BATCHES * B, seed=11)
+        for i in range(REPLICA_BATCHES):
+            half = B // 2
+            ins = (10 * n + i * half + np.arange(half)).astype(np.int32)
+            dele = (i * half + np.arange(half)).astype(np.int32)
+            ops = np.concatenate([np.full(half, OP_INSERT, np.int32),
+                                  np.full(half, OP_DELETE, np.int32)])
+            xs = np.concatenate(
+                [fresh[i * half:(i + 1) * half, :DIM],
+                 X[dele]]).astype(np.float32)
+            leader.apply(ops, xs, np.concatenate([ins, dele]))
+        seq, dg = ledger_digest(leader)
+
+        # catch-up over the socket (leader's applies warmed the jit cache,
+        # so this times shipping + replay, not compilation)
+        server = WalShipServer(leader.wal.directory, wal=leader.wal).start()
+        rep = ShippedReplica(StreamingEngine(tree), server.address,
+                             os.path.join(d, "mirror"), seed=0)
+        t0 = time.perf_counter()
+        rep.catch_up(seq, timeout=600)
+        dt = time.perf_counter() - t0
+        report("socket_replica_catchup_ops_per_s",
+               round(REPLICA_BATCHES * B / dt, 0))
+        rep.verify(seq, dg)
+
+        # degraded-mode QPS: leaderless router, bounded-staleness replica
+        # reads (the sync pinned_knn path — one query per call, no cohort)
+        rng = np.random.default_rng(3)
+        Q = (X[rng.integers(0, n, 256)] + 0.01).astype(np.float32)
+        router = ReplicaRouter(None, [rep], k=K, max_frontier=MF)
+        router.query(Q[0]).result(300)      # warm width-1 on this geometry
+        nq = 64 if SMOKE else 256
+        t0 = time.perf_counter()
+        for j in range(nq):
+            router.query(Q[j % len(Q)]).result(60)
+        dt = time.perf_counter() - t0
+        report("serve_degraded_qps", round(nq / dt, 0))
+
+        # failover: kill the leader, promote the follower under a fresh
+        # lease, stand a front-end on it, and serve the first leader-mode
+        # read — the whole window is what a client-visible outage costs.
+        # cohort_width=1 reuses the width-1 jit entry the degraded reads
+        # warmed, so the row times failover, not an unlucky recompile.
+        leader.wal.close()
+        store = LeaseStore(os.path.join(d, "lease"), ttl_s=30.0)
+        t0 = time.perf_counter()
+        promo = promote(rep, store, "bench-follower", target=(seq, dg))
+        fe2 = ServeFrontend(rep.follower, FrontendConfig(
+            cohort_width=1, slo_ms=25.0, k=K, max_frontier=MF))
+        fe2.start()
+        router.set_leader(fe2)
+        t = router.query(Q[0])
+        t.result(300)
+        failover_ms = (time.perf_counter() - t0) * 1e3
+        assert t.mode == "leader"
+        assert promo.wal.next_seq == seq + 1
+        report("failover_ms", round(failover_ms, 2))
+        promo.wal.close()
+    finally:
+        if fe2 is not None:
+            fe2.stop()
+        if router is not None:
+            router.stop()
+        if rep is not None:
+            rep.stop()
+        if server is not None:
+            server.stop()
+        shutil.rmtree(d, ignore_errors=True)
+
+
 def run(report):
     import jax
     from repro.core import smtree
@@ -269,3 +362,4 @@ def run(report):
     _openloop_rows(report, eng, Q, rates["coalesced"])
     _mutation_rows(report, eng, Q, X)
     _replica_rows(report)
+    _failover_rows(report)

@@ -133,6 +133,31 @@ def place_forest(trees_or_forest, mesh: Mesh, *,
     return jax.device_put(forest, NamedSharding(mesh, P(axis)))
 
 
+def promote_follower(replica, mesh: Mesh, *, axis: str = "model",
+                     expect: tuple[int, str] | None = None,
+                     timeout: float = 30.0):
+    """Bring a replayed follower into the serving mesh: the failover
+    endgame after ``stream.lease.promote`` hands it the WAL.
+
+    ``replica`` is a ``stream.replica.Replica`` (or ``ShippedReplica``)
+    whose follower is a ``StreamingForest``; ``expect`` is the leader's
+    last ``(seq, digest)`` digest exchange when known — the follower must
+    catch up through it and match bitwise before its shards are allowed
+    to serve (``DigestMismatch`` otherwise; a diverged replica joining
+    the mesh would silently answer queries from a different index).
+    Returns ``(placed_forest, epoch)``: the pinned epoch's shard list
+    made mesh-resident via :func:`place_forest`, and the epoch number it
+    came from, for the router's session-token stamping."""
+    if expect is not None:
+        seq, digest = expect
+        replica.verify(seq, digest, timeout=timeout)
+    with replica.epochs.reading(with_epoch=True) as (epoch, pinned):
+        shards = list(pinned) if isinstance(pinned, (tuple, list)) \
+            else [pinned]
+        placed = place_forest(shards, mesh, axis=axis)
+    return placed, epoch
+
+
 def _local_tree(forest_slice: TreeArrays) -> TreeArrays:
     """Strip the leading length-1 shard axis inside shard_map."""
     return dataclasses.replace(

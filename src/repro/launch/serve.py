@@ -33,14 +33,26 @@ def _build_store(args, cfg, mesh=None):
     store = KnnLmDatastore(KnnLmConfig(lam=args.lam, metric="l2"),
                            cfg.d_model, mesh=mesh)
     store.build(keys, vals)
+    replicas = getattr(args, "replicas", 0)
     if getattr(args, "knn_mutate", False) or getattr(args, "frontend", False):
-        store.enable_stream()   # batched add/evict via repro.stream
+        wal_dir = None
+        if replicas:
+            # replication is log shipping: the stream needs a real WAL
+            import tempfile
+            args._repl_root = tempfile.mkdtemp(prefix="serve-repl-")
+            wal_dir = f"{args._repl_root}/wal"
+        store.enable_stream(wal_dir=wal_dir)  # batched add/evict
     if getattr(args, "frontend", False):
         # async serving front-end: retrieval coalesces into epoch-pinned
         # cohorts, mutations ride the scheduler between epoch publishes —
         # this replaces the old alternating query/mutate decode loop
         store.enable_frontend(cohort_width=args.cohort_width or args.batch,
                               slo_ms=args.slo_ms)
+        if replicas:
+            # socket-fed read replicas + replica-aware router in front of
+            # the front-end (stream/transport.py, serve/router.py)
+            store.enable_replication(f"{args._repl_root}/mirrors",
+                                     n_replicas=replicas)
     return store
 
 
@@ -51,11 +63,25 @@ def _finish_frontend(store) -> str:
         return ""
     store.frontend.drain()
     s = store.frontend.stats.snapshot()
+    repl = ""
+    if store.router is not None:
+        # let the followers drain the tail the drain() above appended,
+        # then report how far behind they ended
+        seq = store.stream.wal.next_seq - 1
+        for rep in store.replicas:
+            try:
+                rep.catch_up(seq, timeout=10.0)
+            except TimeoutError:
+                pass                      # lag reported honestly below
+        r = store.router.snapshot()
+        repl = (f", {len(store.replicas)} replicas "
+                f"(max lag {r['max_replica_lag']} records)")
+        store.close_replication()
     store.close_frontend()
     return (f", frontend: {s['n_cohorts']} cohorts "
             f"(fill {s['mean_cohort_fill']}, "
             f"{s['n_mutation_batches']} mutation batches, "
-            f"p50 {s['p50_ms']}ms p99 {s['p99_ms']}ms)")
+            f"p50 {s['p50_ms']}ms p99 {s['p99_ms']}ms){repl}")
 
 
 class _WindowMutator:
@@ -176,12 +202,19 @@ def main(argv=None):
     ap.add_argument("--cohort-width", type=int, default=0,
                     help="front-end cohort width (0: use --batch); one "
                          "jitted kNN geometry per width")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="with --frontend: ship the WAL over a socket to "
+                         "N read replicas and route queries through the "
+                         "replica-aware router (stream/transport.py)")
     ap.add_argument("--lam", type=float, default=0.3)
     ap.add_argument("--mesh", default="single", choices=["single", "host"],
                     help="'host': sharded decode over all host devices")
     args = ap.parse_args(argv)
     if args.prompt_len < 1:
         ap.error("--prompt-len must be >= 1 (decode needs a seed token)")
+    if args.replicas and not args.frontend:
+        ap.error("--replicas requires --frontend (the router fronts the "
+                 "admission queue)")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.mesh == "host":

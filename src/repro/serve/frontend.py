@@ -42,7 +42,18 @@ import numpy as np
 from repro.core import smtree
 
 __all__ = ["FrontendConfig", "FrontendStats", "QueryTicket",
-           "MutationTicket", "ServeFrontend", "pinned_knn"]
+           "MutationTicket", "QueueFull", "ServeFrontend", "pinned_knn"]
+
+
+class QueueFull(RuntimeError):
+    """Admission rejected: the queue is at capacity and the front-end is
+    configured to shed rather than block.  ``retry_after_s`` is a hint —
+    the time the current backlog needs to drain at the configured cohort
+    cadence — suitable for a Retry-After header or client backoff."""
+
+    def __init__(self, msg: str, *, retry_after_s: float):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
 
 
 @dataclasses.dataclass
@@ -51,7 +62,13 @@ class FrontendConfig:
     slo_ms: float = 5.0       # max queue age before a partial cohort ships
     k: int = 8
     max_frontier: int = 64
-    queue_cap: int = 4096     # admission bound (submit blocks when full)
+    queue_cap: int = 4096     # admission bound (blocks or sheds when full)
+    mutation_queue_cap: int = 1024  # mutation backlog bound
+    # "block": a full queue stalls the submitter (in-process callers, the
+    # historical behaviour).  "shed": raise QueueFull with a retry-after
+    # hint — the right shape in front of a network, where a blocked
+    # socket just moves the unbounded queue into the kernel.
+    overload: str = "block"
 
 
 def pinned_knn(pinned, queries: np.ndarray, *, k: int, max_frontier: int):
@@ -131,6 +148,9 @@ class FrontendStats:
     n_full_dispatch: int = 0      # cohorts shipped because width was reached
     n_deadline_dispatch: int = 0  # cohorts shipped by the SLO deadline
     n_mutation_batches: int = 0
+    n_shed: int = 0               # admissions rejected with QueueFull
+    queue_depth: int = 0          # gauges, updated on every queue touch
+    mutation_queue_depth: int = 0
     fill_sum: int = 0             # real (unpadded) rows across cohorts
     latencies_s: list = dataclasses.field(default_factory=list)
 
@@ -160,6 +180,9 @@ class FrontendStats:
                 "n_full_dispatch": self.n_full_dispatch,
                 "n_deadline_dispatch": self.n_deadline_dispatch,
                 "n_mutation_batches": self.n_mutation_batches,
+                "n_shed": self.n_shed,
+                "queue_depth": self.queue_depth,
+                "mutation_queue_depth": self.mutation_queue_depth,
                 "mean_cohort_fill": round(self.mean_fill, 2),
                 "p50_ms": round(self.latency_ms(50), 3),
                 "p99_ms": round(self.latency_ms(99), 3)}
@@ -253,19 +276,36 @@ class ServeFrontend:
                 self._cond.wait(left if left is not None else 0.1)
 
     # -- admission ---------------------------------------------------------
+    def _retry_after_s(self, depth: int) -> float:
+        """Drain-time hint for a shed client: the backlog in cohorts,
+        paced at one SLO window per cohort (the dispatcher's worst-case
+        cadence — it runs faster when cohorts fill early)."""
+        cohorts = max(1, -(-depth // self.cfg.cohort_width))
+        return cohorts * self.cfg.slo_ms / 1e3
+
     def submit(self, q: np.ndarray) -> QueryTicket:
-        """Admit one query [dim]; returns its ticket.  Blocks while the
-        admission queue is at ``queue_cap`` (backpressure, not load-shed:
-        the SLO is best-effort under overload)."""
+        """Admit one query [dim]; returns its ticket.  At ``queue_cap``
+        the configured overload policy applies: ``"block"`` stalls the
+        caller until space frees (backpressure), ``"shed"`` raises
+        :class:`QueueFull` with a retry-after hint instead of letting the
+        backlog — and every admitted request's latency — grow without
+        bound."""
         if not self._running:
             raise RuntimeError("front-end not started")
         tk = QueryTicket(np.asarray(q, np.float32))
         with self._cond:
+            if (self.cfg.overload == "shed"
+                    and len(self._queue) >= self.cfg.queue_cap):
+                self.stats.n_shed += 1
+                raise QueueFull(
+                    f"admission queue at cap ({self.cfg.queue_cap})",
+                    retry_after_s=self._retry_after_s(len(self._queue)))
             while len(self._queue) >= self.cfg.queue_cap and self._running:
                 self._cond.wait(0.05)
             if not self._running:
                 raise RuntimeError("front-end stopped")
             self._queue.append(tk)
+            self.stats.queue_depth = len(self._queue)
             self._cond.notify_all()
         return tk
 
@@ -286,14 +326,30 @@ class ServeFrontend:
     def submit_mutations(self, ops, xs, oids) -> MutationTicket:
         """Queue one mutation batch for the scheduler; returns a ticket
         resolving to its ``BatchResult``.  Fire-and-forget callers simply
-        drop the ticket — ``drain()``/``stop()`` still applies it."""
+        drop the ticket — ``drain()``/``stop()`` still applies it.  The
+        backlog is bounded by ``mutation_queue_cap`` under the same
+        overload policy as queries (an unbounded write queue is the
+        classic way a slow apply path eats the heap)."""
         if not self._running:
             raise RuntimeError("front-end not started")
         tk = MutationTicket(np.asarray(ops, np.int32),
                             np.asarray(xs, np.float32),
                             np.asarray(oids, np.int32))
         with self._cond:
+            if (self.cfg.overload == "shed"
+                    and len(self._mutations) >= self.cfg.mutation_queue_cap):
+                self.stats.n_shed += 1
+                raise QueueFull(
+                    f"mutation queue at cap "
+                    f"({self.cfg.mutation_queue_cap})",
+                    retry_after_s=self._retry_after_s(len(self._mutations)))
+            while (len(self._mutations) >= self.cfg.mutation_queue_cap
+                   and self._running):
+                self._cond.wait(0.05)
+            if not self._running:
+                raise RuntimeError("front-end stopped")
             self._mutations.append(tk)
+            self.stats.mutation_queue_depth = len(self._mutations)
             self._cond.notify_all()
         return tk
 
@@ -318,6 +374,7 @@ class ServeFrontend:
                 batch = self._queue[:W]
                 del self._queue[:len(batch)]
                 self._inflight += len(batch)
+                self.stats.queue_depth = len(self._queue)
                 self._cond.notify_all()
             self._run_cohort(batch, full=len(batch) == W)
 
@@ -359,6 +416,7 @@ class ServeFrontend:
                     return                      # stopped and empty
                 tk = self._mutations.pop(0)
                 self._mut_inflight += 1
+                self.stats.mutation_queue_depth = len(self._mutations)
             try:
                 # the engine's WAL-first apply; ends in an epoch publish,
                 # so the batch becomes visible to the *next* cohort pin —

@@ -55,6 +55,9 @@ class KnnLmDatastore:
         self.engine: SMTreeEngine | None = None
         self.stream = None   # repro.stream.StreamingEngine when enabled
         self.frontend = None  # serve.frontend.ServeFrontend when enabled
+        self.ship_server = None   # stream.transport.WalShipServer
+        self.replicas = []        # stream.transport.ShippedReplica
+        self.router = None        # serve.router.ReplicaRouter
 
     def _place(self):
         """Replicate tree pages over the mesh (queries shard, pages don't)."""
@@ -132,6 +135,57 @@ class KnnLmDatastore:
             self.frontend.stop()
             self.frontend = None
             self._sync_engine_tree()
+
+    def enable_replication(self, mirror_root: str, *, n_replicas: int = 1,
+                           host: str = "127.0.0.1", seed: int = 0):
+        """Fan reads out to ``n_replicas`` socket-fed followers: a
+        ``WalShipServer`` serves the stream's WAL directory, each replica
+        mirrors it locally and replays through the identical pipeline,
+        and a ``ReplicaRouter`` in front of the front-end routes queries
+        (leader-first; bounded-staleness degraded reads if the leader
+        dies).  Requires ``enable_stream(wal_dir=...)`` — replication is
+        log shipping, there must be a log — and ``enable_frontend``.
+        Followers start from the leader's currently *published* epoch and
+        tail from there, so enabling mid-stream is safe."""
+        if self.stream is None or self.stream.wal is None:
+            raise ValueError("enable_stream(wal_dir=...) before "
+                             "enable_replication()")
+        if self.frontend is None:
+            raise ValueError("enable_frontend() before enable_replication()")
+        import os
+
+        from repro.serve.router import ReplicaRouter
+        from repro.stream import StreamingEngine
+        from repro.stream.transport import ShippedReplica, WalShipServer
+        wal = self.stream.wal
+        self.ship_server = WalShipServer(wal.directory, host=host,
+                                         wal=wal).start()
+        start_seq = wal.next_seq - 1
+        _, tree = self.stream.epochs.current()
+        for i in range(n_replicas):
+            follower = StreamingEngine(
+                tree, wal=None, max_batch=self.stream.batcher.max_batch,
+                headroom_frac=self.stream.headroom_frac)
+            rep = ShippedReplica(
+                follower, self.ship_server.address,
+                os.path.join(mirror_root, f"replica_{i:02d}"),
+                start_seq=start_seq, seed=seed + i)
+            self.replicas.append(rep.start())
+        self.router = ReplicaRouter(self.frontend, self.replicas,
+                                    k=self.cfg.k,
+                                    max_frontier=self.cfg.max_frontier)
+        return self.router.start()
+
+    def close_replication(self) -> None:
+        if self.router is not None:
+            self.router.stop()
+            self.router = None
+        for rep in self.replicas:
+            rep.stop()
+        self.replicas = []
+        if self.ship_server is not None:
+            self.ship_server.stop()
+            self.ship_server = None
 
     def _sync_engine_tree(self) -> None:
         """Resync ``engine.tree`` from the *published* epoch — never from

@@ -1,0 +1,354 @@
+"""Replica-aware query routing with graceful degradation.
+
+``ServeFrontend`` coalesces queries against *one* engine; this router sits
+in front of it and decides **which** engine answers — the leader (fresh
+reads, the only write path) or a replica (scale-out reads, and the only
+reads left when the leader is gone).  Three explicit modes, stamped on
+every ticket so clients and dashboards see exactly what they got:
+
+  * ``"leader"``   — routed through the leader's front-end; linearizable
+    with the write stream (reads pin the epoch the last apply published).
+  * ``"replica"``  — a healthy-leader read served from a follower for
+    fan-out; only chosen when the follower satisfies the caller's session
+    token, so it is still read-your-writes fresh *for that caller*.
+  * ``"degraded"`` — the leader is unreachable (heartbeat misses over the
+    limit): reads continue from the best-caught-up replica under an
+    explicit **bounded-staleness contract** — the ticket carries
+    ``staleness`` (records behind the leader's last acknowledged seq) and
+    the router refuses replicas beyond ``max_staleness``.  Writes fail
+    fast with ``LeaderUnavailable`` (retryable after failover) instead of
+    queueing into a void.
+
+**Read-your-writes** is a session property, not a global one: every
+acknowledged write returns an updated :class:`SessionToken` ``(epoch,
+wal_seq)``; a read carrying that token is only served by an engine whose
+applied seq has reached ``wal_seq`` (the leader trivially qualifies).  A
+token is a *floor*, so tokens from different sessions compose by max.
+
+Failure detection is heartbeat-based and injectable: the monitor thread
+calls ``ping()`` every interval (``stream.faults.FaultInjector.
+drop_heartbeat`` starves deliveries in tests), and ``miss_limit``
+consecutive misses flip the leader to down — reads degrade, writes bounce.
+A later successful ping (or an explicit ``set_leader`` after
+``stream.lease.promote``) flips it back.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from repro.serve.frontend import pinned_knn
+
+__all__ = ["SessionToken", "LeaderUnavailable", "StaleReplica",
+           "RouterTicket", "ReplicaRouter"]
+
+
+class LeaderUnavailable(ConnectionError):
+    """No leader to write to (heartbeats lapsed, or none configured).
+    Retryable: after ``stream.lease.promote`` a new leader is installed
+    via ``set_leader`` and the same write succeeds."""
+
+
+class StaleReplica(RuntimeError):
+    """No replica satisfies the read's freshness bound — the session
+    token demands records no reachable replica has applied, or every
+    replica exceeds ``max_staleness`` while degraded."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionToken:
+    """Read-your-writes floor: the reader must observe state at least as
+    new as ``(epoch, wal_seq)``.  Returned by every acknowledged write;
+    pass the latest one to subsequent reads from the same session."""
+    epoch: int = -1
+    wal_seq: int = -1
+
+    def merge(self, other: "SessionToken") -> "SessionToken":
+        return SessionToken(epoch=max(self.epoch, other.epoch),
+                            wal_seq=max(self.wal_seq, other.wal_seq))
+
+
+class RouterTicket:
+    """One routed read: result plus the routing facts — ``mode``
+    ("leader" | "replica" | "degraded"), ``staleness`` (records behind
+    the leader's last acknowledged seq at serve time; 0 on the leader),
+    and the ``epoch`` pinned for the answer."""
+    __slots__ = ("mode", "staleness", "epoch", "dists", "ids", "err",
+                 "_inner", "_event")
+
+    def __init__(self, *, mode: str, staleness: int):
+        self.mode = mode
+        self.staleness = staleness
+        self.epoch = None
+        self.dists = None
+        self.ids = None
+        self.err = None
+        self._inner = None            # leader-mode QueryTicket
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return (self._inner.done() if self._inner is not None
+                else self._event.is_set())
+
+    def result(self, timeout: float | None = None):
+        """(dists [k], ids [k]) — raises the serve-path error, if any."""
+        if self._inner is not None:
+            d, i = self._inner.result(timeout)
+            self.dists, self.ids, self.epoch = d, i, self._inner.epoch
+            return d, i
+        if not self._event.wait(timeout):
+            raise TimeoutError("routed query not served within timeout")
+        if self.err is not None:
+            raise self.err
+        return self.dists, self.ids
+
+
+class ReplicaRouter:
+    """Routes reads across a leader front-end and a set of replicas.
+
+    ``leader`` is a started ``ServeFrontend`` (or None when leaderless —
+    e.g. between a crash and a promotion).  ``replicas`` expose
+    ``epochs`` / ``applied_seq`` / ``lag`` — ``stream.replica.Replica``
+    and ``stream.transport.ShippedReplica`` both qualify.  ``ping`` is
+    the leader liveness probe (default: the front-end reports itself
+    running); ``fault`` threads the seeded chaos harness through the
+    failure detector.
+
+    ``prefer_replicas=True`` sends session-satisfying reads to replicas
+    even while the leader is healthy (read fan-out); default is
+    leader-first, replicas only on degradation.
+    """
+
+    def __init__(self, leader, replicas=(), *, ping=None,
+                 fault=None, heartbeat_interval_s: float = 0.05,
+                 miss_limit: int = 3, max_staleness: int | None = None,
+                 prefer_replicas: bool = False, k: int = 8,
+                 max_frontier: int = 64):
+        self._leader = leader
+        self.replicas = list(replicas)
+        self._ping = ping
+        self.fault = fault
+        self.heartbeat_interval_s = float(heartbeat_interval_s)
+        self.miss_limit = int(miss_limit)
+        self.max_staleness = max_staleness
+        self.prefer_replicas = prefer_replicas
+        self.k = k
+        self.max_frontier = max_frontier
+        self._lock = threading.Lock()
+        self._misses = 0
+        self._leader_up = leader is not None
+        self._running = False
+        self._thread: threading.Thread | None = None
+        self.n_heartbeats = 0
+        self.n_heartbeat_misses = 0
+        self.n_degraded_reads = 0
+        self.n_replica_reads = 0
+        self.n_leader_reads = 0
+
+    # -- leader membership -------------------------------------------------
+    @property
+    def leader(self):
+        with self._lock:
+            return self._leader
+
+    @property
+    def leader_up(self) -> bool:
+        with self._lock:
+            return self._leader is not None and self._leader_up
+
+    def set_leader(self, frontend) -> None:
+        """Install a (newly promoted) leader front-end; resets the
+        failure detector.  ``None`` declares the cluster leaderless."""
+        with self._lock:
+            self._leader = frontend
+            self._leader_up = frontend is not None
+            self._misses = 0
+
+    def mark_leader_down(self) -> None:
+        """Out-of-band failure signal (a write path saw a hard error)."""
+        with self._lock:
+            self._leader_up = False
+
+    # -- failure detection -------------------------------------------------
+    def _default_ping(self) -> bool:
+        fe = self._leader
+        return bool(fe is not None and getattr(fe, "_running", False))
+
+    def heartbeat(self) -> bool:
+        """One detector step; returns the post-step leader_up verdict.
+        A starved delivery (fault injection, or a real timeout modelled
+        by ``ping`` raising/returning False) counts as a miss; misses
+        are consecutive — one success resets."""
+        self.n_heartbeats += 1
+        delivered = not (self.fault is not None
+                         and self.fault.drop_heartbeat())
+        ok = False
+        if delivered:
+            try:
+                ok = bool((self._ping or self._default_ping)())
+            except Exception:  # noqa: BLE001 — probe failure is a miss
+                ok = False
+        with self._lock:
+            if ok:
+                self._misses = 0
+                if self._leader is not None:
+                    self._leader_up = True
+            else:
+                self._misses += 1
+                self.n_heartbeat_misses += 1
+                if self._misses >= self.miss_limit:
+                    self._leader_up = False
+            return self._leader_up and self._leader is not None
+
+    def start(self) -> "ReplicaRouter":
+        """Run the failure detector on a daemon thread."""
+        if self._running:
+            return self
+        self._running = True
+
+        def monitor():
+            while self._running:
+                self.heartbeat()
+                time.sleep(self.heartbeat_interval_s)
+
+        self._thread = threading.Thread(target=monitor, name="router-hb",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._running = False
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def __enter__(self) -> "ReplicaRouter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- writes ------------------------------------------------------------
+    def mutate(self, ops, xs, oids, *, timeout: float | None = 60.0):
+        """Apply one mutation batch through the leader; returns
+        ``(BatchResult, SessionToken)`` — the token is the caller's new
+        read-your-writes floor.  Raises :class:`LeaderUnavailable` when
+        there is no live leader (fail fast; retry after failover)."""
+        with self._lock:
+            fe = self._leader if self._leader_up else None
+        if fe is None:
+            raise LeaderUnavailable(
+                "no live leader to accept writes (degraded mode serves "
+                "reads only) — retry after failover")
+        try:
+            tk = fe.submit_mutations(ops, xs, oids)
+            res = tk.result(timeout)
+        except LeaderUnavailable:
+            raise
+        except (RuntimeError, ConnectionError) as e:
+            # a hard apply error (fenced-out deposed leader, stopped
+            # front-end) flips the detector immediately — waiting for
+            # heartbeat misses would bounce more writes for no reason
+            if type(e).__name__ in ("FencedOut",) \
+                    or "stopped" in str(e).lower():
+                self.mark_leader_down()
+                raise LeaderUnavailable(f"leader lost mid-write: {e}") from e
+            raise
+        eng = fe.engine
+        seq = eng.wal.next_seq - 1 if eng.wal is not None else -1
+        with eng.epochs.reading(with_epoch=True) as (epoch, _):
+            token = SessionToken(epoch=epoch, wal_seq=seq)
+        return res, token
+
+    # -- reads -------------------------------------------------------------
+    def _replica_view(self):
+        """(replica, applied_seq, staleness) triples, freshest first."""
+        views = []
+        for r in self.replicas:
+            views.append((r, int(r.applied_seq), int(r.lag)))
+        views.sort(key=lambda v: v[1], reverse=True)
+        return views
+
+    def _serve_from(self, ticket: RouterTicket, replica, q: np.ndarray):
+        try:
+            with replica.epochs.reading(with_epoch=True) as (e, pinned):
+                d, i = pinned_knn(pinned, q[None, :], k=self.k,
+                                  max_frontier=self.max_frontier)
+            ticket.dists, ticket.ids, ticket.epoch = d[0], i[0], e
+        except Exception as exc:  # noqa: BLE001 — fail the ticket
+            ticket.err = exc
+        finally:
+            ticket._event.set()
+
+    def query(self, q: np.ndarray,
+              session: SessionToken | None = None) -> RouterTicket:
+        """Route one read.  Leader-first unless ``prefer_replicas``;
+        degrades to bounded-staleness replica serving when the leader is
+        down.  ``session`` (from a prior write) is the freshness floor —
+        a replica that hasn't applied ``session.wal_seq`` is skipped, and
+        if nothing qualifies the call raises :class:`StaleReplica` rather
+        than silently serving older state."""
+        q = np.asarray(q, np.float32)
+        floor = session.wal_seq if session is not None else -1
+        up = self.leader_up
+
+        if up and not self.prefer_replicas:
+            ticket = RouterTicket(mode="leader", staleness=0)
+            ticket._inner = self.leader.submit(q)
+            self.n_leader_reads += 1
+            return ticket
+
+        mode = "replica" if up else "degraded"
+        for replica, applied, stale in self._replica_view():
+            if applied < floor:
+                continue
+            if (mode == "degraded" and self.max_staleness is not None
+                    and stale > self.max_staleness):
+                continue
+            ticket = RouterTicket(mode=mode, staleness=stale)
+            self._serve_from(ticket, replica, q)
+            if mode == "degraded":
+                self.n_degraded_reads += 1
+            else:
+                self.n_replica_reads += 1
+            return ticket
+
+        if up:
+            # healthy leader is always a valid fallback for fan-out reads
+            ticket = RouterTicket(mode="leader", staleness=0)
+            ticket._inner = self.leader.submit(q)
+            self.n_leader_reads += 1
+            return ticket
+        raise StaleReplica(
+            f"no replica satisfies session floor seq {floor}"
+            + (f" within max_staleness {self.max_staleness}"
+               if self.max_staleness is not None else "")
+            + " and the leader is unreachable")
+
+    def knn(self, qs: np.ndarray, session: SessionToken | None = None,
+            timeout: float | None = 60.0):
+        """Synchronous convenience over :meth:`query` for a [b, dim]
+        block: (dists [b, k], ids [b, k], tickets)."""
+        qs = np.asarray(qs, np.float32)
+        tickets = [self.query(q, session) for q in qs]
+        out = [t.result(timeout) for t in tickets]
+        return (np.stack([d for d, _ in out]),
+                np.stack([i for _, i in out]), tickets)
+
+    # -- observability -----------------------------------------------------
+    def snapshot(self) -> dict:
+        with self._lock:
+            up = self._leader_up and self._leader is not None
+            misses = self._misses
+        lags = [int(r.lag) for r in self.replicas]
+        return {"leader_up": up, "consecutive_misses": misses,
+                "n_heartbeats": self.n_heartbeats,
+                "n_heartbeat_misses": self.n_heartbeat_misses,
+                "n_leader_reads": self.n_leader_reads,
+                "n_replica_reads": self.n_replica_reads,
+                "n_degraded_reads": self.n_degraded_reads,
+                "replica_lags": lags,
+                "max_replica_lag": max(lags, default=0)}

@@ -18,13 +18,29 @@ write pipeline:
     leader's segments (torn-tail-tolerant ``tail_wal`` cursor), replay
     through the same pipeline, publish bitwise-identical epochs, and
     verify it via digest exchange.
+  * ``transport`` — the socket shipping layer: a ``WalShipServer`` serves
+    the leader's segments, a ``WalShipClient`` mirrors them byte-identically
+    on the follower host (idempotent redelivery, backoff + jitter
+    reconnects), ``ShippedReplica`` composes client + replica.
+  * ``lease``     — lease-based leader election with monotonic fencing
+    tokens; ``promote`` fails a caught-up follower over into leadership
+    (drain -> digest verify -> re-open the mirror as the new WAL, fenced).
+  * ``faults``    — seeded deterministic fault injection (drop / dup /
+    reorder / torn / delay / heartbeat starvation) for the chaos suite.
 """
 from repro.stream.batcher import MutationBatcher, cut_cohorts  # noqa: F401
 from repro.stream.epoch import EpochManager  # noqa: F401
+from repro.stream.faults import (FaultInjector, FaultPlan,  # noqa: F401
+                                 NO_FAULTS)
+from repro.stream.lease import (FenceGuard, Lease, LeaseLost,  # noqa: F401
+                                LeaseStore, Promotion, promote)
 from repro.stream.pipeline import StreamingEngine, StreamingForest  # noqa: F401
 from repro.stream.rebalance import (collect_stats, needs_rebalance,  # noqa: F401
                                     rebalance_shards)
 from repro.stream.replica import (DigestMismatch, Replica,  # noqa: F401
                                   ledger_digest, tree_digest)
-from repro.stream.wal import (WalCursor, WriteAheadLog, iter_wal,  # noqa: F401
-                              tail_wal)
+from repro.stream.transport import (ShippedReplica, ShipStall,  # noqa: F401
+                                    TransportError, WalShipClient,
+                                    WalShipServer)
+from repro.stream.wal import (FencedOut, WalCursor, WalTailStall,  # noqa: F401
+                              WriteAheadLog, iter_wal, tail_wal)

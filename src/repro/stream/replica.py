@@ -27,6 +27,7 @@ leader.  For mesh serving, hand the follower's shards to
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import threading
 import time
@@ -86,15 +87,31 @@ class Replica:
     ``device_splits``/``device_merges``, ``headroom_frac``) must match the
     leader's, or replay is still *correct* but not bitwise — the digest
     exchange exists to catch exactly that.
+
+    ``max_records_per_poll`` bounds one poll's replay work so a
+    far-behind follower drains its backlog in slices instead of stalling
+    its serving thread for the whole tail (reads keep landing on the
+    epochs published between slices).  ``max_stall_polls`` arms the WAL
+    tail's corruption diagnostic (``wal.WalTailStall``): N consecutive
+    parked polls with undecodable bytes pending raises instead of
+    spinning silently forever.  ``lag`` = leader's acknowledged seq minus
+    applied seq — the router's staleness bound; the leader side comes
+    from transport end markers (``note_leader_seq``) or, absent those,
+    the highest record seq this replica has scanned.
     """
 
-    def __init__(self, follower, wal_dir: str, *, start_seq: int = -1):
+    def __init__(self, follower, wal_dir: str, *, start_seq: int = -1,
+                 max_records_per_poll: int | None = None,
+                 max_stall_polls: int | None = None):
         if getattr(follower, "wal", None) is not None:
             raise ValueError("replica follower must not own a WAL "
                              "(it tails the leader's)")
         self.follower = follower
         self.wal_dir = wal_dir
         self.cursor = WalCursor(seq=start_seq)
+        self.max_records_per_poll = max_records_per_poll
+        self.max_stall_polls = max_stall_polls
+        self.leader_seq = start_seq
         self._lock = threading.Lock()     # poll() is single-flight
         self._running = False
         self._thread: threading.Thread | None = None
@@ -117,6 +134,21 @@ class Replica:
         return self.cursor.seq
 
     @property
+    def lag(self) -> int:
+        """Records the leader has acknowledged that this follower has not
+        yet applied (>= 0).  Exact when the transport feeds
+        ``note_leader_seq``; otherwise a lower bound from the records this
+        replica has itself scanned."""
+        return max(0, self.leader_seq - self.cursor.seq)
+
+    def note_leader_seq(self, seq: int) -> None:
+        """Record the leader's acknowledged high-water mark (monotonic) —
+        the socket transport calls this with every end marker's
+        ``leader_seq``."""
+        with self._lock:
+            self.leader_seq = max(self.leader_seq, int(seq))
+
+    @property
     def epochs(self):
         return self.follower.epochs
 
@@ -128,9 +160,12 @@ class Replica:
 
     # -- replication -------------------------------------------------------
     def poll(self) -> int:
-        """Tail once: apply every complete new record; returns how many."""
+        """Tail once: apply the next slice of complete records (all of
+        them, or at most ``max_records_per_poll``); returns how many."""
         with self._lock:
-            records, cur = tail_wal(self.wal_dir, self.cursor)
+            records, cur = tail_wal(self.wal_dir, self.cursor,
+                                    max_records=self.max_records_per_poll,
+                                    max_stalls=self.max_stall_polls)
             n = 0
             for rec in records:
                 if rec.kind == KIND_BATCH:
@@ -144,11 +179,11 @@ class Replica:
                 # per-poll, but the seq filter makes the re-scan skip)
                 self.cursor.seq = rec.seq
                 n += 1
-            # byte position from the scan, seq from the last *applied*
-            # record (they differ only if apply raised mid-poll — the next
-            # poll re-scans from the old offset and the seq filter skips)
-            self.cursor = WalCursor(seq=self.cursor.seq,
-                                    segment=cur.segment, offset=cur.offset)
+            # byte position + stall count from the scan, seq from the last
+            # *applied* record (they differ only if apply raised mid-poll —
+            # the next poll re-scans from the old offset, seq filter skips)
+            self.cursor = dataclasses.replace(cur, seq=self.cursor.seq)
+            self.leader_seq = max(self.leader_seq, self.cursor.seq)
             return n
 
     def run_until(self, seq: int, *, timeout: float = 30.0,

@@ -46,6 +46,21 @@ KIND_BATCH = "batch"
 KIND_REBALANCE = "rebalance"
 
 
+class FencedOut(RuntimeError):
+    """A deposed leader tried to append: its fencing token is stale (a
+    newer leader holds the lease — stream/lease.py).  The append never
+    reached the log, so the write was never acknowledged and is cleanly
+    the *client's* to retry against the new leader."""
+
+
+class WalTailStall(RuntimeError):
+    """A follower's tail poll has made no progress for ``max_stalls``
+    consecutive polls while unread bytes sit past its cursor — a truly
+    corrupt segment (planted mid-segment corruption, a mis-shipped
+    chunk), not the benign torn tail of a leader mid-append, which the
+    next completed append always clears."""
+
+
 @dataclasses.dataclass
 class WalRecord:
     kind: str
@@ -92,12 +107,15 @@ def _decode_header(header: dict) -> tuple[int, WalRecord | None]:
                         params=header.get("params", {}))
 
 
-def _scan_segment(path: str, *, sealed: bool, start: int = 0):
+def _scan_segment(path: str, *, sealed: bool, start: int = 0,
+                  max_records: int | None = None):
     """(records, valid_byte_length) of one segment, scanning from byte
     ``start`` (which must sit on a frame boundary — e.g. a prior scan's
     returned length).  A truncated/corrupt tail frame is tolerated (scan
     stops, its bytes excluded from valid_byte_length) only when ``sealed``
-    is False."""
+    is False.  ``max_records`` stops the scan cleanly after that many
+    records, with the returned length on the frame boundary — a bounded
+    follower poll resumes exactly there."""
     with open(path, "rb") as f:
         data = f.read()
     off, total = start, len(data)
@@ -108,6 +126,8 @@ def _scan_segment(path: str, *, sealed: bool, start: int = 0):
             raise ValueError(f"corrupt sealed WAL segment {path}: {msg}")
 
     while off < total:
+        if max_records is not None and len(records) >= max_records:
+            break
         if off + _LEN.size > total:
             torn("truncated length prefix")
             break
@@ -181,20 +201,38 @@ class WalCursor:
     boundary: a torn tail frame in the active segment leaves the cursor
     *before* it, and the next poll re-reads from there — once the leader's
     append completes, the same bytes parse and the record flows through.
+
+    ``stalls`` counts consecutive polls that made no progress while
+    unparseable bytes sat past the offset — the health signal that
+    separates a benign mid-append torn tail (cleared by the very next
+    completed append) from a truly corrupt segment (grows forever;
+    ``tail_wal(max_stalls=N)`` turns it into a ``WalTailStall``).
     """
     seq: int = -1
     segment: int = 0
     offset: int = 0
+    stalls: int = 0
 
 
-def tail_wal(directory: str,
-             cursor: WalCursor) -> tuple[list[WalRecord], WalCursor]:
-    """One follower poll: all complete records past ``cursor``, plus the
+def tail_wal(directory: str, cursor: WalCursor, *,
+             max_records: int | None = None,
+             max_stalls: int | None = None
+             ) -> tuple[list[WalRecord], WalCursor]:
+    """One follower poll: complete records past ``cursor``, plus the
     advanced cursor.  Safe to call while the leader appends — sealed
     segments are immutable, and the active segment's torn tail (a frame
     mid-append, or mid-shipment on a lagging mount) terminates the poll
     cleanly at the last complete frame.  Sealed segments wholly below the
-    cursor's seq are skipped without reading their frames."""
+    cursor's seq are skipped without reading their frames.
+
+    ``max_records`` bounds how many records one poll scans (a far-behind
+    follower drains its backlog across many bounded polls instead of
+    stalling its serving thread for all of it); the cursor lands on the
+    frame boundary after the last scanned record.  ``max_stalls`` raises
+    ``WalTailStall`` once that many consecutive polls parked on the same
+    offset with undecodable bytes beyond it — park-forever is the right
+    behaviour for a leader mid-append, and the wrong one for a corrupt
+    segment; the counter tells them apart."""
     names = _scan_dir(directory)
     cur = dataclasses.replace(cursor)
     out: list[WalRecord] = []
@@ -203,10 +241,14 @@ def tail_wal(directory: str,
     if os.path.exists(mpath):
         with open(mpath) as f:
             sealed_meta = {s["name"]: s for s in json.load(f)["segments"]}
+    budget = max_records
+    pending_bytes = 0
     for i, name in enumerate(names):
         idx = _segment_index(name)
         if idx < cur.segment:
             continue
+        if budget is not None and budget <= 0:
+            break
         path = os.path.join(directory, name)
         sealed = name in sealed_meta or i < len(names) - 1
         start = cur.offset if idx == cur.segment else 0
@@ -217,14 +259,38 @@ def tail_wal(directory: str,
             # snapshot fast-forward: this whole segment predates the cursor
             cur.segment, cur.offset = idx, os.path.getsize(path)
             continue
-        records, end = _scan_segment(path, sealed=sealed, start=start)
+        records, end = _scan_segment(path, sealed=sealed, start=start,
+                                     max_records=budget)
+        if budget is not None:
+            budget -= len(records)
         for rec in records:
             if rec.seq > cur.seq:
                 out.append(rec)
                 cur.seq = rec.seq
         cur.segment, cur.offset = idx, end
         if not sealed:
+            # bytes past the parse point: a torn tail (benign, mid-append)
+            # or corruption (permanent) — the stall counter decides which
+            if budget is None or budget > 0:
+                try:
+                    pending_bytes = max(0, os.path.getsize(path) - end)
+                except OSError:
+                    pending_bytes = 0
             break   # the active segment is always the last one scanned
+    progressed = (bool(out)
+                  or (cur.segment, cur.offset) != (cursor.segment,
+                                                   cursor.offset))
+    if progressed or pending_bytes == 0:
+        cur.stalls = 0
+    else:
+        cur.stalls = cursor.stalls + 1
+        if max_stalls is not None and cur.stalls >= max_stalls:
+            raise WalTailStall(
+                f"WAL tail parked at segment {cur.segment} offset "
+                f"{cur.offset} for {cur.stalls} consecutive polls with "
+                f"{pending_bytes} undecodable bytes beyond it — corrupt "
+                f"segment in {directory!r}? (a leader mid-append clears "
+                "in one append's time)")
     return out, cur
 
 
@@ -246,13 +312,22 @@ class WriteAheadLog:
     from one per append to one per concurrent burst, which closes most of
     the ~14x gap between ``sync`` and buffered appends under multi-writer
     load (the ``wal_group_fsync_*`` rows in benchmarks/bench_stream.py).
-    Single-threaded callers see plain per-append fsync behaviour."""
+    Single-threaded callers see plain per-append fsync behaviour.
+
+    ``fence`` (settable post-construction too — failover attaches it at
+    promotion, stream/lease.py) is a zero-arg callable run under the
+    append lock before every frame write; it raises ``FencedOut`` when
+    this writer's lease/fencing token is stale.  A fenced append touches
+    neither the log nor ``next_seq``, so a deposed leader can never
+    acknowledge — or half-frame — a write the new leader won't have."""
 
     def __init__(self, directory: str, *, segment_max_records: int = 1024,
-                 sync: bool = False, group_commit: bool = False):
+                 sync: bool = False, group_commit: bool = False,
+                 fence=None):
         self.directory = directory
         self.segment_max_records = int(segment_max_records)
         self.sync = sync
+        self.fence = fence
         self.group_commit = bool(group_commit)
         os.makedirs(directory, exist_ok=True)
         self._file = None
@@ -350,6 +425,8 @@ class WriteAheadLog:
     # -- appends ----------------------------------------------------------
     def _append(self, rec: WalRecord) -> int:
         with self._lock:
+            if self.fence is not None:
+                self.fence()            # FencedOut before any byte lands
             rec.seq = self.next_seq     # seq assignment must be atomic
             f = self._ensure_open()     # with the frame write
             f.write(_encode(rec))

@@ -311,6 +311,78 @@ def scenario_replica_forest_mesh():
         np.testing.assert_allclose(np.asarray(d_got), want, atol=1e-5)
 
 
+def scenario_promote_follower_mesh():
+    """Full failover into the mesh: a socket-shipped forest follower
+    drains a dead leader's tail, is promoted under a new fencing token
+    (stream.lease), and its verified epoch goes mesh-resident via
+    core.distributed.promote_follower — then serves exact kNN through
+    the same collectives, and accepts fenced appends as the new leader."""
+    import tempfile
+    from repro.core.distributed import (build_forest_trees, forest_knn,
+                                        promote_follower)
+    from repro.core.metric import pairwise
+    from repro.core.smtree import ST_APPLIED
+    from repro.stream import (StreamingForest, WriteAheadLog, ledger_digest)
+    from repro.stream.lease import FenceGuard, LeaseStore, promote
+    from repro.stream.transport import ShippedReplica, WalShipServer
+
+    class _Clock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    mesh = jax.make_mesh((8,), ("model",))
+    rng = np.random.default_rng(31)
+    X = rng.random((2048, 8)).astype(np.float32)
+    vec = {i: X[i] for i in range(2048)}
+    with tempfile.TemporaryDirectory() as d:
+        clock = _Clock()
+        store = LeaseStore(os.path.join(d, "lease"), ttl_s=5.0, clock=clock)
+        grant = store.try_acquire("leader")
+        wal_dir = os.path.join(d, "wal")
+        wal = WriteAheadLog(wal_dir, segment_max_records=2,
+                            fence=FenceGuard(store, "leader", grant.token))
+        leader = StreamingForest(build_forest_trees(X, 8, capacity=8),
+                                 wal=wal)
+        srv = WalShipServer(wal_dir, wal=wal).start()
+        rep = ShippedReplica(
+            StreamingForest(build_forest_trees(X, 8, capacity=8)),
+            srv.address, os.path.join(d, "mirror"))
+        nid = 10_000
+        for i in range(3):
+            xs = rng.random((64, 8)).astype(np.float32)
+            oids = np.arange(nid, nid + 64, dtype=np.int32)
+            for o, x in zip(oids, xs):
+                vec[int(o)] = x
+            nid += 64
+            res = leader.insert_batch(xs, oids)
+            assert (res.statuses == ST_APPLIED).all()
+        seq, dg = ledger_digest(leader)
+        wal.close()                      # leader dies; disk + server live
+        clock.t = 6.0
+        promo = promote(rep, store, "follower-1", target=(seq, dg))
+        assert promo.lease.token > grant.token
+        forest, epoch = promote_follower(rep, mesh, expect=(seq, dg))
+        live = sorted(vec)
+        Q = np.stack([vec[o] for o in live[:16]]) + 0.003
+        with _use_mesh(mesh):
+            d_got, ids = forest_knn(forest, mesh,
+                                    jnp.asarray(Q, jnp.float32), k=3,
+                                    max_frontier=256)
+        keys = np.stack([vec[o] for o in live])
+        with rep.epochs.reading() as shards:
+            metric = shards[0].metric
+        want = np.sort(pairwise(metric, Q, keys), axis=1)[:, :3]
+        np.testing.assert_allclose(np.asarray(d_got), want, atol=1e-5)
+        # the promoted follower leads: appends land under the new fence
+        rep.follower.insert_batch(rng.random((4, 8)).astype(np.float32),
+                                  np.arange(90_000, 90_004, dtype=np.int32))
+        assert promo.wal.next_seq == seq + 2
+        rep.stop()
+        srv.stop()
+
+
 def scenario_train_step_sharded():
     """2x4 mesh end-to-end: sharded train step runs and loss decreases."""
     import dataclasses

@@ -17,6 +17,7 @@ SCENARIOS = [
     "forest_device_merges",
     "forest_knn_cohort_parity",
     "replica_forest_mesh",
+    "promote_follower_mesh",
     "train_step_sharded",
     "elastic_reshard",
     "compressed_psum",

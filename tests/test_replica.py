@@ -14,8 +14,9 @@ from repro.core.distributed import build_forest_trees
 from repro.core.smtree import OP_DELETE, OP_INSERT, ST_APPLIED, bulk_build
 from repro.dist.checkpoint import CheckpointManager
 from repro.stream import (DigestMismatch, Replica, StreamingEngine,
-                          StreamingForest, WalCursor, WriteAheadLog,
-                          ledger_digest, tail_wal, tree_digest)
+                          StreamingForest, WalCursor, WalTailStall,
+                          WriteAheadLog, ledger_digest, tail_wal,
+                          tree_digest)
 from repro.stream.wal import KIND_BATCH, WalRecord, _encode
 
 DIM = 6
@@ -83,6 +84,81 @@ def test_tail_wal_torn_tail_resume(tmp_path):
     assert [r.seq for r in recs] == [2]
     np.testing.assert_array_equal(recs[0].oids, oids)
     np.testing.assert_array_equal(recs[0].xs, xs)
+
+
+def test_tail_wal_bounded_records_resumes_exactly(tmp_path):
+    """max_records stops on a frame boundary; repeated bounded polls
+    drain the backlog with no loss or duplication."""
+    rng = np.random.default_rng(8)
+    wal = WriteAheadLog(str(tmp_path), segment_max_records=4)
+    for i in range(11):
+        wal.append_batch(*_batch(rng, 2, 10 * i))
+    cur = WalCursor()
+    seen = []
+    for _ in range(20):
+        recs, cur = tail_wal(str(tmp_path), cur, max_records=3)
+        assert len(recs) <= 3
+        seen.extend(r.seq for r in recs)
+        if not recs:
+            break
+    assert seen == list(range(11))
+
+
+def test_tail_wal_stall_diagnostic_on_planted_corruption(tmp_path):
+    """Planted mid-segment corruption: the cursor parks (correct), the
+    stall counter climbs (diagnostic), and max_stalls turns park-forever
+    into WalTailStall — while a benign torn tail never trips it."""
+    rng = np.random.default_rng(9)
+    wal = WriteAheadLog(str(tmp_path), segment_max_records=100)
+    wal.append_batch(*_batch(rng, 4, 0))
+    wal.append_batch(*_batch(rng, 4, 10))
+    wal.close()
+    seg = sorted(p for p in os.listdir(tmp_path) if p.endswith(".wal"))[-1]
+    path = tmp_path / seg
+    recs, cur = tail_wal(str(tmp_path), WalCursor())
+    assert cur.stalls == 0
+    # corrupt bytes in the *middle* of the active segment's unread tail:
+    # a whole frame of garbage that will never complete into a record
+    with open(path, "ab") as f:
+        f.write(b"\xde\xad" * 40)
+    for _ in range(4):
+        recs, cur = tail_wal(str(tmp_path), cur, max_stalls=5)
+        assert recs == []
+    assert cur.stalls == 4
+    with pytest.raises(WalTailStall, match="undecodable bytes"):
+        tail_wal(str(tmp_path), cur, max_stalls=5)
+    # progress (a complete frame landing) clears the counter — even
+    # though the corrupt bytes will now never parse, any *new* complete
+    # record resets the benign-vs-corrupt clock... but appends land
+    # AFTER the garbage, which never parses: the stall persists, which
+    # is exactly why this raises instead of parking silently.
+
+
+def test_replica_bounded_poll_and_lag(tmp_path):
+    from repro.core.smtree import bulk_build as _bb
+    rng = np.random.default_rng(10)
+    X = rng.random((200, DIM)).astype(np.float32)
+    tree0 = _bb(X, capacity=8)
+    leader = StreamingEngine(tree0, wal=WriteAheadLog(
+        str(tmp_path / "wal"), segment_max_records=4))
+    rep = Replica(StreamingEngine(tree0), str(tmp_path / "wal"),
+                  max_records_per_poll=2)
+    for i in range(7):
+        leader.insert_batch(rng.random((8, DIM)).astype(np.float32),
+                            np.arange(500 + 8 * i, 508 + 8 * i,
+                                      dtype=np.int32))
+    rep.note_leader_seq(6)
+    assert rep.lag == 7
+    n = rep.poll()
+    assert n <= 2                     # bounded slice of the backlog
+    assert rep.lag == 7 - rep.applied_seq - 1
+    total = n
+    while (n := rep.poll()) > 0:
+        assert n <= 2
+        total += n
+    assert total == 7 and rep.lag == 0
+    seq, dg = ledger_digest(leader)
+    rep.verify(seq, dg)
 
 
 # -- replicas -------------------------------------------------------------

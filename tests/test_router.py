@@ -1,0 +1,144 @@
+"""Replica-aware routing: mode stamping (leader/replica/degraded),
+read-your-writes session tokens, heartbeat failure detection with
+injected starvation, write fail-fast when leaderless, and recovery via
+set_leader after promotion."""
+import numpy as np
+import pytest
+
+from repro.core.metric import pairwise
+from repro.core.smtree import bulk_build
+from repro.serve.frontend import FrontendConfig, ServeFrontend
+from repro.serve.router import (LeaderUnavailable, ReplicaRouter,
+                                SessionToken, StaleReplica)
+from repro.stream import Replica, StreamingEngine, WriteAheadLog
+from repro.stream.faults import FaultInjector, FaultPlan
+
+N, DIM = 300, 6
+
+
+def _stack(tmp_path, seed=0):
+    """Leader engine + front-end + one filesystem replica."""
+    X = np.random.default_rng(seed).random((N, DIM)).astype(np.float32)
+    tree0 = bulk_build(X, capacity=8)
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    leader = StreamingEngine(tree0, wal=wal)
+    fe = ServeFrontend(leader, FrontendConfig(cohort_width=4, slo_ms=5.0,
+                                              k=3, max_frontier=256)).start()
+    rep = Replica(StreamingEngine(tree0), str(tmp_path / "wal"))
+    return X, leader, fe, rep
+
+
+def test_leader_reads_and_session_tokens(tmp_path):
+    X, leader, fe, rep = _stack(tmp_path)
+    router = ReplicaRouter(fe, [rep], k=3, max_frontier=256)
+    q = np.random.default_rng(1).random(DIM).astype(np.float32)
+    tk = router.query(q)
+    d, _ = tk.result(30)
+    assert tk.mode == "leader" and tk.staleness == 0
+    want = np.sort(pairwise(leader.tree.metric, q[None], X), axis=1)[0, :3]
+    np.testing.assert_allclose(d, want, atol=1e-5)
+    # a write returns a session floor the replica does not yet satisfy
+    res, token = router.mutate(
+        np.full(4, 1, np.int32),
+        np.full((4, DIM), 0.5, np.float32),
+        np.arange(900, 904, dtype=np.int32))
+    assert token.wal_seq == 0
+    assert SessionToken().merge(token) == token
+    fe.stop()
+
+
+def test_replica_mode_respects_session_floor(tmp_path):
+    X, leader, fe, rep = _stack(tmp_path, seed=2)
+    router = ReplicaRouter(fe, [rep], k=3, max_frontier=256,
+                           prefer_replicas=True)
+    _, token = router.mutate(
+        np.full(4, 1, np.int32),
+        np.full((4, DIM), 0.25, np.float32),
+        np.arange(900, 904, dtype=np.int32))
+    q = np.full(DIM, 0.25, np.float32)
+    # replica has not applied the write: the session floor forces the
+    # read back to the leader
+    tk = router.query(q, session=token)
+    tk.result(30)
+    assert tk.mode == "leader"
+    # fresh session (no floor): replica serves
+    tk2 = router.query(q)
+    tk2.result(30)
+    assert tk2.mode == "replica"
+    # once the replica catches up it satisfies the floor
+    rep.poll()
+    tk3 = router.query(q, session=token)
+    d3, i3 = tk3.result(30)
+    assert tk3.mode == "replica"
+    assert 900 in i3          # read-your-writes: the insert is visible
+    fe.stop()
+
+
+def test_heartbeat_starvation_degrades_reads(tmp_path):
+    X, leader, fe, rep = _stack(tmp_path, seed=3)
+    rep.poll()
+    fault = FaultInjector(FaultPlan(seed=0, heartbeat_drop_p=1.0))
+    router = ReplicaRouter(fe, [rep], fault=fault, miss_limit=3,
+                           k=3, max_frontier=256)
+    assert router.leader_up
+    for _ in range(3):
+        router.heartbeat()        # every delivery starved
+    assert not router.leader_up
+    q = np.random.default_rng(4).random(DIM).astype(np.float32)
+    tk = router.query(q)
+    d, _ = tk.result(30)
+    assert tk.mode == "degraded"
+    assert tk.staleness == 0      # caught up before the leader "died"
+    want = np.sort(pairwise(leader.tree.metric, q[None], X), axis=1)[0, :3]
+    np.testing.assert_allclose(d, want, atol=1e-5)
+    with pytest.raises(LeaderUnavailable):
+        router.mutate(np.full(1, 1, np.int32),
+                      np.zeros((1, DIM), np.float32),
+                      np.array([999], np.int32))
+    assert router.snapshot()["n_degraded_reads"] == 1
+    # one healthy heartbeat heals the detector
+    fault2 = FaultInjector(FaultPlan())
+    router.fault = fault2
+    assert router.heartbeat()
+    assert router.leader_up
+    fe.stop()
+
+
+def test_degraded_respects_max_staleness_and_session(tmp_path):
+    X, leader, fe, rep = _stack(tmp_path, seed=5)
+    rep.poll()
+    _, token = None, None
+    res, token = ReplicaRouter(fe, [rep]).mutate(
+        np.full(4, 1, np.int32), np.full((4, DIM), 0.75, np.float32),
+        np.arange(900, 904, dtype=np.int32))
+    router = ReplicaRouter(fe, [rep], max_staleness=0, k=3,
+                           max_frontier=256)
+    router.mark_leader_down()
+    # replica is 1 record behind an acknowledged write -> session floor
+    # unmet and the leader is gone: explicit error, not silent staleness
+    with pytest.raises(StaleReplica):
+        router.query(np.zeros(DIM, np.float32), session=token)
+    rep.note_leader_seq(token.wal_seq)
+    assert rep.lag == 1
+    rep.poll()                    # catch up; lag drops to 0
+    assert rep.lag == 0
+    tk = router.query(np.zeros(DIM, np.float32), session=token)
+    tk.result(30)
+    assert tk.mode == "degraded" and tk.staleness == 0
+    fe.stop()
+
+
+def test_set_leader_restores_writes(tmp_path):
+    X, leader, fe, rep = _stack(tmp_path, seed=6)
+    router = ReplicaRouter(fe, [rep])
+    router.mark_leader_down()
+    with pytest.raises(LeaderUnavailable):
+        router.mutate(np.full(1, 1, np.int32),
+                      np.zeros((1, DIM), np.float32),
+                      np.array([999], np.int32))
+    router.set_leader(fe)         # promotion installed a (new) front-end
+    res, token = router.mutate(np.full(1, 1, np.int32),
+                               np.zeros((1, DIM), np.float32),
+                               np.array([999], np.int32))
+    assert token.wal_seq == 0
+    fe.stop()

@@ -165,3 +165,57 @@ def test_knnlm_frontend_roundtrip():
     finally:
         store.close_frontend()
     assert store.frontend is None
+
+
+def test_shed_policy_raises_queue_full_with_hint():
+    from repro.serve.frontend import QueueFull
+    eng, X = _engine()
+    # width never fills and the SLO is huge, so admitted queries park
+    cfg = FrontendConfig(cohort_width=64, slo_ms=60_000.0, k=2,
+                         max_frontier=256, queue_cap=3, overload="shed")
+    fe = ServeFrontend(eng, cfg).start()
+    try:
+        q = np.random.default_rng(7).random(DIM).astype(np.float32)
+        tickets = [fe.submit(q) for _ in range(3)]
+        with pytest.raises(QueueFull) as ei:
+            fe.submit(q)
+        assert ei.value.retry_after_s > 0       # actionable hint
+        assert fe.stats.n_shed == 1
+        assert fe.stats.snapshot()["queue_depth"] == 3
+        assert fe.stats.snapshot()["n_shed"] == 1
+    finally:
+        fe.stop(drain=False)
+    assert all(t.done() for t in tickets)       # failed by stop, not lost
+
+
+def test_shed_policy_caps_mutation_queue():
+    from repro.core.smtree import OP_NOP
+    from repro.serve.frontend import QueueFull
+    eng, X = _engine()
+    cfg = FrontendConfig(cohort_width=4, slo_ms=5.0, mutation_queue_cap=2,
+                         overload="shed")
+    fe = ServeFrontend(eng, cfg)
+    fe._running = True              # queues only: workers never drain
+    ops = np.full(1, OP_NOP, np.int32)
+    xs = np.zeros((1, DIM), np.float32)
+    oid = np.array([0], np.int32)
+    fe.submit_mutations(ops, xs, oid)
+    fe.submit_mutations(ops, xs, oid)
+    with pytest.raises(QueueFull):
+        fe.submit_mutations(ops, xs, oid)
+    assert fe.stats.snapshot()["mutation_queue_depth"] == 2
+    fe._running = False
+
+
+def test_block_policy_unchanged_under_cap():
+    """Default policy still blocks (and then succeeds) rather than shed."""
+    eng, X = _engine()
+    cfg = FrontendConfig(cohort_width=2, slo_ms=5.0, k=2, max_frontier=256,
+                         queue_cap=2)
+    with ServeFrontend(eng, cfg) as fe:
+        Q = np.random.default_rng(8).random((10, DIM)).astype(np.float32)
+        tickets = fe.submit_many(Q)     # > cap: submit blocks, never raises
+        for t in tickets:
+            t.result(30)
+    assert fe.stats.n_queries == 10
+    assert fe.stats.n_shed == 0
