@@ -100,3 +100,45 @@ def run(report):
     _, s_ct = build_pair(Xc, 10, split="central")
     report("bp_split_minmax_nn1", avg_ios(s_mm, lambda t, q: t.knn_query(q, 1), qc))
     report("bp_split_central_nn1", avg_ios(s_ct, lambda t, q: t.knn_query(q, 1), qc))
+
+    # beyond paper: the JAX engine's descent cost through the obs plane's
+    # paper-level counters — distance computations and nodes visited per
+    # query are the device-side analogue of the ref impl's page-hit IO
+    # columns above, and pruned-by-bound (from the level-stats descent
+    # variant) is the quantity the roadmap's cascading-pruning item will
+    # move.  Counters accumulate from the QueryResult reductions the
+    # serving paths already materialise; no extra device sync.
+    import jax
+
+    from repro import obs
+    from repro.core import smtree
+    Xe = Xc[:, :10].astype(np.float32).copy()
+    tree = smtree.bulk_build(Xe, capacity=42)
+    Qe = (Xe[rng.integers(0, N_OBJ, 256)] + 0.01).astype(np.float32)
+    B = 64
+    obs.reset()
+    obs.enable()
+    try:
+        res, pruned = smtree.knn(tree, Qe[:B], k=1, max_frontier=64,
+                                 level_stats=True)     # warm the jit entry
+        jax.block_until_ready(res.dists)
+        obs.reset()                                    # drop warmup counts
+        t0 = time.time()
+        for j in range(0, len(Qe), B):
+            res, pruned = smtree.knn(tree, Qe[j:j + B], k=1,
+                                     max_frontier=64, level_stats=True)
+            obs.observe_query_result(res, pruned, prefix="engine")
+        jax.block_until_ready(res.dists)
+        dt = time.time() - t0
+        m = obs.REGISTRY.snapshot()
+        nq = m["engine.queries_total"]
+        report("engine_nn1_qps", round(nq / dt, 0))
+        report("engine_dist_evals_per_query",
+               round(m["engine.dist_evals_total"] / nq, 1))
+        report("engine_nodes_visited_per_query",
+               round(m["engine.nodes_visited_total"] / nq, 1))
+        report("engine_pruned_per_query",
+               round(m.get("engine.pruned_by_bound_total", 0) / nq, 1))
+    finally:
+        obs.disable()
+        obs.reset()

@@ -326,7 +326,7 @@ def _resolve_impl(impl: str | None) -> str:
 
 def knn(tree: TreeArrays, queries: jax.Array, *, k: int = 1,
         max_frontier: int = 64, impl: str | None = None,
-        static_height: int | None = None) -> QueryResult:
+        static_height: int | None = None, level_stats: bool = False):
     """Batched k-NN: level-synchronous cohort descent with dynamic radius.
 
     queries: [b, dim].  Exact when ``overflow`` is False (frontier never
@@ -336,10 +336,18 @@ def knn(tree: TreeArrays, queries: jax.Array, *, k: int = 1,
     (the sharded forest's shard_map) where ``tree.height`` is abstract, so
     the cohort fast path can unroll instead of falling back to the
     per-query engine.
+
+    ``level_stats=True`` returns ``(QueryResult, pruned)`` where pruned is
+    ``[n_internal_levels, b]`` int32 — per-level pruned-by-bound counts
+    (entries whose d_min exceeded the query radius).  It is a *static*
+    flag: a separate jit cache entry that leaves the default geometry
+    untouched (observability's paper counters; DESIGN.md §15).  ``pruned``
+    is None when the per-query fallback engine served the call.
     """
     queries = jnp.asarray(queries, jnp.float32)
     return _query(tree, queries, k, max_frontier, jnp.float32(_INF),
-                  _resolve_impl(impl), static_height)
+                  _resolve_impl(impl), static_height,
+                  level_stats=level_stats)
 
 
 def range_search(tree: TreeArrays, queries: jax.Array, radius: jax.Array, *,
@@ -368,7 +376,8 @@ def _range_filter(res: QueryResult, radius, max_results: int) -> QueryResult:
 
 
 def _query(tree: TreeArrays, queries: jax.Array, k: int, F: int, r_cap,
-           impl: str, static_height: int | None = None) -> QueryResult:
+           impl: str, static_height: int | None = None, *,
+           level_stats: bool = False):
     """Dispatch: the cohort engine unrolls the descent over the concrete tree
     height (leaves are all at one depth, so each level is statically either
     internal or leaf).  In traced contexts (e.g. the sharded forest's
@@ -377,24 +386,28 @@ def _query(tree: TreeArrays, queries: jax.Array, k: int, F: int, r_cap,
     the concrete height through as ``static_height``
     (core/distributed.py:forest_knn)."""
     if impl == "perquery":
-        return _knn_perquery(tree, queries, k, F, r_cap)
+        res = _knn_perquery(tree, queries, k, F, r_cap)
+        return (res, None) if level_stats else res
     if static_height is not None:
         height = int(static_height)
     else:
         try:
             height = int(tree.height)
         except jax.errors.ConcretizationTypeError:
-            return _knn_perquery(tree, queries, k, F, r_cap)
+            res = _knn_perquery(tree, queries, k, F, r_cap)
+            return (res, None) if level_stats else res
     interpret = jax.default_backend() != "tpu"
     return _knn_cohort(tree, queries, r_cap, k=k, F=F, height=height,
-                       impl=impl, interpret=interpret)
+                       impl=impl, interpret=interpret,
+                       level_stats=level_stats)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "F", "height", "impl", "interpret"))
+                   static_argnames=("k", "F", "height", "impl", "interpret",
+                                    "level_stats"))
 def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
-                F: int, height: int, impl: str,
-                interpret: bool) -> QueryResult:
+                F: int, height: int, impl: str, interpret: bool,
+                level_stats: bool = False):
     """Level-synchronous query-cohort descent (the fast path).
 
     All ``b`` queries advance one level per step, sharing one fused frontier
@@ -415,6 +428,11 @@ def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
     keeps the w_out smallest d - r; a dropped subtree can only matter if its
     d - r exceeds every kept one AND ≤ r_q — exactly the case the per-query
     ``overflow`` flag reports (DESIGN.md §8).
+
+    ``level_stats`` is static so the default (False) trace emits exactly
+    the ops it always did; the True variant additionally stacks per-level
+    pruned-by-bound counts and only ever compiles when observability asks
+    for it.
     """
     b = queries.shape[0]
     cap = tree.capacity
@@ -434,6 +452,7 @@ def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
     page_hits = jnp.zeros((b,), jnp.int32)
     dist_evals = jnp.zeros((b,), jnp.int32)
     overflow = jnp.zeros((b,), bool)
+    pruned_levels = []          # level_stats only: [b] per internal level
 
     for lvl in range(height):
         w = widths[lvl]
@@ -477,6 +496,11 @@ def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
             # score is +inf at masked entries; the explicit < _INF term keeps
             # them out of imask when r_q itself is still infinite
             imask = (score <= r_q[:, None] + _EPS) & (score < _INF)
+            if level_stats:
+                # valid entries whose d_min bound excluded their subtree
+                pruned_levels.append(jnp.sum(
+                    evalid.reshape(b, w * cap) & ~imask,
+                    axis=1, dtype=jnp.int32))
             sc = jnp.where(imask, score, _INF)
             childs = tree.child[nodes].reshape(b, w * cap)
             w_out = widths[lvl + 1]
@@ -498,7 +522,12 @@ def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
             topk_d = -neg
             topk_i = jnp.take_along_axis(all_i, sel, axis=1)
 
-    return QueryResult(topk_d, topk_i, page_hits, dist_evals, overflow)
+    res = QueryResult(topk_d, topk_i, page_hits, dist_evals, overflow)
+    if level_stats:
+        pruned = (jnp.stack(pruned_levels) if pruned_levels
+                  else jnp.zeros((0, b), jnp.int32))
+        return res, pruned
+    return res
 
 
 @functools.partial(jax.jit, static_argnames=("k", "F"))

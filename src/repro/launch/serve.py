@@ -23,6 +23,23 @@ from repro.data.pipeline import DataConfig, synth_batch
 from repro.models import model as M
 
 
+def _dump_obs(args) -> None:
+    """With ``--obs``: print the final metrics snapshot as one parseable
+    ``[obs] {...}`` line (and write it to ``--obs-out`` when given) so CI
+    smoke jobs can assert on coverage without scraping the summary."""
+    if not getattr(args, "obs", False):
+        return
+    import json
+
+    from repro.obs.export import metrics_snapshot
+    snap = metrics_snapshot()
+    body = json.dumps(snap, sort_keys=True, default=repr)
+    if getattr(args, "obs_out", None):
+        with open(args.obs_out, "w") as f:
+            f.write(body + "\n")
+    print(f"[obs] {body}", flush=True)
+
+
 def _build_store(args, cfg, mesh=None):
     """Synthetic kNN-LM datastore (keys near the embedding scale); with a
     mesh the tree pages replicate and query cohorts shard over 'data'."""
@@ -175,6 +192,7 @@ def serve_sharded(args, cfg):
           f"{decode_s:.2f}s ({decode_s / args.steps * 1e3:.1f} ms/step"
           f"{', kNN-LM mixed' if mix_fn else ''}{mut}{fe})")
     print("[serve] sample:", toks[0][:12])
+    _dump_obs(args)
     return toks
 
 
@@ -206,6 +224,13 @@ def main(argv=None):
                     help="with --frontend: ship the WAL over a socket to "
                          "N read replicas and route queries through the "
                          "replica-aware router (stream/transport.py)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the observability plane (repro.obs): "
+                         "metrics registry, trace spans, flight recorder; "
+                         "prints a final '[obs] {...}' JSON snapshot line")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="with --obs: also write the final snapshot JSON "
+                         "to PATH (for CI assertions)")
     ap.add_argument("--lam", type=float, default=0.3)
     ap.add_argument("--mesh", default="single", choices=["single", "host"],
                     help="'host': sharded decode over all host devices")
@@ -215,6 +240,9 @@ def main(argv=None):
     if args.replicas and not args.frontend:
         ap.error("--replicas requires --frontend (the router fronts the "
                  "admission queue)")
+    if args.obs:
+        from repro import obs
+        obs.enable()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.mesh == "host":
@@ -268,6 +296,7 @@ def main(argv=None):
           f"({decode_s / args.steps * 1e3:.1f} ms/step"
           f"{', kNN-LM mixed' if store else ''}{mut}{fe})")
     print("[serve] sample:", toks[0][:12])
+    _dump_obs(args)
     return toks
 
 

@@ -39,6 +39,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import smtree
 
 __all__ = ["FrontendConfig", "FrontendStats", "QueryTicket",
@@ -74,12 +75,27 @@ class FrontendConfig:
 def pinned_knn(pinned, queries: np.ndarray, *, k: int, max_frontier: int):
     """kNN over one pinned epoch: a single tree, or a tuple of forest
     shards (per-shard cohort descent + host top-k merge — the forest read
-    path, shared here so the front-end serves both layouts)."""
+    path, shared here so the front-end serves both layouts).
+
+    With observability on, a 1/``obs.LEVEL_STATS_EVERY`` sample of
+    dispatches runs the level-stats descent variant (a separate jit
+    cache entry — default geometry untouched) and accumulates the paper
+    counters: queries, distance evals, nodes visited, pruned-by-bound
+    per level.  Sampling the whole counter path — denominator included —
+    keeps per-query averages unbiased while the other 15/16 dispatches
+    pay nothing (no device fetches for the reduction arrays)."""
     if not isinstance(pinned, (tuple, list)):
         pinned = (pinned,)
+    on = obs.enabled()
     ds, ids = [], []
     for t in pinned:
-        res = smtree.knn(t, queries, k=k, max_frontier=max_frontier)
+        if on and obs.want_level_stats():
+            res, pruned = smtree.knn(t, queries, k=k,
+                                     max_frontier=max_frontier,
+                                     level_stats=True)
+            obs.observe_query_result(res, pruned)
+        else:
+            res = smtree.knn(t, queries, k=k, max_frontier=max_frontier)
         ds.append(np.asarray(res.dists))
         ids.append(np.asarray(res.ids))
     d = np.concatenate(ds, axis=1)
@@ -89,11 +105,17 @@ def pinned_knn(pinned, queries: np.ndarray, *, k: int, max_frontier: int):
 
 
 class QueryTicket:
-    """One admitted query.  ``result()`` blocks until its cohort ran."""
-    __slots__ = ("q", "t_submit", "t_done", "epoch", "dists", "ids", "err",
-                 "_event")
+    """One admitted query.  ``result()`` blocks until its cohort ran.
 
-    def __init__(self, q: np.ndarray):
+    ``span`` is the ticket's root trace span ("frontend.query"), opened
+    at admission and ended when the cohort stamps results; the shared
+    no-op span when observability is off or head sampling skipped this
+    ticket (``obs.set_trace_sampling``).  ``trace_id`` (None when not
+    traced) lets callers correlate the ticket across layers."""
+    __slots__ = ("q", "t_submit", "t_done", "epoch", "dists", "ids", "err",
+                 "span", "_event")
+
+    def __init__(self, q: np.ndarray, trace_ctx=None):
         self.q = q
         self.t_submit = time.monotonic()
         self.t_done = None
@@ -101,7 +123,18 @@ class QueryTicket:
         self.dists = None        # [k] f32
         self.ids = None          # [k] i32
         self.err = None
+        # sample_root() decides head sampling without the start_span
+        # kwargs call — the unsampled majority of tickets pays one
+        # cheap predicate, not a span-construction attempt
+        if trace_ctx is not None or obs.sample_root():
+            self.span = obs.start_span("frontend.query", parent=trace_ctx)
+        else:
+            self.span = obs.NULL_SPAN
         self._event = threading.Event()
+
+    @property
+    def trace_id(self):
+        return self.span.trace_id
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -121,13 +154,18 @@ class QueryTicket:
 
 class MutationTicket:
     """One queued mutation batch; resolves to its ``BatchResult``."""
-    __slots__ = ("ops", "xs", "oids", "res", "err", "_event")
+    __slots__ = ("ops", "xs", "oids", "res", "err", "span", "_event")
 
-    def __init__(self, ops, xs, oids):
+    def __init__(self, ops, xs, oids, trace_ctx=None):
         self.ops, self.xs, self.oids = ops, xs, oids
         self.res = None
         self.err = None
+        self.span = obs.start_span("frontend.mutation", parent=trace_ctx)
         self._event = threading.Event()
+
+    @property
+    def trace_id(self):
+        return self.span.trace_id
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -152,7 +190,12 @@ class FrontendStats:
     queue_depth: int = 0          # gauges, updated on every queue touch
     mutation_queue_depth: int = 0
     fill_sum: int = 0             # real (unpadded) rows across cohorts
-    latencies_s: list = dataclasses.field(default_factory=list)
+    # fixed-bucket histogram, not a sample list: O(n_buckets) memory
+    # forever under sustained load.  Constructed standalone (always-on),
+    # because snapshot()/latency_ms feed the bench gate with obs off.
+    latency_hist: obs.Histogram = dataclasses.field(
+        default_factory=lambda: obs.Histogram(
+            "frontend.latency_s", obs.LATENCY_BUCKETS_S))
 
     def observe_cohort(self, fill: int, full: bool, lats) -> None:
         self.n_cohorts += 1
@@ -162,18 +205,34 @@ class FrontendStats:
             self.n_full_dispatch += 1
         else:
             self.n_deadline_dispatch += 1
-        self.latencies_s.extend(lats)
-        if len(self.latencies_s) > 1 << 16:   # bounded reservoir
-            del self.latencies_s[:len(self.latencies_s) >> 1]
+        self.latency_hist.observe_many(lats)
+
+    def publish(self, fill: int, full: bool) -> None:
+        """Export the cohort's registry metrics.  Split from
+        ``observe_cohort`` so the dispatcher can call it *outside* the
+        front-end's condition lock — registry work must not extend the
+        critical section admitting submitters."""
+        if not obs.enabled():
+            return
+        obs.counter("frontend.queries_total").inc(fill)
+        obs.counter("frontend.cohorts_total").inc()
+        obs.counter("frontend.full_dispatch_total" if full
+                    else "frontend.deadline_dispatch_total").inc()
+        obs.gauge("frontend.queue_depth").set(self.queue_depth)
+        obs.gauge("frontend.mean_cohort_fill").set(self.mean_fill)
+        # the always-on latency_hist already saw every sample; adopting
+        # it into the registry exports it without paying a second
+        # 64-observe pass per cohort
+        obs.REGISTRY.register(self.latency_hist)
 
     @property
     def mean_fill(self) -> float:
         return self.fill_sum / max(1, self.n_cohorts)
 
     def latency_ms(self, pct: float) -> float:
-        if not self.latencies_s:
+        if self.latency_hist.count == 0:
             return float("nan")
-        return float(np.percentile(np.asarray(self.latencies_s), pct) * 1e3)
+        return self.latency_hist.percentile(pct) * 1e3
 
     def snapshot(self) -> dict:
         return {"n_queries": self.n_queries, "n_cohorts": self.n_cohorts,
@@ -283,20 +342,26 @@ class ServeFrontend:
         cohorts = max(1, -(-depth // self.cfg.cohort_width))
         return cohorts * self.cfg.slo_ms / 1e3
 
-    def submit(self, q: np.ndarray) -> QueryTicket:
+    def submit(self, q: np.ndarray, *, trace_ctx=None) -> QueryTicket:
         """Admit one query [dim]; returns its ticket.  At ``queue_cap``
         the configured overload policy applies: ``"block"`` stalls the
         caller until space frees (backpressure), ``"shed"`` raises
         :class:`QueueFull` with a retry-after hint instead of letting the
         backlog — and every admitted request's latency — grow without
-        bound."""
+        bound.  ``trace_ctx`` parents the ticket's trace span on an
+        upstream caller (the router's per-read span)."""
         if not self._running:
             raise RuntimeError("front-end not started")
-        tk = QueryTicket(np.asarray(q, np.float32))
+        tk = QueryTicket(np.asarray(q, np.float32), trace_ctx)
         with self._cond:
             if (self.cfg.overload == "shed"
                     and len(self._queue) >= self.cfg.queue_cap):
                 self.stats.n_shed += 1
+                if obs.enabled():
+                    obs.counter("frontend.shed_total").inc()
+                    obs.record_event("frontend.shed", queue="query",
+                                     depth=len(self._queue))
+                tk.span.end(error="QueueFull")
                 raise QueueFull(
                     f"admission queue at cap ({self.cfg.queue_cap})",
                     retry_after_s=self._retry_after_s(len(self._queue)))
@@ -323,7 +388,8 @@ class ServeFrontend:
         return (np.stack([d for d, _ in out]),
                 np.stack([i for _, i in out]))
 
-    def submit_mutations(self, ops, xs, oids) -> MutationTicket:
+    def submit_mutations(self, ops, xs, oids, *,
+                         trace_ctx=None) -> MutationTicket:
         """Queue one mutation batch for the scheduler; returns a ticket
         resolving to its ``BatchResult``.  Fire-and-forget callers simply
         drop the ticket — ``drain()``/``stop()`` still applies it.  The
@@ -334,11 +400,16 @@ class ServeFrontend:
             raise RuntimeError("front-end not started")
         tk = MutationTicket(np.asarray(ops, np.int32),
                             np.asarray(xs, np.float32),
-                            np.asarray(oids, np.int32))
+                            np.asarray(oids, np.int32), trace_ctx)
         with self._cond:
             if (self.cfg.overload == "shed"
                     and len(self._mutations) >= self.cfg.mutation_queue_cap):
                 self.stats.n_shed += 1
+                if obs.enabled():
+                    obs.counter("frontend.shed_total").inc()
+                    obs.record_event("frontend.shed", queue="mutation",
+                                     depth=len(self._mutations))
+                tk.span.end(error="QueueFull")
                 raise QueueFull(
                     f"mutation queue at cap "
                     f"({self.cfg.mutation_queue_cap})",
@@ -381,23 +452,54 @@ class ServeFrontend:
     def _run_cohort(self, batch: list[QueryTicket], *, full: bool) -> None:
         W = self.cfg.cohort_width
         n = len(batch)
+        # Cohort fan-in: the cohort span parents on the first *traced*
+        # member ticket and *links* every other traced member's
+        # trace_id, so each sampled ticket's trace reaches the shared
+        # pin/compute spans.  Head sampling means most tickets carry
+        # NULL_SPAN; a cohort with no traced member skips the cohort-
+        # side spans entirely.
+        cspan = obs.NULL_SPAN
+        if obs.enabled():
+            members = [tk for tk in batch if tk.span is not obs.NULL_SPAN]
+            if members:
+                cspan = obs.start_span(
+                    "frontend.cohort", parent=members[0].span.ctx,
+                    links=tuple(tk.span.trace_id for tk in members[1:]),
+                    fill=n, width=W, full=full)
+        traced = cspan is not obs.NULL_SPAN
         try:
             dim = batch[0].q.shape[-1]
             Q = np.zeros((W, dim), np.float32)   # pad-to-width: one geometry
             for r, tk in enumerate(batch):
                 Q[r] = tk.q
+            pin = (obs.start_span("frontend.epoch_pin", parent=cspan.ctx)
+                   if traced else obs.NULL_SPAN)
             with self.engine.epochs.reading(with_epoch=True) as (e, pinned):
+                pin.end(epoch=e)
+                comp = (obs.start_span("frontend.device_compute",
+                                       parent=cspan.ctx)
+                        if traced else obs.NULL_SPAN)
                 d, ids = self._knn_fn(pinned, Q)
+                comp.end()
+            reply = (obs.start_span("frontend.reply", parent=cspan.ctx)
+                     if traced else obs.NULL_SPAN)
             d, ids = np.asarray(d)[:n], np.asarray(ids)[:n]
             t_done = time.monotonic()
             for r, tk in enumerate(batch):
                 tk.dists, tk.ids, tk.epoch = d[r], ids[r], e
                 tk.t_done = t_done
+            reply.end()
         except Exception as exc:  # noqa: BLE001 — fail the cohort's tickets
+            cspan.set(error=type(exc).__name__)
             for tk in batch:
                 tk.err = exc
         finally:
+            cspan.end()
             for tk in batch:
+                if tk.span is not obs.NULL_SPAN:
+                    if tk.err is not None:
+                        tk.span.set(error=type(tk.err).__name__)
+                    tk.span.end(epoch=tk.epoch)
                 tk._event.set()
             with self._cond:
                 self._inflight -= n
@@ -405,6 +507,7 @@ class ServeFrontend:
                     n, full,
                     [tk.latency_s for tk in batch if tk.err is None])
                 self._cond.notify_all()
+            self.stats.publish(n, full)
 
     # -- scheduler (mutation batches) -------------------------------------
     def _mutation_loop(self) -> None:
@@ -420,13 +523,24 @@ class ServeFrontend:
             try:
                 # the engine's WAL-first apply; ends in an epoch publish,
                 # so the batch becomes visible to the *next* cohort pin —
-                # in-flight cohorts keep their pinned snapshot
-                tk.res = self.engine.apply(tk.ops, tk.xs, tk.oids)
+                # in-flight cohorts keep their pinned snapshot.  The span
+                # becomes the thread-local current, so the engine's
+                # wal.append/apply/publish child spans attach to it.
+                with obs.span("frontend.mutation_batch",
+                              parent=tk.span.ctx, n=len(tk.ops)):
+                    tk.res = self.engine.apply(tk.ops, tk.xs, tk.oids)
             except Exception as exc:  # noqa: BLE001 — fail the ticket
                 tk.err = exc
+                if tk.span is not obs.NULL_SPAN:
+                    tk.span.set(error=type(exc).__name__)
             finally:
+                tk.span.end()
                 tk._event.set()
                 with self._cond:
                     self._mut_inflight -= 1
                     self.stats.n_mutation_batches += 1
+                    if obs.enabled():
+                        obs.counter("frontend.mutation_batches_total").inc()
+                        obs.gauge("frontend.mutation_queue_depth").set(
+                            len(self._mutations))
                     self._cond.notify_all()

@@ -275,14 +275,26 @@ class KnnLmDatastore:
             # any other concurrent traffic
             d, ids = self.frontend.knn(np.asarray(h, np.float32))
         elif self.stream is not None:
+            from repro import obs
             from repro.core import smtree
             with self.stream.epochs.reading() as tree:
-                res = smtree.knn(tree, self.shard_queries(h), k=self.cfg.k,
-                                 max_frontier=self.cfg.max_frontier)
+                if obs.want_level_stats():
+                    res, pruned = smtree.knn(
+                        tree, self.shard_queries(h), k=self.cfg.k,
+                        max_frontier=self.cfg.max_frontier,
+                        level_stats=True)
+                    obs.observe_query_result(res, pruned)
+                else:
+                    res = smtree.knn(tree, self.shard_queries(h),
+                                     k=self.cfg.k,
+                                     max_frontier=self.cfg.max_frontier)
             d, ids = res.dists, np.asarray(res.ids)
         else:
+            from repro import obs
             res = self.engine.knn(self.shard_queries(h), k=self.cfg.k,
                                   max_frontier=self.cfg.max_frontier)
+            if obs.want_level_stats():      # sampled, like the tree paths
+                obs.observe_query_result(res)
             d, ids = res.dists, np.asarray(res.ids)       # [b, k]
         vals = jnp.asarray(np.where(ids >= 0, self.values[np.maximum(ids, 0)],
                                     0))

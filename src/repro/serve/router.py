@@ -40,6 +40,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.serve.frontend import pinned_knn
 
 __all__ = ["SessionToken", "LeaderUnavailable", "StaleReplica",
@@ -75,17 +76,19 @@ class RouterTicket:
     """One routed read: result plus the routing facts — ``mode``
     ("leader" | "replica" | "degraded"), ``staleness`` (records behind
     the leader's last acknowledged seq at serve time; 0 on the leader),
-    and the ``epoch`` pinned for the answer."""
+    and the ``epoch`` pinned for the answer.  ``trace_id`` correlates the
+    read across router/frontend/replica spans (None with obs off)."""
     __slots__ = ("mode", "staleness", "epoch", "dists", "ids", "err",
-                 "_inner", "_event")
+                 "trace_id", "_inner", "_event")
 
-    def __init__(self, *, mode: str, staleness: int):
+    def __init__(self, *, mode: str, staleness: int, trace_id=None):
         self.mode = mode
         self.staleness = staleness
         self.epoch = None
         self.dists = None
         self.ids = None
         self.err = None
+        self.trace_id = trace_id
         self._inner = None            # leader-mode QueryTicket
         self._event = threading.Event()
 
@@ -140,6 +143,10 @@ class ReplicaRouter:
         self._lock = threading.Lock()
         self._misses = 0
         self._leader_up = leader is not None
+        # monotonic time of the last successful heartbeat (None = never):
+        # the snapshot's time_since_heartbeat_s gauge derives from this,
+        # so recovery (a fresh ping / set_leader) resets it naturally
+        self._last_ok_t = time.monotonic() if leader is not None else None
         self._running = False
         self._thread: threading.Thread | None = None
         self.n_heartbeats = 0
@@ -163,9 +170,14 @@ class ReplicaRouter:
         """Install a (newly promoted) leader front-end; resets the
         failure detector.  ``None`` declares the cluster leaderless."""
         with self._lock:
+            was_up = self._leader_up and self._leader is not None
             self._leader = frontend
             self._leader_up = frontend is not None
             self._misses = 0
+            if frontend is not None:
+                self._last_ok_t = time.monotonic()
+        if frontend is not None and not was_up:
+            obs.record_event("router.leader_installed")
 
     def mark_leader_down(self) -> None:
         """Out-of-band failure signal (a write path saw a hard error)."""
@@ -191,9 +203,12 @@ class ReplicaRouter:
                 ok = bool((self._ping or self._default_ping)())
             except Exception:  # noqa: BLE001 — probe failure is a miss
                 ok = False
+        flip = None
         with self._lock:
+            was_up = self._leader_up and self._leader is not None
             if ok:
                 self._misses = 0
+                self._last_ok_t = time.monotonic()
                 if self._leader is not None:
                     self._leader_up = True
             else:
@@ -201,7 +216,20 @@ class ReplicaRouter:
                 self.n_heartbeat_misses += 1
                 if self._misses >= self.miss_limit:
                     self._leader_up = False
-            return self._leader_up and self._leader is not None
+            now_up = self._leader_up and self._leader is not None
+            if now_up != was_up:
+                flip = ("router.leader_recovered" if now_up
+                        else "router.leader_down")
+            misses = self._misses
+        if obs.enabled():
+            obs.counter("router.heartbeats_total").inc()
+            if not ok:
+                obs.counter("router.heartbeat_misses_total").inc()
+            obs.gauge("router.leader_up").set(1.0 if now_up else 0.0)
+            obs.gauge("router.consecutive_misses").set(misses)
+            if flip is not None:
+                obs.record_event(flip, misses=misses)
+        return now_up
 
     def start(self) -> "ReplicaRouter":
         """Run the failure detector on a daemon thread."""
@@ -243,20 +271,26 @@ class ReplicaRouter:
             raise LeaderUnavailable(
                 "no live leader to accept writes (degraded mode serves "
                 "reads only) — retry after failover")
+        mspan = obs.start_span("router.mutate", n=len(ops))
         try:
-            tk = fe.submit_mutations(ops, xs, oids)
+            tk = fe.submit_mutations(ops, xs, oids, trace_ctx=mspan.ctx)
             res = tk.result(timeout)
         except LeaderUnavailable:
+            mspan.end(error="LeaderUnavailable")
             raise
         except (RuntimeError, ConnectionError) as e:
             # a hard apply error (fenced-out deposed leader, stopped
             # front-end) flips the detector immediately — waiting for
             # heartbeat misses would bounce more writes for no reason
+            mspan.end(error=type(e).__name__)
             if type(e).__name__ in ("FencedOut",) \
                     or "stopped" in str(e).lower():
                 self.mark_leader_down()
+                obs.record_event("router.leader_marked_down",
+                                 reason=type(e).__name__)
                 raise LeaderUnavailable(f"leader lost mid-write: {e}") from e
             raise
+        mspan.end()
         eng = fe.engine
         seq = eng.wal.next_seq - 1 if eng.wal is not None else -1
         with eng.epochs.reading(with_epoch=True) as (epoch, _):
@@ -272,14 +306,20 @@ class ReplicaRouter:
         views.sort(key=lambda v: v[1], reverse=True)
         return views
 
-    def _serve_from(self, ticket: RouterTicket, replica, q: np.ndarray):
+    def _serve_from(self, ticket: RouterTicket, replica, q: np.ndarray,
+                    parent=None):
+        span = obs.start_span("router.replica_serve", parent=parent,
+                              sampled=True,
+                              mode=ticket.mode, staleness=ticket.staleness)
         try:
             with replica.epochs.reading(with_epoch=True) as (e, pinned):
                 d, i = pinned_knn(pinned, q[None, :], k=self.k,
                                   max_frontier=self.max_frontier)
             ticket.dists, ticket.ids, ticket.epoch = d[0], i[0], e
+            span.end(epoch=e)
         except Exception as exc:  # noqa: BLE001 — fail the ticket
             ticket.err = exc
+            span.end(error=type(exc).__name__)
         finally:
             ticket._event.set()
 
@@ -294,11 +334,15 @@ class ReplicaRouter:
         q = np.asarray(q, np.float32)
         floor = session.wal_seq if session is not None else -1
         up = self.leader_up
+        rspan = obs.start_span("router.query", floor=floor, sampled=True)
 
         if up and not self.prefer_replicas:
-            ticket = RouterTicket(mode="leader", staleness=0)
-            ticket._inner = self.leader.submit(q)
+            ticket = RouterTicket(mode="leader", staleness=0,
+                                  trace_id=rspan.trace_id)
+            ticket._inner = self.leader.submit(q, trace_ctx=rspan.ctx)
             self.n_leader_reads += 1
+            self._count_read("leader")
+            rspan.end(mode="leader")
             return ticket
 
         mode = "replica" if up else "degraded"
@@ -308,20 +352,27 @@ class ReplicaRouter:
             if (mode == "degraded" and self.max_staleness is not None
                     and stale > self.max_staleness):
                 continue
-            ticket = RouterTicket(mode=mode, staleness=stale)
-            self._serve_from(ticket, replica, q)
+            ticket = RouterTicket(mode=mode, staleness=stale,
+                                  trace_id=rspan.trace_id)
+            self._serve_from(ticket, replica, q, parent=rspan.ctx)
             if mode == "degraded":
                 self.n_degraded_reads += 1
             else:
                 self.n_replica_reads += 1
+            self._count_read(mode)
+            rspan.end(mode=mode, staleness=stale)
             return ticket
 
         if up:
             # healthy leader is always a valid fallback for fan-out reads
-            ticket = RouterTicket(mode="leader", staleness=0)
-            ticket._inner = self.leader.submit(q)
+            ticket = RouterTicket(mode="leader", staleness=0,
+                                  trace_id=rspan.trace_id)
+            ticket._inner = self.leader.submit(q, trace_ctx=rspan.ctx)
             self.n_leader_reads += 1
+            self._count_read("leader")
+            rspan.end(mode="leader")
             return ticket
+        rspan.end(error="StaleReplica")
         raise StaleReplica(
             f"no replica satisfies session floor seq {floor}"
             + (f" within max_staleness {self.max_staleness}"
@@ -339,12 +390,32 @@ class ReplicaRouter:
                 np.stack([i for _, i in out]), tickets)
 
     # -- observability -----------------------------------------------------
+    @staticmethod
+    def _count_read(mode: str) -> None:
+        if obs.enabled():
+            obs.counter(f"router.{mode}_reads_total").inc()
+
     def snapshot(self) -> dict:
         with self._lock:
             up = self._leader_up and self._leader is not None
             misses = self._misses
+            last_ok = self._last_ok_t
         lags = [int(r.lag) for r in self.replicas]
+        # gauges, not mode strings: how long since the detector last saw
+        # the leader (-1 = never), and the staleness a read served *now*
+        # would carry — 0 on a live leader, the freshest qualifying
+        # replica's lag when degraded (-1 = degraded with no replicas).
+        since_hb = (time.monotonic() - last_ok) if last_ok is not None \
+            else -1.0
+        staleness = 0 if up else (min(lags) if lags else -1)
+        if obs.enabled():
+            obs.gauge("router.time_since_heartbeat_s").set(since_hb)
+            obs.gauge("router.staleness").set(float(staleness))
+            obs.gauge("router.max_replica_lag").set(
+                float(max(lags, default=0)))
         return {"leader_up": up, "consecutive_misses": misses,
+                "time_since_heartbeat_s": since_hb,
+                "staleness": staleness,
                 "n_heartbeats": self.n_heartbeats,
                 "n_heartbeat_misses": self.n_heartbeat_misses,
                 "n_leader_reads": self.n_leader_reads,

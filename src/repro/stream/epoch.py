@@ -23,6 +23,8 @@ import contextlib
 import threading
 from typing import Any
 
+from repro import obs
+
 __all__ = ["EpochManager"]
 
 
@@ -104,7 +106,12 @@ class EpochManager:
             self._versions[self._latest] = tree
             self._refs[self._latest] = 0
             self._retire_locked()
-            return self._latest
+            latest, resident = self._latest, len(self._versions)
+        if obs.enabled():
+            obs.counter("epoch.publishes_total").inc()
+            obs.gauge("epoch.latest").set(float(latest))
+            obs.gauge("epoch.resident").set(float(resident))
+        return latest
 
     # -- retirement --------------------------------------------------------
     def _retire_locked(self) -> None:

@@ -40,6 +40,7 @@ import os
 import threading
 import time
 
+from repro import obs
 from repro.stream.replica import Replica
 from repro.stream.wal import FencedOut, WriteAheadLog
 
@@ -156,7 +157,11 @@ class LeaseStore:
             self._write({"holder": lease.holder, "token": lease.token,
                          "expires_at": lease.expires_at})
             return lease
-        return self._cas(cas)
+        lease = self._cas(cas)
+        if lease is not None:
+            obs.record_event("lease.acquired", holder=holder,
+                             token=lease.token)
+        return lease
 
     def renew(self, holder: str, token: int) -> Lease:
         """Extend our own unexpired-or-not grant; raises ``LeaseLost`` if
@@ -205,6 +210,9 @@ class FenceGuard:
         cur = self.store.read()
         if cur is None or cur.token != self.token \
                 or cur.holder != self.holder:
+            obs.record_event(
+                "lease.fenced", holder=self.holder, token=self.token,
+                current=(cur.holder, cur.token) if cur else None)
             raise FencedOut(
                 f"append fenced: {self.holder!r} holds token {self.token} "
                 f"but lease is {(cur.holder, cur.token) if cur else None}")
@@ -245,6 +253,7 @@ def promote(replica, store: LeaseStore, holder: str, *,
     4. re-open the WAL directory with the new fence and attach it to the
        follower engine (``apply(..., log=True)`` now appends here).
     """
+    obs.record_event("lease.promote_start", holder=holder)
     lease = store.try_acquire(holder)
     if lease is None:
         cur = store.read()
@@ -296,4 +305,6 @@ def promote(replica, store: LeaseStore, holder: str, *,
             f"promotion of {holder!r} inconsistent: WAL next_seq "
             f"{wal.next_seq} vs applied seq {applied}")
     plain.follower.wal = wal
+    obs.record_event("lease.promote_done", holder=holder,
+                     token=lease.token, applied_seq=applied)
     return Promotion(lease=lease, wal=wal, applied_seq=applied, digest=got)

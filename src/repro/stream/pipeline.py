@@ -25,6 +25,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import smtree
 from repro.core.smtree import OP_DELETE, OP_INSERT, TreeArrays, empty_tree
 from repro.stream.batcher import (BatchResult, MutationBatcher, check_oids,
@@ -99,14 +100,24 @@ class StreamingEngine:
         with the batcher's pad sentinel nor poison replay."""
         check_oids(oids)
         if log and self.wal is not None:
-            self.wal.append_batch(np.asarray(ops, np.int8), xs, oids)
-        res = self.batcher.apply(ops, xs, oids)
+            with obs.span("mutation.wal_append", n=len(ops)):
+                self.wal.append_batch(np.asarray(ops, np.int8), xs, oids)
+        with obs.span("mutation.apply", n=len(ops)):
+            res = self.batcher.apply(ops, xs, oids)
         if (self.headroom_frac is not None
                 and smtree.needs_headroom(self.tree,
                                           frac=self.headroom_frac)):
             self.batcher.tree = smtree.grow_tree(self.tree)
             self.n_grows += 1
-        self.epochs.publish(self.tree)
+            obs.record_event("stream.tree_grow", n_grows=self.n_grows)
+        with obs.span("mutation.publish"):
+            self.epochs.publish(self.tree)
+        if obs.enabled():
+            obs.counter("stream.batches_total").inc()
+            obs.counter("stream.rows_total").inc(len(ops))
+            obs.counter("stream.escalated_rows_total").inc(res.n_escalated)
+            obs.counter("stream.device_splits_total").inc(res.n_split)
+            obs.counter("stream.device_merges_total").inc(res.n_merge)
         return res
 
     def insert_batch(self, xs, oids, **kw) -> BatchResult:
@@ -277,12 +288,15 @@ class StreamingForest:
         oids = np.asarray(oids, np.int32)
         check_oids(oids)
         if log and self.wal is not None:
-            self.wal.append_batch(ops.astype(np.int8), xs, oids)
+            with obs.span("mutation.wal_append", n=len(ops)):
+                self.wal.append_batch(ops.astype(np.int8), xs, oids)
         owner = self.route(ops, oids)
-        if self.mesh is not None:
-            res = self._apply_mesh(ops, xs, oids, owner)
-        else:
-            res = self._apply_host(ops, xs, oids, owner)
+        with obs.span("mutation.apply", n=len(ops),
+                      plane="mesh" if self.mesh is not None else "host"):
+            if self.mesh is not None:
+                res = self._apply_mesh(ops, xs, oids, owner)
+            else:
+                res = self._apply_host(ops, xs, oids, owner)
         applied = res.statuses == smtree.ST_APPLIED
         for i in np.nonzero(applied)[0]:
             if ops[i] == OP_INSERT:
@@ -290,7 +304,14 @@ class StreamingForest:
             else:
                 self.owner.pop(int(oids[i]), None)
         self._ensure_headroom()
-        self.epochs.publish(tuple(self.trees))
+        with obs.span("mutation.publish"):
+            self.epochs.publish(tuple(self.trees))
+        if obs.enabled():
+            obs.counter("stream.batches_total").inc()
+            obs.counter("stream.rows_total").inc(len(ops))
+            obs.counter("stream.escalated_rows_total").inc(res.n_escalated)
+            obs.counter("stream.device_splits_total").inc(res.n_split)
+            obs.counter("stream.device_merges_total").inc(res.n_merge)
         return res
 
     def _ensure_headroom(self) -> None:
@@ -453,6 +474,7 @@ class StreamingForest:
         trees = dist.unstack_forest(forest, max_nodes=self._shard_nodes)
         esc = np.nonzero(np.isin(st, (smtree.ST_OVERFLOW,
                                       smtree.ST_UNDERFLOW)))[0]
+        obs.record_event("stream.host_escalation", n_rows=int(len(esc)))
         for s in sorted(set(int(owner[i]) for i in esc)):
             rows = np.array([i for i in esc if owner[i] == s])
             sub = st[rows].copy()
@@ -479,8 +501,16 @@ class StreamingForest:
         epochs mid-query."""
         with self.epochs.reading() as trees:
             ds, ids = [], []
+            on = obs.enabled()
             for t in trees:
-                res = smtree.knn(t, queries, k=k, max_frontier=max_frontier)
+                if on and obs.want_level_stats():
+                    res, pruned = smtree.knn(t, queries, k=k,
+                                             max_frontier=max_frontier,
+                                             level_stats=True)
+                    obs.observe_query_result(res, pruned)
+                else:
+                    res = smtree.knn(t, queries, k=k,
+                                     max_frontier=max_frontier)
                 ds.append(np.asarray(res.dists))
                 ids.append(np.asarray(res.ids))
         d = np.concatenate(ds, axis=1)
@@ -501,6 +531,7 @@ class StreamingForest:
         return True
 
     def _run_rebalance(self, seed: int, *, log: bool) -> None:
+        obs.record_event("stream.rebalance", seed=seed)
         if log and self.wal is not None:
             self.wal.append_rebalance({"seed": seed})
         trees, moved, _ = rebalance_shards(self.trees, seed=seed)

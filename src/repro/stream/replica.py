@@ -34,6 +34,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.stream.pipeline import StreamingEngine, StreamingForest
 from repro.stream.wal import KIND_BATCH, WalCursor, tail_wal
 
@@ -167,6 +168,12 @@ class Replica:
                                     max_records=self.max_records_per_poll,
                                     max_stalls=self.max_stall_polls)
             n = 0
+            # one replay span per non-empty poll: the mutation trace's
+            # replica leg (records carry the leader-assigned seqs)
+            rspan = (obs.start_span("replica.replay",
+                                    first_seq=records[0].seq,
+                                    n_records=len(records))
+                     if records and obs.enabled() else obs.NULL_SPAN)
             for rec in records:
                 if rec.kind == KIND_BATCH:
                     self.follower.apply(rec.ops.astype(np.int32), rec.xs,
@@ -179,11 +186,16 @@ class Replica:
                 # per-poll, but the seq filter makes the re-scan skip)
                 self.cursor.seq = rec.seq
                 n += 1
+            rspan.end(last_seq=self.cursor.seq)
             # byte position + stall count from the scan, seq from the last
             # *applied* record (they differ only if apply raised mid-poll —
             # the next poll re-scans from the old offset, seq filter skips)
             self.cursor = dataclasses.replace(cur, seq=self.cursor.seq)
             self.leader_seq = max(self.leader_seq, self.cursor.seq)
+            if n and obs.enabled():
+                obs.counter("replica.records_applied_total").inc(n)
+                obs.gauge("replica.lag").set(float(self.lag))
+                obs.gauge("replica.applied_seq").set(float(self.cursor.seq))
             return n
 
     def run_until(self, seq: int, *, timeout: float = 30.0,
@@ -204,9 +216,14 @@ class Replica:
         self.run_until(seq, timeout=timeout)
         got_seq, got = self.digest()
         if got_seq != seq or got != digest:
-            raise DigestMismatch(
+            exc = DigestMismatch(
                 f"replica diverged at seq {got_seq} (want {seq}): "
                 f"digest {got[:16]}… != leader {digest[:16]}…")
+            obs.record_fault("replica.digest_mismatch", exc,
+                             applied_seq=got_seq, want_seq=seq)
+            raise exc
+        if obs.enabled():
+            obs.counter("replica.digest_verifies_total").inc()
 
     # -- background tailing ------------------------------------------------
     def start(self, *, interval: float = 0.01) -> "Replica":

@@ -49,6 +49,7 @@ import threading
 import time
 import zlib
 
+from repro import obs
 from repro.stream.faults import FaultInjector
 from repro.stream.replica import Replica
 from repro.stream.wal import (WriteAheadLog, _MANIFEST, _scan_dir,
@@ -216,6 +217,15 @@ class WalShipServer:
                         header, _ = _recv_msg(conn)
                     except TransportError:
                         return              # client went away / timed out
+                    if header.get("kind") == "metrics":
+                        # `/metrics` over the socket the deployment
+                        # already has open: reply with the process-wide
+                        # JSON snapshot and keep the connection usable
+                        from repro.obs.export import metrics_snapshot
+                        body = json.dumps(
+                            metrics_snapshot(), default=repr).encode("utf-8")
+                        _send_msg(conn, {"kind": "metrics"}, body)
+                        continue
                     if header.get("kind") != "pull":
                         return              # protocol violation: hang up
                     msgs = self._build_response(int(header["segment"]),
@@ -434,16 +444,24 @@ class WalShipClient:
             self._resync()       # a torn receive may sit in the mirror
             raise
         self.n_rounds += 1
+        if obs.enabled():
+            obs.counter("transport.rounds_total").inc()
+            obs.counter("transport.bytes_shipped_total").inc(appended)
         if appended == 0:
             self._resync()       # repair before deciding we are stuck
             behind = self.leader_seq >= 0 and self._behind()
             self._stall_rounds = self._stall_rounds + 1 if behind else 0
             if self._stall_rounds >= self.max_stall_rounds:
-                raise ShipStall(
+                exc = ShipStall(
                     f"mirror stuck at segment {self._seg} offset "
                     f"{self._size} for {self._stall_rounds} rounds while "
                     f"leader is at seq {self.leader_seq} — corrupt "
                     "source or mirror")
+                obs.record_fault("transport.ship_stall", exc,
+                                 segment=self._seg, offset=self._size,
+                                 rounds=self._stall_rounds,
+                                 leader_seq=self.leader_seq)
+                raise exc
         else:
             self._stall_rounds = 0
         return appended
@@ -465,6 +483,8 @@ class WalShipClient:
             self._seg, self._size = seg, 0
         else:
             self.n_rejected_chunks += 1
+            if obs.enabled():
+                obs.counter("transport.rejected_chunks_total").inc()
             return 0
         with open(self._path(self._seg), "ab") as f:
             f.write(body)
@@ -495,6 +515,8 @@ class WalShipClient:
                     # followers hammering a restarted leader
                     time.sleep(delay * (0.5 + 0.5 * self._jitter.random()))
                     self.n_reconnects += 1
+                    if obs.enabled():
+                        obs.counter("transport.reconnects_total").inc()
                 except ShipStall:
                     self._running = False
                     raise
@@ -609,6 +631,8 @@ class ShippedReplica:
                     time.sleep(delay
                                * (0.5 + 0.5 * self.client._jitter.random()))
                     self.client.n_reconnects += 1
+                    if obs.enabled():
+                        obs.counter("transport.reconnects_total").inc()
                 if n == 0:
                     time.sleep(interval)
 

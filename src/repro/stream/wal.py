@@ -37,6 +37,8 @@ from typing import Any, Iterator
 
 import numpy as np
 
+from repro import obs
+
 _MANIFEST = "manifest.json"
 _SEG_PREFIX = "segment_"
 _SEG_SUFFIX = ".wal"
@@ -285,12 +287,15 @@ def tail_wal(directory: str, cursor: WalCursor, *,
     else:
         cur.stalls = cursor.stalls + 1
         if max_stalls is not None and cur.stalls >= max_stalls:
-            raise WalTailStall(
+            exc = WalTailStall(
                 f"WAL tail parked at segment {cur.segment} offset "
                 f"{cur.offset} for {cur.stalls} consecutive polls with "
                 f"{pending_bytes} undecodable bytes beyond it — corrupt "
                 f"segment in {directory!r}? (a leader mid-append clears "
                 "in one append's time)")
+            obs.record_fault("wal.tail_stall", exc, segment=cur.segment,
+                             offset=cur.offset, stalls=cur.stalls)
+            raise exc
     return out, cur
 
 
@@ -426,17 +431,32 @@ class WriteAheadLog:
     def _append(self, rec: WalRecord) -> int:
         with self._lock:
             if self.fence is not None:
-                self.fence()            # FencedOut before any byte lands
+                try:
+                    self.fence()        # FencedOut before any byte lands
+                except FencedOut as exc:
+                    # flight-recorder dump: a deposed leader just tried to
+                    # write — the postmortem wants the ring *now*
+                    obs.record_fault("wal.fenced_out", exc,
+                                     next_seq=self.next_seq,
+                                     directory=self.directory)
+                    raise
             rec.seq = self.next_seq     # seq assignment must be atomic
             f = self._ensure_open()     # with the frame write
-            f.write(_encode(rec))
+            buf = _encode(rec)
+            f.write(buf)
             f.flush()
             self.next_seq = rec.seq + 1
             self._active_records += 1
             self._appended += 1
             my = self._appended
+            if obs.enabled():
+                obs.counter("wal.appends_total").inc()
+                obs.counter("wal.bytes_total").inc(len(buf))
+                obs.gauge("wal.next_seq").set(self.next_seq)
             if self.sync and not self.group_commit:
                 os.fsync(f.fileno())
+                if obs.enabled():
+                    obs.counter("wal.fsyncs_total").inc()
                 self._synced = my
                 if self._dir_dirty:
                     # a freshly created segment file's *directory entry*
@@ -476,6 +496,9 @@ class WriteAheadLog:
                 f.flush()   # concurrent writers' buffered frames too
                 snapshot = self._appended
                 os.fsync(f.fileno())
+                if obs.enabled():
+                    obs.counter("wal.fsyncs_total").inc()
+                    obs.counter("wal.group_commit_rounds_total").inc()
                 if self._dir_dirty:
                     # cleared only after the fsync succeeded — a failed
                     # fsync must not drop the directory-entry guarantee

@@ -1,0 +1,206 @@
+"""Observability end-to-end: one query ticket's spans form a single
+connected trace across router -> frontend dispatch (and the replica-serve
+leg), the mutation trace reaches the WAL/apply/publish spans plus the
+replica's replay leg, the metrics snapshot covers every serving layer,
+metrics exposition works over the ship-server socket, and the router's
+degraded -> leader recovery resets the staleness gauges."""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.smtree import bulk_build
+from repro.obs.export import fetch_metrics, metrics_snapshot, missing_rows
+from repro.serve.frontend import FrontendConfig, ServeFrontend
+from repro.serve.router import ReplicaRouter
+from repro.stream import Replica, StreamingEngine, WriteAheadLog
+from repro.stream.faults import FaultInjector, FaultPlan
+from repro.stream.transport import WalShipServer
+
+N, DIM = 300, 6
+
+
+@pytest.fixture
+def obs_on(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_OBS_DUMP_DIR", str(tmp_path))
+    obs.reset()
+    obs.enable()
+    obs.set_trace_sampling(1)        # trace every root: tests need them all
+    yield
+    obs.disable()
+    obs.set_trace_sampling(obs.TRACE_SAMPLE_EVERY)
+    obs.reset()
+
+
+def _stack(tmp_path, seed=0):
+    """Leader engine + front-end + one filesystem replica."""
+    X = np.random.default_rng(seed).random((N, DIM)).astype(np.float32)
+    tree0 = bulk_build(X, capacity=8)
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    leader = StreamingEngine(tree0, wal=wal)
+    fe = ServeFrontend(leader, FrontendConfig(cohort_width=4, slo_ms=5.0,
+                                              k=3, max_frontier=256)).start()
+    rep = Replica(StreamingEngine(tree0), str(tmp_path / "wal"))
+    return X, leader, fe, rep
+
+
+def _mutation(n=4, start=900):
+    return (np.full(n, 1, np.int32),
+            np.full((n, DIM), 0.5, np.float32),
+            np.arange(start, start + n, dtype=np.int32))
+
+
+# ------------------------------------------------------------ query traces
+
+def test_leader_query_trace_is_connected(tmp_path, obs_on):
+    X, leader, fe, rep = _stack(tmp_path)
+    router = ReplicaRouter(fe, [rep], k=3, max_frontier=256)
+    q = np.random.default_rng(1).random(DIM).astype(np.float32)
+    tk = router.query(q)
+    tk.result(30)
+    records = obs.RECORDER.records()
+    assert tk.trace_id is not None
+    spans = obs.assemble_trace(records, tk.trace_id)
+    names = {s["name"] for s in spans}
+    # admit -> cohort assembly -> epoch pin -> device compute -> reply,
+    # all under the router's root span
+    assert {"router.query", "frontend.query", "frontend.cohort",
+            "frontend.epoch_pin", "frontend.device_compute",
+            "frontend.reply"} <= names
+    assert obs.trace_connected(records, tk.trace_id)
+    by_name = {s["name"]: s for s in spans}
+    assert by_name["frontend.query"]["parent_id"] == \
+        by_name["router.query"]["span_id"]
+    assert by_name["frontend.query"]["attrs"]["epoch"] == tk.epoch
+    fe.stop()
+
+
+def test_replica_query_trace_is_connected(tmp_path, obs_on):
+    X, leader, fe, rep = _stack(tmp_path, seed=2)
+    router = ReplicaRouter(fe, [rep], k=3, max_frontier=256,
+                           prefer_replicas=True)
+    tk = router.query(np.random.default_rng(3).random(DIM)
+                      .astype(np.float32))
+    tk.result(30)
+    assert tk.mode == "replica"
+    records = obs.RECORDER.records()
+    spans = obs.assemble_trace(records, tk.trace_id)
+    names = {s["name"] for s in spans}
+    assert {"router.query", "router.replica_serve"} <= names
+    assert obs.trace_connected(records, tk.trace_id)
+    fe.stop()
+
+
+def test_cohort_links_join_coalesced_tickets(tmp_path, obs_on):
+    """Two tickets coalesced into one cohort: the non-primary ticket's
+    trace still reaches the shared cohort span through the link."""
+    X, leader, fe, rep = _stack(tmp_path, seed=4)
+    router = ReplicaRouter(fe, [rep], k=3, max_frontier=256)
+    qs = np.random.default_rng(5).random((4, DIM)).astype(np.float32)
+    tickets = [router.query(q) for q in qs]
+    [t.result(30) for t in tickets]
+    records = obs.RECORDER.records()
+    cohorts = [s for s in obs.RECORDER.spans()
+               if s["name"] == "frontend.cohort"]
+    assert cohorts
+    for tk in tickets:
+        names = {s["name"] for s in obs.assemble_trace(records, tk.trace_id)}
+        assert "frontend.cohort" in names       # direct child or via link
+        assert obs.trace_connected(records, tk.trace_id)
+    fe.stop()
+
+
+# ---------------------------------------------------------- mutation trace
+
+def test_mutation_trace_reaches_wal_apply_publish(tmp_path, obs_on):
+    X, leader, fe, rep = _stack(tmp_path, seed=6)
+    router = ReplicaRouter(fe, [rep], k=3, max_frontier=256)
+    router.mutate(*_mutation())
+    records = obs.RECORDER.records()
+    (root,) = [s for s in obs.RECORDER.spans()
+               if s["name"] == "router.mutate"]
+    spans = obs.assemble_trace(records, root["trace_id"])
+    names = {s["name"] for s in spans}
+    assert {"router.mutate", "frontend.mutation",
+            "frontend.mutation_batch", "mutation.wal_append",
+            "mutation.apply", "mutation.publish"} <= names
+    assert obs.trace_connected(records, root["trace_id"])
+    # the replica's replay leg: its own span, carrying the leader seqs
+    assert rep.poll() == 1
+    (replay,) = [s for s in obs.RECORDER.spans()
+                 if s["name"] == "replica.replay"]
+    assert replay["attrs"]["first_seq"] == 0
+    assert replay["attrs"]["last_seq"] == 0
+    fe.stop()
+
+
+# --------------------------------------------------------- snapshot + wire
+
+def test_snapshot_covers_every_layer(tmp_path, obs_on):
+    X, leader, fe, rep = _stack(tmp_path, seed=7)
+    router = ReplicaRouter(fe, [rep], k=3, max_frontier=256)
+    router.mutate(*_mutation())
+    tk = router.query(np.random.default_rng(8).random(DIM)
+                      .astype(np.float32))
+    tk.result(30)
+    rep.poll()
+    router.heartbeat()
+    router.snapshot()
+    snap = metrics_snapshot()
+    assert missing_rows(snap, ["frontend.", "router.", "wal.",
+                               "replica.", "descent.", "epoch."]) == []
+    # paper-level counters moved: every admitted query pays dist evals
+    m = snap["metrics"]
+    assert m["descent.queries_total"] >= 1
+    assert m["descent.dist_evals_total"] > 0
+    assert m["descent.nodes_visited_total"] > 0
+    assert m["frontend.latency_s.count"] >= 1
+    fe.stop()
+
+
+def test_fetch_metrics_over_ship_socket(tmp_path, obs_on):
+    obs.counter("wal.appends_total").inc(2)
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    wal.append_batch(*_mutation(n=2))
+    with WalShipServer(str(tmp_path / "wal"), wal=wal) as srv:
+        snap = fetch_metrics(srv.address)
+    assert snap["enabled"] is True
+    assert snap["metrics"]["wal.appends_total"] == 3
+    wal.close()
+
+
+# ----------------------------------------------------- recovery regression
+
+def test_recovery_resets_staleness_gauges(tmp_path, obs_on):
+    """Degraded -> leader recovery must reset the router's staleness
+    gauges: time_since_heartbeat_s starts counting from the healing
+    heartbeat and staleness drops back to 0 (leader reads are fresh)."""
+    X, leader, fe, rep = _stack(tmp_path, seed=9)
+    rep.poll()
+    fault = FaultInjector(FaultPlan(seed=0, heartbeat_drop_p=1.0))
+    router = ReplicaRouter(fe, [rep], fault=fault, miss_limit=3,
+                           k=3, max_frontier=256)
+    for _ in range(3):
+        router.heartbeat()            # every delivery starved
+    assert not router.leader_up
+    s_down = router.snapshot()
+    assert s_down["staleness"] >= 0   # degraded: replica lag, not 0
+    g = obs.REGISTRY.snapshot()
+    assert g["router.leader_up"] == 0.0
+    assert g["router.consecutive_misses"] == 3
+    # recovery: one healthy heartbeat heals the detector
+    router.fault = FaultInjector(FaultPlan())
+    assert router.heartbeat()
+    s_up = router.snapshot()
+    assert s_up["leader_up"]
+    assert s_up["staleness"] == 0
+    assert 0.0 <= s_up["time_since_heartbeat_s"] < 5.0
+    g = obs.REGISTRY.snapshot()
+    assert g["router.leader_up"] == 1.0
+    assert g["router.consecutive_misses"] == 0
+    assert g["router.staleness"] == 0.0
+    assert 0.0 <= g["router.time_since_heartbeat_s"] < 5.0
+    # the flip left breadcrumbs in the flight recorder
+    events = [e["name"] for e in obs.RECORDER.events()]
+    assert "router.leader_down" in events
+    assert "router.leader_recovered" in events
+    fe.stop()
