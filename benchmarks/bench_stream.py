@@ -468,6 +468,60 @@ def _rebalance_rows(report):
     report("rebalance_ms", round(dt * 1e3, 1))
 
 
+def _skew_drain_rows(report):
+    """Skew-drain drill, incremental vs stop-the-world (PR 9): worst and
+    p99 publish-time pause per maintenance call, plus steady-state
+    mutation ops/s sustained *while the drain is in progress*.  Legs are
+    interleaved and run twice (PR 5 methodology): the first pair pays
+    one-time jit compilation, only the second pair is reported."""
+    from repro.core.distributed import build_forest_trees
+    from repro.stream import StreamingForest, collect_stats
+    n = min(N, 8_192)
+    X = make_dataset("clustered", n, seed=7)[:, :DIM].copy()
+    trees = build_forest_trees(X, 4, capacity=CAPACITY)
+    victims = np.array([o for o in range(n) if o % 4 < 2][:2 * n // 5])
+    B = 64
+    fresh = make_dataset("uniform", 200 * B, seed=41)[:, :DIM].copy()
+
+    def leg(mode, base_id):
+        sf = StreamingForest([t for t in trees], max_skew=1.3,
+                             min_objects=64, rebalance_mode=mode,
+                             migration_step_objects=B)
+        sf.delete_batch(X[victims], victims)
+        skew0 = collect_stats(sf.trees).skew
+        pauses, mut_ops, mut_t, nid = [], 0, 0.0, base_id
+        for r in range(200):
+            t0 = time.perf_counter()
+            fired = sf.maintenance()
+            dt = time.perf_counter() - t0
+            if not fired:
+                break
+            pauses.append(dt)
+            oids = nid + np.arange(B)
+            t0 = time.perf_counter()
+            sf.insert_batch(fresh[(r % 200) * B:(r % 200) * B + B], oids)
+            mut_t += time.perf_counter() - t0
+            mut_ops += B
+            nid += B
+        return {"skew0": skew0, "pauses": pauses, "steps": len(pauses),
+                "ops_per_s": mut_ops / mut_t if mut_t else 0.0,
+                "skew1": collect_stats(sf.trees).skew}
+
+    out = {}
+    for rep in range(2):
+        for mode in ("incremental", "stop_world"):
+            out[mode] = leg(mode, base_id=(10 + 4 * rep) * n)
+    report("skew_drain_skew_before", round(out["incremental"]["skew0"], 3))
+    report("skew_drain_steps_incremental", out["incremental"]["steps"])
+    for mode, r in out.items():
+        p = np.asarray(r["pauses"]) * 1e3
+        report(f"rebalance_p99_pause_ms_{mode}",
+               round(float(np.percentile(p, 99)), 2))
+        report(f"rebalance_max_pause_ms_{mode}", round(float(p.max()), 2))
+        report(f"skew_drain_ops_per_s_{mode}", round(r["ops_per_s"], 0))
+        report(f"skew_drain_final_skew_{mode}", round(r["skew1"], 3))
+
+
 def _serve_rows(report):
     """Evict-while-serving: queries pinned to an epoch while the writer
     applies sliding-window add/evict batches."""
@@ -535,4 +589,5 @@ def run(report):
     _wal_rows(report)
     _ckpt_rows(report, tree)
     _rebalance_rows(report)
+    _skew_drain_rows(report)
     _serve_rows(report)

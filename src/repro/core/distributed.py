@@ -405,6 +405,44 @@ def _forest_apply_merges_fn(mesh: Mesh, axis: str):
     return run
 
 
+def forest_extract_objects(forest: TreeArrays, mesh: Mesh, oids: jax.Array,
+                           owner: jax.Array, *, axis: str = "model"):
+    """Owner-routed vector gather across the mesh forest: for each
+    requested id, the shard named by ``owner[i]`` looks it up locally
+    (``smtree.extract_objects``) and the psum of masked rows reconstructs
+    the replicated result.  Returns (vecs [B, dim] f32, found [B] bool);
+    rows absent from their owner shard (or with ``owner`` -1 pads) come
+    back zero-filled with ``found`` False.
+
+    This is the read half of a mesh migration step: tree pages stay
+    device-resident — only the [B, dim] gather leaves the shards — so the
+    streaming forest can re-emit the rows as a delete-on-donor /
+    insert-on-receiver cohort without unstacking anything to the host."""
+    return _forest_extract_objects_fn(mesh, axis)(
+        forest, jnp.asarray(oids, jnp.int32), jnp.asarray(owner, jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _forest_extract_objects_fn(mesh: Mesh, axis: str):
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(axis), P(None), P(None)),
+                       out_specs=(P(None), P(None)), check_rep=False)
+    def run(forest_slice, oids, owner):
+        tree = _local_tree(forest_slice)
+        me = jax.lax.axis_index(axis)
+        mine = owner == me
+        # non-owned rows become the -1 pad sentinel, which never matches
+        local_oids = jnp.where(mine, oids, -1)
+        vecs, found = smtree.extract_objects(tree, local_oids)
+        found = found & mine
+        vecs = jnp.where(found[:, None], vecs, 0.0)
+        return (jax.lax.psum(vecs, axis),
+                jax.lax.psum(found.astype(jnp.int32), axis) > 0)
+
+    return run
+
+
 def brute_force_knn(X: jax.Array, mesh: Mesh, queries: jax.Array, *,
                     k: int = 8, axis: str = "model", metric: str = "d_inf"):
     """Flat sharded scan baseline (the paper's 'sequential scan' line) using

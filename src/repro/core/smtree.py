@@ -881,12 +881,13 @@ def _apply_row(t: TreeArrays, vecs0: jax.Array, op, x, oid, leaf0, found0):
     return t, status
 
 
-def _locate_oids(tree: TreeArrays, oids: jax.Array):
-    """Vectorised exact-id lookup: for each requested oid, the node holding
-    it in ``tree`` (or -1).  One O(N·cap·log B) sorted-join pass replaces B
-    sequential O(N·cap) table scans; first-hit semantics (lowest flat slot
-    wins) match the scan the fast path used to do.  Requires the batch's
-    oids to be unique (the conflict-free-cohort contract)."""
+def _locate_slots(tree: TreeArrays, oids: jax.Array):
+    """Vectorised exact-id lookup at slot granularity: for each requested
+    oid, the flat slot index ``node * cap + slot`` holding it (``N * cap``
+    when absent) and a found mask.  One O(N·cap·log B) sorted-join pass
+    replaces B sequential O(N·cap) table scans; first-hit semantics (lowest
+    flat slot wins) match the scan the fast path used to do.  Requires the
+    batch's oids to be unique (the conflict-free-cohort contract)."""
     B = oids.shape[0]
     N, cap = tree.oid.shape
     order = jnp.argsort(oids)
@@ -902,8 +903,64 @@ def _locate_oids(tree: TreeArrays, oids: jax.Array):
     row = jnp.where(match, order[pos_c], B)                  # B → dropped
     flat = jnp.arange(N * cap, dtype=jnp.int32).reshape(N, cap)
     first = jnp.full((B,), N * cap, jnp.int32).at[row].min(flat, mode="drop")
-    found = first < N * cap
+    return first, first < N * cap
+
+
+def _locate_oids(tree: TreeArrays, oids: jax.Array):
+    """Node-granularity wrapper over ``_locate_slots``: the node holding
+    each requested oid, or -1 when absent."""
+    _, cap = tree.oid.shape
+    first, found = _locate_slots(tree, oids)
     return jnp.where(found, first // cap, -1).astype(jnp.int32), found
+
+
+@jax.jit
+def _extract_objects_impl(tree: TreeArrays, oids: jax.Array):
+    N, cap = tree.oid.shape
+    first, found = _locate_slots(tree, oids)
+    flat_vecs = tree.vecs.reshape(N * cap, -1)
+    idx = jnp.minimum(first, N * cap - 1)
+    vecs = jnp.where(found[:, None], flat_vecs[idx], 0.0)
+    return vecs.astype(jnp.float32), found
+
+
+def extract_objects(tree: TreeArrays, oids):
+    """Gather the stored vectors for a batch of object ids.
+
+    oids: [B] int32, unique (conflict-free-cohort contract; -1 pads never
+    match).  Returns (vecs [B, dim] f32, found [B] bool); rows whose id is
+    not live in ``tree`` come back zero-filled with ``found`` False.  This
+    is the read half of a migration step: the stream layer re-emits the
+    extracted rows as a delete-on-donor / insert-on-receiver cohort, so a
+    move rides the same jitted apply scan as any other mutation batch."""
+    return _extract_objects_impl(tree, jnp.asarray(oids, jnp.int32))
+
+
+def move_objects(donor: TreeArrays, receiver: TreeArrays, oids, *,
+                 splits: bool = True, merges: bool = True):
+    """Host reference for a batch move: re-home ``oids`` from ``donor``
+    into ``receiver``.  Returns (donor, receiver, moved [B] bool).
+
+    Order is insert-before-delete so a structural failure can only leave
+    an object visible twice across the pair, never zero times; ids absent
+    from the donor, or whose insert/delete escalation did not complete,
+    report ``moved`` False and leave both trees consistent.  The streaming
+    forest's migration steps use the same extract + cohort-apply shape but
+    route through its batcher/mesh plumbing (stream/pipeline.py)."""
+    oids = jnp.asarray(oids, jnp.int32)
+    vecs, found = extract_objects(donor, oids)
+    found = np.asarray(found)
+    ins_ops = jnp.where(found, OP_INSERT, OP_NOP)
+    ins_oids = jnp.where(found, oids, -1)
+    receiver, st_i = apply_mutations(receiver, ins_ops, vecs, ins_oids,
+                                     splits=splits, merges=merges)
+    placed = found & np.isin(np.asarray(st_i), (ST_APPLIED, ST_SPLIT))
+    del_ops = jnp.where(jnp.asarray(placed), OP_DELETE, OP_NOP)
+    del_oids = jnp.where(jnp.asarray(placed), oids, -1)
+    donor, st_d = apply_mutations(donor, del_ops, vecs, del_oids,
+                                  splits=splits, merges=merges)
+    moved = placed & np.isin(np.asarray(st_d), (ST_APPLIED, ST_MERGE))
+    return donor, receiver, jnp.asarray(moved)
 
 
 def _apply_mutations_impl(tree: TreeArrays, ops: jax.Array, xs: jax.Array,

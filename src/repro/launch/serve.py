@@ -58,7 +58,18 @@ def _build_store(args, cfg, mesh=None):
             import tempfile
             args._repl_root = tempfile.mkdtemp(prefix="serve-repl-")
             wal_dir = f"{args._repl_root}/wal"
-        store.enable_stream(wal_dir=wal_dir)  # batched add/evict
+        shards = getattr(args, "knn_shards", 0)
+        kw = {}
+        if shards and shards > 1:
+            # sharded store: maintenance (offered by the front-end
+            # scheduler after each mutation batch) repairs delete skew in
+            # the configured mode — incremental migration steps by
+            # default, stop-the-world rebuilds as the baseline
+            kw = {"shards": shards,
+                  "rebalance_mode": getattr(args, "rebalance_mode",
+                                            "incremental"),
+                  "max_skew": 1.3, "min_objects": 256}
+        store.enable_stream(wal_dir=wal_dir, **kw)  # batched add/evict
     if getattr(args, "frontend", False):
         # async serving front-end: retrieval coalesces into epoch-pinned
         # cohorts, mutations ride the scheduler between epoch publishes —
@@ -224,6 +235,19 @@ def main(argv=None):
                     help="with --frontend: ship the WAL over a socket to "
                          "N read replicas and route queries through the "
                          "replica-aware router (stream/transport.py)")
+    ap.add_argument("--knn-shards", type=int, default=0,
+                    help="with --knn-mutate/--frontend: shard the "
+                         "datastore into a streaming forest of N SM-trees "
+                         "(host-side; per-shard descent + top-k merge) so "
+                         "background rebalancing exercises under serving")
+    ap.add_argument("--rebalance-mode", default="incremental",
+                    choices=["stop_world", "incremental"],
+                    help="with --knn-shards: skew repair strategy — "
+                         "'incremental' drains skew one bounded, WAL-"
+                         "replayable migration step per mutation batch "
+                         "behind the epoch mechanism; 'stop_world' keeps "
+                         "the one-shot rebuild baseline (also the replay "
+                         "path for old WALs)")
     ap.add_argument("--obs", action="store_true",
                     help="enable the observability plane (repro.obs): "
                          "metrics registry, trace spans, flight recorder; "
@@ -240,6 +264,16 @@ def main(argv=None):
     if args.replicas and not args.frontend:
         ap.error("--replicas requires --frontend (the router fronts the "
                  "admission queue)")
+    if args.knn_shards > 1:
+        if not (args.knn_mutate or args.frontend):
+            ap.error("--knn-shards requires --knn-mutate or --frontend "
+                     "(the forest lives in the stream pipeline)")
+        if args.replicas:
+            ap.error("--knn-shards does not compose with --replicas "
+                     "(socket replication follows single-tree engines)")
+        if args.mesh == "host":
+            ap.error("--knn-shards is the host-side forest; it does not "
+                     "compose with --mesh host")
     if args.obs:
         from repro import obs
         obs.enable()

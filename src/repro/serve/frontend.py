@@ -70,6 +70,11 @@ class FrontendConfig:
     # hint — the right shape in front of a network, where a blocked
     # socket just moves the unbounded queue into the kernel.
     overload: str = "block"
+    # scheduler slot for background repair: after each mutation batch the
+    # daemon offers the engine one bounded ``maintenance()`` call (a
+    # forest runs at most one migration step per offer, so the repair
+    # work amortizes across the mutation stream instead of cliffing)
+    maintenance: bool = True
 
 
 def pinned_knn(pinned, queries: np.ndarray, *, k: int, max_frontier: int):
@@ -186,6 +191,7 @@ class FrontendStats:
     n_full_dispatch: int = 0      # cohorts shipped because width was reached
     n_deadline_dispatch: int = 0  # cohorts shipped by the SLO deadline
     n_mutation_batches: int = 0
+    n_maintenance: int = 0        # maintenance slots that did repair work
     n_shed: int = 0               # admissions rejected with QueueFull
     queue_depth: int = 0          # gauges, updated on every queue touch
     mutation_queue_depth: int = 0
@@ -533,6 +539,21 @@ class ServeFrontend:
                 tk.err = exc
                 if tk.span is not obs.NULL_SPAN:
                     tk.span.set(error=type(exc).__name__)
+            else:
+                # scheduler slot: one bounded repair offer per applied
+                # batch, on this same single-writer thread (migration
+                # steps and mutation batches must serialize — both mutate
+                # the trees, and the WAL order is the replay contract).
+                # A repair failure is recorded as a fault, not surfaced on
+                # the user's ticket — their batch already applied.
+                if self.cfg.maintenance:
+                    try:
+                        maint = getattr(self.engine, "maintenance", None)
+                        if maint is not None and maint():
+                            with self._cond:
+                                self.stats.n_maintenance += 1
+                    except Exception as exc:  # noqa: BLE001
+                        obs.record_fault("frontend.maintenance", exc)
             finally:
                 tk.span.end()
                 tk._event.set()

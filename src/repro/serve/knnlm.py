@@ -106,14 +106,34 @@ class KnnLmDatastore:
         return n
 
     # -- batched online mutation (repro.stream) -------------------------
-    def enable_stream(self, wal_dir: str | None = None, **kw):
+    def enable_stream(self, wal_dir: str | None = None, *, shards: int = 0,
+                      **kw):
         """Route ``add_batch``/``evict_batch`` through the repro.stream
         write pipeline: conflict-free cohort batching (one device dispatch
         per batch instead of one per entry) with optional WAL durability.
-        Call after ``build``."""
-        from repro.stream import StreamingEngine, WriteAheadLog
+        Call after ``build``.
+
+        With ``shards`` > 1 the store is re-partitioned round-robin into a
+        ``StreamingForest`` instead of a single-tree engine: queries merge
+        per-shard descents, and ``maintenance()`` (offered by the
+        front-end scheduler after every mutation batch) repairs delete
+        skew — incrementally when ``rebalance_mode='incremental'`` is
+        passed through ``kw``."""
+        from repro.stream import (StreamingEngine, StreamingForest,
+                                  WriteAheadLog)
         wal = WriteAheadLog(wal_dir) if wal_dir else None
-        self.stream = StreamingEngine(self.engine.tree, wal=wal, **kw)
+        if shards and shards > 1:
+            if self.mesh is not None:
+                raise ValueError(
+                    "sharded streaming store is host-side; it does not "
+                    "compose with the mesh-replicated query path")
+            from repro.core.distributed import build_forest_trees
+            trees = build_forest_trees(self.keys, int(shards),
+                                       capacity=self.cfg.capacity,
+                                       metric=self.cfg.metric)
+            self.stream = StreamingForest(trees, wal=wal, **kw)
+        else:
+            self.stream = StreamingEngine(self.engine.tree, wal=wal, **kw)
         return self.stream
 
     def enable_frontend(self, **cfg):
@@ -150,6 +170,11 @@ class KnnLmDatastore:
         if self.stream is None or self.stream.wal is None:
             raise ValueError("enable_stream(wal_dir=...) before "
                              "enable_replication()")
+        if not hasattr(self.stream, "batcher"):
+            raise ValueError(
+                "socket replication here follows single-tree engines; "
+                "forest-sharded stores replicate through "
+                "stream.replica.Replica over a StreamingForest follower")
         if self.frontend is None:
             raise ValueError("enable_frontend() before enable_replication()")
         import os
@@ -194,9 +219,13 @@ class KnnLmDatastore:
         concurrent scheduler thread is applying.  Non-stream readers of
         ``engine.tree`` (engine.knn/validate, ``_place``) must only ever
         observe epoch-published versions, same as the ``knn_logits``
-        pinned-read path."""
+        pinned-read path.  Forest epochs publish shard *tuples* — there is
+        no single engine tree to resync, and every read path goes through
+        the pinned-epoch merge instead."""
         if self.stream is not None:
-            _, self.engine.tree = self.stream.epochs.current()
+            _, tree = self.stream.epochs.current()
+            if not isinstance(tree, tuple):
+                self.engine.tree = tree
 
     def _append_history(self, keys: np.ndarray, values: np.ndarray) -> None:
         """Amortised-O(1) append to the oid-indexed key/value history.
@@ -278,17 +307,25 @@ class KnnLmDatastore:
             from repro import obs
             from repro.core import smtree
             with self.stream.epochs.reading() as tree:
-                if obs.want_level_stats():
+                if isinstance(tree, tuple):
+                    # forest epoch: per-shard cohort descent + host top-k
+                    # merge, shared with the front-end read path
+                    from repro.serve.frontend import pinned_knn
+                    d, ids = pinned_knn(tree, np.asarray(h, np.float32),
+                                        k=self.cfg.k,
+                                        max_frontier=self.cfg.max_frontier)
+                elif obs.want_level_stats():
                     res, pruned = smtree.knn(
                         tree, self.shard_queries(h), k=self.cfg.k,
                         max_frontier=self.cfg.max_frontier,
                         level_stats=True)
                     obs.observe_query_result(res, pruned)
+                    d, ids = res.dists, np.asarray(res.ids)
                 else:
                     res = smtree.knn(tree, self.shard_queries(h),
                                      k=self.cfg.k,
                                      max_frontier=self.cfg.max_frontier)
-            d, ids = res.dists, np.asarray(res.ids)
+                    d, ids = res.dists, np.asarray(res.ids)
         else:
             from repro import obs
             res = self.engine.knn(self.shard_queries(h), k=self.cfg.k,

@@ -10,8 +10,10 @@ write pipeline:
     JSON manifest); every acknowledged batch is replayable.
   * ``epoch``     — epoch-based snapshot handoff: readers pin immutable
     tree versions while the writer advances.
-  * ``rebalance`` — skew detection + shard rebuilds after heavy delete
-    streams (the ROADMAP forest-rebalancing item).
+  * ``rebalance`` — skew detection + repair after heavy delete streams:
+    one-shot stop-the-world shard rebuilds (the baseline) or deterministic
+    ``MigrationPlan`` schedules executed one bounded, WAL-replayable,
+    epoch-gated step per mutation batch (DESIGN.md §16).
   * ``pipeline``  — ``StreamingEngine`` / ``StreamingForest`` orchestrators
     with snapshot + WAL-tail restore (bitwise-deterministic).
   * ``replica``   — WAL-shipping read replicas: followers that tail the
@@ -35,7 +37,10 @@ from repro.stream.faults import (FaultInjector, FaultPlan,  # noqa: F401
 from repro.stream.lease import (FenceGuard, Lease, LeaseLost,  # noqa: F401
                                 LeaseStore, Promotion, promote)
 from repro.stream.pipeline import StreamingEngine, StreamingForest  # noqa: F401
-from repro.stream.rebalance import (collect_stats, needs_rebalance,  # noqa: F401
+from repro.stream.rebalance import (GeometryMismatch,  # noqa: F401
+                                    MigrationPlan, MigrationStep,
+                                    check_geometry, collect_stats,
+                                    needs_rebalance, plan_migration,
                                     rebalance_shards)
 from repro.stream.replica import (DigestMismatch, Replica,  # noqa: F401
                                   ledger_digest, tree_digest)

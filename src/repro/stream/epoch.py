@@ -40,6 +40,7 @@ class EpochManager:
         self._lock = threading.Lock()
         self._versions: dict[int, Any] = {epoch: tree}
         self._refs: dict[int, int] = {epoch: 0}
+        self._meta: dict[int, Any] = {}
         self._latest = epoch
 
     # -- reader side -------------------------------------------------------
@@ -98,13 +99,25 @@ class EpochManager:
             self._refs[epoch] -= 1
             self._retire_locked()
 
+    def meta(self, epoch: int) -> Any:
+        """Writer-attached provenance for a resident ``epoch`` (``None``
+        when the publish carried none, or the version was retired).  The
+        streaming forest tags migration-step publishes so diagnostics can
+        tell a maintenance epoch from a mutation epoch."""
+        with self._lock:
+            return self._meta.get(epoch)
+
     # -- writer side -------------------------------------------------------
-    def publish(self, tree: Any) -> int:
-        """Install ``tree`` as the next epoch; returns its number."""
+    def publish(self, tree: Any, *, meta: Any = None) -> int:
+        """Install ``tree`` as the next epoch; returns its number.
+        ``meta`` attaches optional provenance retrievable via ``meta()``
+        while the version stays resident."""
         with self._lock:
             self._latest += 1
             self._versions[self._latest] = tree
             self._refs[self._latest] = 0
+            if meta is not None:
+                self._meta[self._latest] = meta
             self._retire_locked()
             latest, resident = self._latest, len(self._versions)
         if obs.enabled():
@@ -120,6 +133,7 @@ class EpochManager:
         for e in stale[:max(0, len(stale) - self.keep)]:
             del self._versions[e]
             del self._refs[e]
+            self._meta.pop(e, None)
 
     @property
     def resident(self) -> list[int]:

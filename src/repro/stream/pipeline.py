@@ -13,14 +13,25 @@ Two orchestrators over the stream primitives:
     same batcher, with background ``maintenance()`` firing the rebalancer
     when delete skew builds up.
 
+The forest's ``maintenance()`` runs in one of two rebalance modes:
+``stop_world`` (the original one-shot ``rebalance_shards`` rebuild, kept
+as the baseline and the replay path for old WALs) and ``incremental``
+(a deterministic ``MigrationPlan`` executed one bounded step per call —
+each step a delete-on-donor / insert-on-receiver cohort behind one epoch
+publish, DESIGN.md §16).
+
 Both support ``snapshot()`` (atomic checkpoint carrying the tree geometry
 and the WAL high-water mark) and ``restore()`` = snapshot + WAL tail
 replay.  Replay routes every record back through the identical code paths
-— batch records through the batcher, rebalance records through
-``rebalance_shards`` with the recorded seed — so the restored state is
-**bitwise identical** to the straight-line run (tests/test_stream_e2e.py).
+— batch records through the batcher, control records (rebalance /
+migration plan / migration step) through ``apply_control`` — so the
+restored state is **bitwise identical** to the straight-line run, even
+after a crash between migration steps (tests/test_stream_e2e.py,
+tests/test_migration.py).
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import numpy as np
@@ -31,9 +42,12 @@ from repro.core.smtree import OP_DELETE, OP_INSERT, TreeArrays, empty_tree
 from repro.stream.batcher import (BatchResult, MutationBatcher, check_oids,
                                   cut_cohorts, escalate_rows, pad_to_bucket)
 from repro.stream.epoch import EpochManager
-from repro.stream.rebalance import (collect_stats, live_objects,
-                                    needs_rebalance, rebalance_shards)
-from repro.stream.wal import KIND_BATCH, WriteAheadLog
+from repro.stream.rebalance import (MigrationPlan, collect_stats,
+                                    live_objects, needs_rebalance,
+                                    plan_migration, rebalance_shards)
+from repro.stream.wal import (KIND_BATCH, KIND_MIGRATION_PLAN,
+                              KIND_MIGRATION_STEP, KIND_REBALANCE,
+                              WriteAheadLog)
 
 __all__ = ["StreamingEngine", "StreamingForest"]
 
@@ -201,7 +215,20 @@ class StreamingForest:
                  max_batch: int = 4096, max_skew: float = 1.5,
                  min_objects: int = 64, mesh=None, axis: str = "model",
                  device_splits: bool = True, device_merges: bool = True,
-                 headroom_frac: float | None = 1 / 16):
+                 headroom_frac: float | None = 1 / 16,
+                 rebalance_mode: str = "stop_world",
+                 migration_step_objects: int = 64,
+                 free_floor: float | None = None):
+        if rebalance_mode not in ("stop_world", "incremental"):
+            raise ValueError(f"unknown rebalance_mode {rebalance_mode!r} "
+                             f"(expected 'stop_world' or 'incremental')")
+        self.rebalance_mode = rebalance_mode
+        self.migration_step_objects = int(migration_step_objects)
+        self.free_floor = free_floor
+        self._migration: dict | None = None   # {"plan": MigrationPlan,
+        #                                        "next": step index}
+        self.n_migration_steps = 0
+        self.objects_migrated = 0
         self.device_splits = device_splits
         self.device_merges = device_merges
         self.headroom_frac = headroom_frac
@@ -520,15 +547,170 @@ class StreamingForest:
 
     # -- maintenance -------------------------------------------------------
     def maintenance(self, *, log: bool = True) -> bool:
-        """Detect skew and rebalance; returns True when a rebuild fired."""
+        """Bounded background repair; returns True when repair work ran.
+
+        ``stop_world`` mode: detect skew and rebuild the touched shards in
+        one pass (the original behaviour).  ``incremental`` mode: when a
+        migration plan is active, execute exactly one bounded step;
+        otherwise consult the trigger and, when it fires, record the full
+        deterministic plan in the WAL and execute its first step.  At most
+        one step per call keeps the publish-time pause bounded regardless
+        of how deep the skew is — callers (the front-end mutation daemon,
+        the drill loops) invoke this once per mutation batch."""
+        if self._migration is not None:
+            self._migration_step(log=log)
+            return True
         stats = collect_stats(self.trees)
+        if obs.enabled():
+            obs.gauge("rebalance.skew").set(stats.skew)
         if not needs_rebalance(stats, max_skew=self.max_skew,
-                               min_objects=self.min_objects):
+                               min_objects=self.min_objects,
+                               free_floor=self.free_floor):
             return False
         seed = (self.wal.next_seq if self.wal is not None
                 else self.n_rebalances)
-        self._run_rebalance(int(seed), log=log)
+        if self.rebalance_mode == "stop_world":
+            self._run_rebalance(int(seed), log=log)
+            return True
+        plan = plan_migration(self.trees, seed=int(seed),
+                              step_objects=self.migration_step_objects)
+        if not plan.steps:
+            return False
+        if log and self.wal is not None:
+            self.wal.append_migration_plan(plan.to_params())
+        self._install_migration(plan)
+        self._migration_step(log=log)
         return True
+
+    def _install_migration(self, plan: MigrationPlan, *,
+                           next_step: int = 0) -> None:
+        if self._migration is not None:
+            raise ValueError("migration plan installed while another is "
+                             "still active (corrupt WAL or snapshot?)")
+        self._migration = {"plan": plan, "next": int(next_step)}
+        obs.record_event("stream.migration_plan", seed=plan.seed,
+                         steps=len(plan.steps), objects=plan.total)
+
+    @property
+    def migration_active(self) -> bool:
+        return self._migration is not None
+
+    def _extract(self, donor: int, oids: np.ndarray):
+        """(vecs, found) for ids on the donor shard.  Mesh mode gathers
+        through the owner-routed collective — tree pages stay device-
+        resident, only the [m, dim] vectors come back — padded to the
+        plan's step width so the jit cache holds one entry per forest
+        geometry."""
+        if self.mesh is not None:
+            from repro.core import distributed as dist
+            if self._stacked is None:
+                self._stacked = dist.stack_trees(
+                    [b.tree for b in self.batchers])
+            w = max(self.migration_step_objects, len(oids))
+            p_oids = np.full(w, -1, np.int32)
+            p_oids[:len(oids)] = oids
+            p_owner = np.full(w, -1, np.int32)
+            p_owner[:len(oids)] = donor
+            vecs, found = dist.forest_extract_objects(
+                self._stacked, self.mesh, p_oids, p_owner, axis=self.axis)
+            return (np.asarray(jax.device_get(vecs))[:len(oids)],
+                    np.asarray(jax.device_get(found))[:len(oids)])
+        vecs, found = smtree.extract_objects(self.batchers[donor].tree, oids)
+        return np.asarray(vecs), np.asarray(found)
+
+    def _migration_step(self, *, log: bool, expect: int | None = None) -> int:
+        """Execute one bounded move from the active plan: extract the
+        step's still-donor-owned objects and re-apply them as a normal
+        delete-on-donor / insert-on-receiver conflict-free cohort pair
+        through the standard apply path, then publish exactly one epoch.
+        Readers pinned to the previous epoch see each object on the donor;
+        the new epoch shows it on the receiver — never twice, never zero
+        times.  Returns the number of objects re-homed."""
+        mig = self._migration
+        if mig is None:
+            raise ValueError("no active migration plan")
+        idx = mig["next"]
+        if expect is not None and expect != idx:
+            raise ValueError(
+                f"WAL migration step {expect} does not match resume "
+                f"position {idx} (truncated or reordered log)")
+        plan: MigrationPlan = mig["plan"]
+        step = plan.steps[idx]
+        if log and self.wal is not None:
+            self.wal.append_migration_step({"seed": plan.seed, "step": idx})
+        t0 = time.perf_counter()
+        # ids may have been deleted or re-routed since planning: move only
+        # those still owned by the donor.  The owner map evolves
+        # identically under replay, so the filter is deterministic.
+        oids = np.asarray([o for o in step.oids
+                           if self.owner.get(int(o)) == step.donor],
+                          np.int32)
+        moved = 0
+        with obs.span("mutation.migration_step", n=len(oids), step=idx):
+            n = 0
+            if len(oids):
+                vecs, found = self._extract(step.donor, oids)
+                oids, vecs = oids[found], vecs[found]
+                n = len(oids)
+            if n:
+                ops = np.concatenate([np.full(n, OP_DELETE, np.int32),
+                                      np.full(n, OP_INSERT, np.int32)])
+                xs = np.concatenate([vecs, vecs]).astype(np.float32)
+                both = np.concatenate([oids, oids])
+                owner = np.concatenate(
+                    [np.full(n, step.donor, np.int32),
+                     np.full(n, step.receiver, np.int32)])
+                if self.mesh is not None:
+                    res = self._apply_mesh(ops, xs, both, owner)
+                else:
+                    res = self._apply_host(ops, xs, both, owner)
+                st = res.statuses
+                for i, o in enumerate(oids):
+                    o = int(o)
+                    if st[n + i] == smtree.ST_APPLIED:
+                        self.owner[o] = step.receiver
+                        moved += 1
+                    elif st[i] == smtree.ST_APPLIED:
+                        # delete landed but the insert did not: the object
+                        # is gone from both shards — drop it from the map
+                        # rather than advertise a phantom owner
+                        self.owner.pop(o, None)
+        mig["next"] = idx + 1
+        if mig["next"] >= len(plan.steps):
+            self._migration = None
+            self.n_rebalances += 1
+            obs.record_event("stream.migration_done", seed=plan.seed,
+                             steps=len(plan.steps))
+        self._ensure_headroom()
+        with obs.span("mutation.publish"):
+            self.epochs.publish(tuple(self.trees),
+                                meta={"migration": {"seed": plan.seed,
+                                                    "step": idx}})
+        self.n_migration_steps += 1
+        self.objects_migrated += moved
+        if obs.enabled():
+            obs.counter("rebalance.migration_steps_total").inc()
+            obs.counter("rebalance.objects_moved_total").inc(moved)
+            obs.histogram("rebalance.step_pause_s").observe(
+                time.perf_counter() - t0)
+        return moved
+
+    def apply_control(self, kind: str, params: dict) -> None:
+        """Replay one WAL control record through the same state machine
+        the live writer ran.  ``rebalance`` records re-run the stop-world
+        rebuild with the recorded seed (also the path for WALs predating
+        incremental mode); ``migration_plan`` records re-install the
+        recorded schedule; ``migration_step`` records re-execute the next
+        bounded move, asserting the recorded index so a truncated or
+        reordered log fails loudly instead of silently diverging."""
+        if kind == KIND_REBALANCE:
+            self._run_rebalance(int(params["seed"]), log=False)
+        elif kind == KIND_MIGRATION_PLAN:
+            self._install_migration(MigrationPlan.from_params(params))
+        elif kind == KIND_MIGRATION_STEP:
+            self._migration_step(log=False, expect=int(params["step"]))
+        else:
+            raise ValueError(f"unknown WAL control record kind {kind!r}")
 
     def _run_rebalance(self, seed: int, *, log: bool) -> None:
         obs.record_event("stream.rebalance", seed=seed)
@@ -555,11 +737,20 @@ class StreamingForest:
 
     def _extra(self) -> dict:
         proto = self.trees[0]
+        mig = self._migration
         return {"kind": "smforest", "n_shards": self.n_shards,
                 "capacity": proto.capacity, "dim": proto.dim,
                 "metric": proto.metric, "min_fill": proto.min_fill,
                 "shard_max_nodes": [t.max_nodes for t in self.trees],
                 "n_rebalances": self.n_rebalances,
+                "rebalance_mode": self.rebalance_mode,
+                "n_migration_steps": self.n_migration_steps,
+                # a snapshot taken mid-plan must carry the remaining
+                # schedule: the WAL tail after this point holds only step
+                # records, and replaying them needs the installed plan
+                "migration": (None if mig is None else
+                              {"params": mig["plan"].to_params(),
+                               "next": int(mig["next"])}),
                 "wal_seq": (self.wal.next_seq - 1 if self.wal is not None
                             else -1)}
 
@@ -576,8 +767,10 @@ class StreamingForest:
     def restore(cls, ckpt_dir: str, *, wal: WriteAheadLog | None = None,
                 ckpt=None, **kw) -> "StreamingForest":
         """Last snapshot + WAL tail replay (bitwise-deterministic: batch
-        records re-run the batcher, rebalance records re-run the rebuild
-        with the recorded seed)."""
+        records re-run the batcher, control records re-run through
+        ``apply_control`` — a snapshot taken mid-migration re-installs the
+        remaining plan from the manifest before the tail's step records
+        resume it)."""
         from repro.core.distributed import stack_trees, unstack_forest
         from repro.dist.checkpoint import read_manifest, restore_checkpoint
         manifest = read_manifest(ckpt_dir)
@@ -588,14 +781,22 @@ class StreamingForest:
         state, _ = restore_checkpoint(ckpt_dir, {"forest": template},
                                       step=manifest["step"])
         trees = unstack_forest(state["forest"], max_nodes=shard_nodes)
+        kw.setdefault("rebalance_mode",
+                      extra.get("rebalance_mode", "stop_world"))
         forest = cls(trees, wal=wal, ckpt=ckpt, **kw)
         forest._step = manifest["step"] + 1
         forest.n_rebalances = extra.get("n_rebalances", 0)
+        forest.n_migration_steps = extra.get("n_migration_steps", 0)
+        mig = extra.get("migration")
+        if mig:
+            forest._install_migration(
+                MigrationPlan.from_params(mig["params"]),
+                next_step=int(mig["next"]))
         if wal is not None:
             for rec in wal.replay(after_seq=extra["wal_seq"]):
                 if rec.kind == KIND_BATCH:
                     forest.apply(rec.ops.astype(np.int32), rec.xs, rec.oids,
                                  log=False)
                 else:
-                    forest._run_rebalance(int(rec.params["seed"]), log=False)
+                    forest.apply_control(rec.kind, rec.params or {})
         return forest

@@ -179,8 +179,11 @@ class Replica:
                     self.follower.apply(rec.ops.astype(np.int32), rec.xs,
                                         rec.oids, log=False)
                 else:
-                    self.follower._run_rebalance(int(rec.params["seed"]),
-                                                 log=False)
+                    # control records (rebalance / migration plan /
+                    # migration step) replay through the follower's own
+                    # state machine so incremental migrations interleave
+                    # bitwise-identically with the batch records
+                    self.follower.apply_control(rec.kind, rec.params or {})
                 # advance seq per record, not per poll: a crash mid-poll
                 # resumes after the last *applied* record (offset is
                 # per-poll, but the seq filter makes the re-scan skip)

@@ -46,6 +46,13 @@ _LEN = struct.Struct("<I")
 
 KIND_BATCH = "batch"
 KIND_REBALANCE = "rebalance"
+# Incremental-rebalancing control records (DESIGN.md §16).  A plan record
+# carries the full deterministic migration schedule; each step record marks
+# exactly where in the mutation order one bounded move executed.  Both are
+# params-only control frames, so the framing/crc machinery below needs no
+# special case for them.
+KIND_MIGRATION_PLAN = "migration_plan"
+KIND_MIGRATION_STEP = "migration_step"
 
 
 class FencedOut(RuntimeError):
@@ -520,6 +527,20 @@ class WriteAheadLog:
         """Frame a rebalance decision so tail replay re-executes it at the
         exact same point in the mutation order."""
         return self._append(WalRecord(KIND_REBALANCE, self.next_seq,
+                                      params=params))
+
+    def append_migration_plan(self, params: dict) -> int:
+        """Frame a full migration schedule (seed + per-step donor/receiver/
+        oid ranges) at the point in the mutation order where the planner
+        fired; replay re-installs the identical plan."""
+        return self._append(WalRecord(KIND_MIGRATION_PLAN, self.next_seq,
+                                      params=params))
+
+    def append_migration_step(self, params: dict) -> int:
+        """Frame one executed migration step so replay re-runs the bounded
+        move at the exact same interleaving point — including resuming a
+        partially-executed plan after a crash."""
+        return self._append(WalRecord(KIND_MIGRATION_STEP, self.next_seq,
                                       params=params))
 
     def replay(self, after_seq: int = -1) -> Iterator[WalRecord]:

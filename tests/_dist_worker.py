@@ -496,6 +496,58 @@ def scenario_moe_ep_equivalence():
                                rtol=2e-4, atol=2e-4)
 
 
+def scenario_forest_migration_mesh():
+    """Incremental migration on an 8-shard mesh forest: a skewed delete
+    drill trips the planner, bounded migration steps run through the
+    mesh extract + cohort-apply collectives with the stacked forest
+    staying device-resident throughout, and every shard stays bitwise
+    equal to the host-path forest after each step."""
+    from repro.core.distributed import build_forest_trees
+    from repro.core.engine import SMTreeEngine
+    from repro.stream import StreamingForest, collect_stats
+    mesh = jax.make_mesh((8,), ("model",))
+    rng = np.random.default_rng(23)
+    X = rng.random((4096, 6)).astype(np.float32)
+
+    def build():
+        return StreamingForest(
+            [t for t in build_forest_trees(X, 8, capacity=8)],
+            mesh=mesh if build.on_mesh else None,
+            max_skew=1.3, min_objects=64, rebalance_mode="incremental",
+            migration_step_objects=48)
+
+    build.on_mesh = True
+    sf_mesh = build()
+    build.on_mesh = False
+    sf_host = build()
+    victims = np.asarray([o for o in range(4096) if o % 8 < 3], np.int32)
+    with _use_mesh(mesh):
+        for c in range(0, len(victims), 512):
+            chunk = victims[c:c + 512]
+            sf_mesh.delete_batch(X[chunk], chunk)
+            sf_host.delete_batch(X[chunk], chunk)
+        assert collect_stats(sf_mesh.trees).skew >= 2.0
+        steps = 0
+        while sf_mesh.maintenance():
+            assert sf_host.maintenance()
+            steps += 1
+            # mesh steps must not bounce the forest off the devices
+            assert sf_mesh._stacked is not None, \
+                f"stacked forest left the mesh at step {steps}"
+            for s, (a, b) in enumerate(zip(sf_mesh.trees, sf_host.trees)):
+                for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                    np.testing.assert_array_equal(
+                        np.asarray(la), np.asarray(lb),
+                        err_msg=f"shard {s} diverged at step {steps}")
+        assert not sf_host.maintenance()
+    assert steps >= 2, "drill completed without incremental steps"
+    assert sf_mesh.owner == sf_host.owner
+    assert sf_mesh.objects_migrated == sf_host.objects_migrated > 0
+    assert collect_stats(sf_mesh.trees).skew <= 1.3
+    for t in sf_mesh.trees:
+        SMTreeEngine(t).validate()
+
+
 if __name__ == "__main__":
     name = sys.argv[1]
     globals()[f"scenario_{name}"]()

@@ -15,6 +15,7 @@ SCENARIOS = [
     "forest_stream",
     "forest_device_splits",
     "forest_device_merges",
+    "forest_migration_mesh",
     "forest_knn_cohort_parity",
     "replica_forest_mesh",
     "promote_follower_mesh",
