@@ -8,6 +8,10 @@ elsewhere).  ``speedup_cohort_vs_perquery_*`` rows record the headline
 number; the Pallas interpret path is correctness-only and excluded from
 timing off-TPU.
 
+The parent-distance pre-filter matrix (DESIGN.md §17) compares the cohort
+descent with the filter on vs off — wall time and metric evals per query —
+and emits the ``frontier_parent_prune_*`` gate rows CI checks.
+
 Also: bulk build, engine-vs-ref page hits, insert/delete fast-path rates,
 and the sharded-serve-vs-single-device decode comparison (ROADMAP item) run
 as subprocesses over ``repro.launch.serve``.
@@ -44,6 +48,14 @@ else:
     NS = [10_000, 100_000]
     BATCHES = [1, 64, 1024]
 METRICS = ["d_inf", "l2"]
+# the parent-distance pre-filter comparison covers every metric the
+# descent supports, at the largest dataset of the run
+PRUNE_METRICS = ["d_inf", "l2", "l1"]
+# eval-ratio the gate row demands (pruned/unpruned metric evals): the PR
+# acceptance number, >= 25% of evals eliminated.  Holds at every scale —
+# at smoke scale the pre-eval parent upper bound leaves an even larger
+# margin (~0.35) than at b=1024 / n=100k (~0.74).
+PRUNE_EVAL_TARGET = 0.75
 K = 10
 MAX_FRONTIER = 64
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -53,18 +65,18 @@ def _cohort_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-def _time_knn(eng, Q, impl) -> float:
+def _time_knn(eng, Q, impl, **kw) -> float:
     """Warm (compile) then time; iteration count adapts to per-call cost."""
-    res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER, impl=impl)
+    res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER, impl=impl, **kw)
     jax.block_until_ready(res.dists)
     t0 = time.perf_counter()
-    res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER, impl=impl)
+    res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER, impl=impl, **kw)
     jax.block_until_ready(res.dists)
     warm = time.perf_counter() - t0
     iters = max(3, min(20, int(2.0 / max(warm, 1e-4))))
     t0 = time.perf_counter()
     for _ in range(iters):
-        res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER, impl=impl)
+        res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER, impl=impl, **kw)
     jax.block_until_ready(res.dists)
     return (time.perf_counter() - t0) / iters
 
@@ -92,6 +104,62 @@ def _query_matrix(report):
                            round(dt * 1e3, 2))
                 report(f"speedup_cohort_vs_perquery_b{b}_n{n}_{metric}",
                        round(times["perquery"] / times[cohort], 2))
+
+
+def _prune_matrix(report):
+    """Parent-distance pre-filter (DESIGN.md §17): pruned vs unpruned
+    cohort descent at the largest dataset of this run, per metric and
+    batch — wall time plus metric evals per query straight off the
+    ``QueryResult.dist_evals`` reduction (which counts evaluations
+    *performed*, so the filter's savings show up directly).  Emits the
+    scale-independent gate rows CI checks:
+
+    * ``frontier_parent_prune_eval_ratio`` — pruned/unpruned evals at the
+      largest batch, summed over metrics (lower is better; informational).
+    * ``frontier_parent_prune_qps_ratio`` — unpruned/pruned wall time at
+      the same config, >= 1 when the mask's overhead doesn't eat the win.
+    * ``frontier_parent_prune_ok`` — 1.0 iff the eval ratio meets
+      PRUNE_EVAL_TARGET; the row check_bench gates at min-ratio 1.0
+      (min-ratio is higher-is-better, so the <=-bound is encoded as a
+      boolean row).
+    """
+    rng = np.random.default_rng(21)
+    cohort = _cohort_impl()
+    n = NS[-1]
+    bs = [b for b in BATCHES if b >= 64] or BATCHES[-1:]
+    X = make_dataset("clustered", n, seed=7)[:, :10].copy()
+    agg = {"ev_on": 0.0, "ev_off": 0.0, "t_on": 0.0, "t_off": 0.0}
+    for metric in PRUNE_METRICS:
+        eng = SMTreeEngine.build(X, capacity=32, metric=metric)
+        for b in bs:
+            Q = jnp.asarray(
+                X[rng.integers(0, n, b)]
+                + rng.normal(0, 0.01, (b, 10)).astype(np.float32),
+                jnp.float32)
+            row = {}
+            for tag, pp in (("prune", True), ("noprune", False)):
+                dt = _time_knn(eng, Q, cohort, parent_prune=pp)
+                res = eng.knn(Q, k=K, max_frontier=MAX_FRONTIER,
+                              impl=cohort, parent_prune=pp)
+                ev = float(np.sum(np.asarray(res.dist_evals))) / b
+                report(f"knn_b{b}_n{n}_{metric}_{cohort}_{tag}_ms",
+                       round(dt * 1e3, 2))
+                report(f"dist_evals_per_query_b{b}_n{n}_{metric}_{tag}",
+                       round(ev, 1))
+                row[tag] = (dt, ev)
+            report(f"prune_eval_ratio_b{b}_n{n}_{metric}",
+                   round(row["prune"][1] / row["noprune"][1], 3))
+            if b == bs[-1]:
+                agg["t_on"] += row["prune"][0]
+                agg["t_off"] += row["noprune"][0]
+                agg["ev_on"] += row["prune"][1]
+                agg["ev_off"] += row["noprune"][1]
+    ratio = agg["ev_on"] / agg["ev_off"]
+    report("frontier_parent_prune_eval_ratio", round(ratio, 3))
+    report("frontier_parent_prune_qps_ratio",
+           round(agg["t_off"] / agg["t_on"], 3))
+    report("frontier_parent_prune_ok",
+           1.0 if ratio <= PRUNE_EVAL_TARGET else 0.0)
 
 
 def _serve_case(report):
@@ -134,6 +202,7 @@ def _serve_case(report):
 
 def run(report):
     _query_matrix(report)
+    _prune_matrix(report)
 
     # ref-impl page hits on a comparable workload (paper-faithful DFS order)
     n_ref = 500 if SMOKE else 2_500

@@ -104,10 +104,11 @@ def run(report):
     # beyond paper: the JAX engine's descent cost through the obs plane's
     # paper-level counters — distance computations and nodes visited per
     # query are the device-side analogue of the ref impl's page-hit IO
-    # columns above, and pruned-by-bound (from the level-stats descent
-    # variant) is the quantity the roadmap's cascading-pruning item will
-    # move.  Counters accumulate from the QueryResult reductions the
-    # serving paths already materialise; no extra device sync.
+    # columns above, and pruned-by-parent (from the level-stats descent
+    # variant) is the eval count the parent-distance pre-filter saves
+    # (DESIGN.md §17).  Counters accumulate from the QueryResult
+    # reductions the serving paths already materialise; no extra device
+    # sync.
     import jax
 
     from repro import obs
@@ -139,6 +140,11 @@ def run(report):
                round(m["engine.nodes_visited_total"] / nq, 1))
         report("engine_pruned_per_query",
                round(m.get("engine.pruned_by_bound_total", 0) / nq, 1))
+        # entries the parent-distance pre-filter dropped *before* any
+        # metric eval (DESIGN.md §17) — these are the evals saved;
+        # dist_evals_per_query above already excludes them
+        report("engine_pruned_parent_per_query",
+               round(m.get("engine.pruned_by_parent_total", 0) / nq, 1))
     finally:
         obs.disable()
         obs.reset()

@@ -192,7 +192,8 @@ def common_static_height(forest: TreeArrays) -> int | None:
 # mesh-resident control plane exists to avoid).
 @functools.lru_cache(maxsize=None)
 def _forest_knn_fn(mesh: Mesh, axis: str, batch_axis: str | None, k: int,
-                   max_frontier: int, static_height: int | None):
+                   max_frontier: int, static_height: int | None,
+                   parent_prune: bool):
     in_specs = (P(axis), P(batch_axis))
     out_specs = (P(batch_axis), P(batch_axis))
 
@@ -202,7 +203,8 @@ def _forest_knn_fn(mesh: Mesh, axis: str, batch_axis: str | None, k: int,
     def run(forest_slice, q):
         tree = _local_tree(forest_slice)
         res = smtree.knn(tree, q, k=k, max_frontier=max_frontier,
-                         static_height=static_height)
+                         static_height=static_height,
+                         parent_prune=parent_prune)
         # k-way merge across shards: gather candidates, top-k
         all_d = jax.lax.all_gather(res.dists, axis)            # [S, b, k]
         all_i = jax.lax.all_gather(res.ids, axis)
@@ -218,7 +220,8 @@ def _forest_knn_fn(mesh: Mesh, axis: str, batch_axis: str | None, k: int,
 
 def forest_knn(forest: TreeArrays, mesh: Mesh, queries: jax.Array, *,
                k: int = 8, axis: str = "model", max_frontier: int = 64,
-               batch_axis: str | None = None):
+               batch_axis: str | None = None,
+               parent_prune: bool | None = None):
     """Batched global kNN over the sharded forest.
 
     queries: [b, dim] (replicated or sharded over ``batch_axis``).
@@ -228,11 +231,17 @@ def forest_knn(forest: TreeArrays, mesh: Mesh, queries: jax.Array, *,
     plumbed through as a static argument, so each shard runs the PR-2
     cohort fast path (fused frontier scoring) instead of the per-query
     fallback whenever all shards share one height — which balanced
-    round-robin bulk builds guarantee in practice.
+    round-robin bulk builds guarantee in practice.  ``parent_prune`` is
+    resolved here (None → ``REPRO_PARENT_PRUNE``) and baked into the
+    cached collective, so the per-shard descents run the parent-distance
+    pre-filter with bitwise-identical merged results either way
+    (DESIGN.md §17).
     """
     static_height = common_static_height(forest)
     return _forest_knn_fn(mesh, axis, batch_axis, k, max_frontier,
-                          static_height)(forest, queries)
+                          static_height,
+                          smtree._resolve_parent_prune(parent_prune)
+                          )(forest, queries)
 
 
 @functools.lru_cache(maxsize=None)

@@ -101,13 +101,22 @@ def _jax_barrier():
 
 def _pin_rounding(x):
     """Keep XLA:CPU from contracting the squares into the fold's adds as
-    FMAs — contraction is fusion-context-dependent, so without this barrier
+    FMAs — contraction is fusion-context-dependent, so without this pin
     the same l2 distance can differ by an ulp between e.g. a Pallas
     interpret-mode kernel and a plain gather (breaking bitwise parity).
-    No-op on numpy."""
+
+    The optimization barrier alone is NOT sufficient: XLA:CPU strips
+    barriers before fusion, and LLVM then contracts ``fadd(fmul, ·)``
+    into an FMA in small fusion contexts (observed on the scalar pdist
+    eval inside the fused insert fast path — 1-ulp drift vs the numpy
+    fold, caught by tests/test_pdist_invariant.py).  ``max(x, 0)`` is an
+    identity for the squares this guards but interposes an op LLVM's
+    contraction pattern cannot see through, so the product is rounded to
+    f32 exactly once at every call site.  No-op on numpy."""
     if isinstance(x, np.ndarray):
         return x
-    return _jax_barrier()(x)
+    import jax.numpy as jnp
+    return jnp.maximum(_jax_barrier()(x), 0.0)
 
 
 @register_metric("d_inf")

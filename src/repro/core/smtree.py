@@ -51,6 +51,12 @@ _INF = jnp.inf
 # can exceed the folded bound by an ulp — pad the prune test so borderline
 # subtrees are visited rather than (incorrectly) pruned
 _EPS = 1e-5
+# leaf-level chunk count in the cohort descent: the frontier is scored in
+# this many sequential slices with a top-k merge between them, so r_q
+# tightens toward the true kth-NN distance before the far leaves are
+# scored (see _knn_cohort).  Purely a schedule knob — results are exact
+# kNN for any value >= 1.
+_LEAF_CHUNKS = 4
 
 
 # --------------------------------------------------------------------------
@@ -324,9 +330,30 @@ def _resolve_impl(impl: str | None) -> str:
     return impl
 
 
+_PARENT_PRUNE_VALUES = ("auto", "0", "1")
+
+
+def _resolve_parent_prune(parent_prune: bool | None) -> bool:
+    """Resolve the parent-distance pre-filter toggle (DESIGN.md §17).
+
+    None → the ``REPRO_PARENT_PRUNE`` env var ('auto'/'1' = on — the
+    default, since results are bitwise identical either way; '0' = off,
+    the A/B lever the benches and parity tests use).  Anything else raises
+    rather than silently running unfiltered."""
+    if parent_prune is not None:
+        return bool(parent_prune)
+    v = os.environ.get("REPRO_PARENT_PRUNE", "auto")
+    if v not in _PARENT_PRUNE_VALUES:
+        raise ValueError(
+            f"REPRO_PARENT_PRUNE must be one of {_PARENT_PRUNE_VALUES}; "
+            f"got {v!r}")
+    return v != "0"
+
+
 def knn(tree: TreeArrays, queries: jax.Array, *, k: int = 1,
         max_frontier: int = 64, impl: str | None = None,
-        static_height: int | None = None, level_stats: bool = False):
+        static_height: int | None = None, level_stats: bool = False,
+        parent_prune: bool | None = None):
     """Batched k-NN: level-synchronous cohort descent with dynamic radius.
 
     queries: [b, dim].  Exact when ``overflow`` is False (frontier never
@@ -338,21 +365,33 @@ def knn(tree: TreeArrays, queries: jax.Array, *, k: int = 1,
     per-query engine.
 
     ``level_stats=True`` returns ``(QueryResult, pruned)`` where pruned is
-    ``[n_internal_levels, b]`` int32 — per-level pruned-by-bound counts
-    (entries whose d_min exceeded the query radius).  It is a *static*
-    flag: a separate jit cache entry that leaves the default geometry
-    untouched (observability's paper counters; DESIGN.md §15).  ``pruned``
-    is None when the per-query fallback engine served the call.
+    a ``(by_bound, by_parent)`` pair of int32 stacks — ``by_bound``
+    ``[n_internal_levels, b]`` counts entries whose d_min bound excluded
+    their subtree; ``by_parent`` ``[height, b]`` counts entries the
+    parent-distance pre-filter dropped *before* any metric eval
+    (DESIGN.md §17; all-zero with ``parent_prune`` off, and at the root
+    level, which has no parent).  It is a *static* flag: a separate jit
+    cache entry that leaves the default geometry untouched
+    (observability's paper counters; DESIGN.md §15).  ``pruned`` is None
+    when the per-query fallback engine served the call.
+
+    ``parent_prune`` toggles the triangle-inequality pre-filter
+    ``|d(q,parent) − pdist| > r_q + r`` ahead of each level's metric eval
+    (None → ``REPRO_PARENT_PRUNE`` env, default on).  Results are bitwise
+    identical on or off; only ``dist_evals`` (which counts *performed*
+    evaluations) changes.
     """
     queries = jnp.asarray(queries, jnp.float32)
     return _query(tree, queries, k, max_frontier, jnp.float32(_INF),
                   _resolve_impl(impl), static_height,
-                  level_stats=level_stats)
+                  level_stats=level_stats,
+                  parent_prune=_resolve_parent_prune(parent_prune))
 
 
 def range_search(tree: TreeArrays, queries: jax.Array, radius: jax.Array, *,
                  max_results: int = 128, max_frontier: int = 64,
-                 impl: str | None = None) -> QueryResult:
+                 impl: str | None = None,
+                 parent_prune: bool | None = None) -> QueryResult:
     """Batched range query: all objects within ``radius`` (per-query scalar or
     broadcast).  Returns the closest ``max_results`` matches.  The overflow
     flag is conservative: it is set whenever ``max_results`` rows are
@@ -362,7 +401,8 @@ def range_search(tree: TreeArrays, queries: jax.Array, radius: jax.Array, *,
     radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32),
                               (queries.shape[0],))
     res = _query(tree, queries, max_results, max_frontier, radius,
-                 _resolve_impl(impl))
+                 _resolve_impl(impl),
+                 parent_prune=_resolve_parent_prune(parent_prune))
     return _range_filter(res, radius, max_results)
 
 
@@ -377,7 +417,7 @@ def _range_filter(res: QueryResult, radius, max_results: int) -> QueryResult:
 
 def _query(tree: TreeArrays, queries: jax.Array, k: int, F: int, r_cap,
            impl: str, static_height: int | None = None, *,
-           level_stats: bool = False):
+           level_stats: bool = False, parent_prune: bool = True):
     """Dispatch: the cohort engine unrolls the descent over the concrete tree
     height (leaves are all at one depth, so each level is statically either
     internal or leaf).  In traced contexts (e.g. the sharded forest's
@@ -399,15 +439,15 @@ def _query(tree: TreeArrays, queries: jax.Array, k: int, F: int, r_cap,
     interpret = jax.default_backend() != "tpu"
     return _knn_cohort(tree, queries, r_cap, k=k, F=F, height=height,
                        impl=impl, interpret=interpret,
-                       level_stats=level_stats)
+                       level_stats=level_stats, prune=parent_prune)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "F", "height", "impl", "interpret",
-                                    "level_stats"))
+                                    "level_stats", "prune"))
 def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
                 F: int, height: int, impl: str, interpret: bool,
-                level_stats: bool = False):
+                level_stats: bool = False, prune: bool = True):
     """Level-synchronous query-cohort descent (the fast path).
 
     All ``b`` queries advance one level per step, sharing one fused frontier
@@ -431,9 +471,32 @@ def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
 
     ``level_stats`` is static so the default (False) trace emits exactly
     the ops it always did; the True variant additionally stacks per-level
-    pruned-by-bound counts and only ever compiles when observability asks
-    for it.
+    pruned-by-bound and pruned-by-parent counts and only ever compiles
+    when observability asks for it.
+
+    ``prune`` (static) turns on the parent-distance pre-filter
+    (DESIGN.md §17): each frontier slot carries ``qpd`` — the distance
+    d(q, routing object) computed at the level that *admitted* the node —
+    and the scorer drops entries with ``|qpd − pdist| > r_q + r`` before
+    the metric eval.  The filter threshold pads by 2·_EPS (the prune
+    test's _EPS plus f32 triangle rounding), so every filtered entry
+    provably fails the d − r ≤ r_q + _EPS test and results stay bitwise
+    identical; ``dist_evals`` counts evaluations actually performed, so
+    it (alone) shrinks.  The root level has no parent — level 0 always
+    scores unfiltered.
+
+    The leaf level is *chunked*: the frontier arrives sorted by d − r
+    (top_k compaction order), so scoring it in _LEAF_CHUNKS sequential
+    slices and merging the top-k between slices tightens r_q toward the
+    true kth-NN distance before the far leaves are touched — that is
+    where the pre-filter earns its keep (DESIGN.md §17).  Chunking is
+    emitted identically with the filter on and off (per-chunk r_q is the
+    same value in both traces), so the bitwise-identity argument applies
+    chunk by chunk, and the unpruned path still evaluates every valid
+    entry — only wall-clock layout changes, not its dist_evals.
     """
+    from repro.kernels.frontier import frontier_scores
+
     b = queries.shape[0]
     cap = tree.capacity
     r_cap = jnp.broadcast_to(jnp.asarray(r_cap, jnp.float32), (b,))
@@ -446,6 +509,7 @@ def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
     leaf_valid = tree.valid & tree.is_leaf[:, None]
 
     frontier = jnp.full((b, 1), tree.root, jnp.int32)
+    qpd = jnp.full((b, 1), _INF, jnp.float32)   # d(q, parent) per slot
     topk_d = jnp.full((b, k), _INF, jnp.float32)
     topk_i = jnp.full((b, k), -1, jnp.int32)
     ub = jnp.full((b,), _INF, jnp.float32)
@@ -453,27 +517,66 @@ def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
     dist_evals = jnp.zeros((b,), jnp.int32)
     overflow = jnp.zeros((b,), bool)
     pruned_levels = []          # level_stats only: [b] per internal level
+    parent_levels = []          # level_stats only: [b] per level
 
     for lvl in range(height):
         w = widths[lvl]
         fvalid = frontier >= 0                              # [b, w]
         nodes = jnp.maximum(frontier, 0)
-        evalid = tree.valid[nodes] & fvalid[:, :, None]     # [b, w, cap]
         page_hits += jnp.sum(fvalid, axis=1, dtype=jnp.int32)
-        dist_evals += jnp.sum(evalid, axis=(1, 2), dtype=jnp.int32)
 
-        if impl == "pallas":
-            from repro.kernels.frontier import frontier_scores_pallas
-            dmax, score, leaf_d = frontier_scores_pallas(
-                frontier, queries, tree.vecs, tree.radius, internal_valid,
-                leaf_valid, metric=tree.metric, interpret=interpret)
-        else:
-            from repro.kernels.frontier import frontier_scores_xla
-            dmax, score, leaf_d = frontier_scores_xla(
-                frontier, queries, tree.vecs, tree.radius, internal_valid,
-                leaf_valid, metric=tree.metric)
+        # the root has no parent routing object: level 0 scores unfiltered
+        use_filter = prune and lvl > 0
+        if lvl > 0:
+            # pre-eval kth-NN upper bound from parent distances alone
+            # (DESIGN.md §17): two triangle hops give d(q, x) <= qpd +
+            # pdist(e) + r(e) for every object x under entry e, and each
+            # valid entry covers >= min_fill^rem disjoint objects, so the
+            # j-th smallest such bound caps the kth-NN distance before
+            # this level runs a single metric eval — exactly when the
+            # pre-filter needs a tight r_q.  It feeds r_q in the pruned
+            # AND unpruned traces (identical values), so on/off bitwise
+            # identity is untouched.
+            pd_ub = tree.pdist[nodes] + tree.radius[nodes]   # [b, w, cap]
+            ok = tree.valid[nodes] & fvalid[:, :, None]
+            ubnd = jnp.where(ok, qpd[:, :, None] + pd_ub,
+                             _INF).reshape(b, w * cap)
+            j_pre = -(-k // max(1, tree.min_fill) ** (height - 1 - lvl))
+            if j_pre == 1:
+                ub = jnp.minimum(ub, jnp.min(ubnd, axis=1) + _EPS)
+            elif j_pre <= w * cap:
+                ub = jnp.minimum(
+                    ub, -jax.lax.top_k(-ubnd, j_pre)[0][:, j_pre - 1]
+                    + _EPS)
 
         if lvl < height - 1:
+            if use_filter:
+                # pre-level query radius — what the filter may assume.
+                # The level body's r_q is computed after this level's ub
+                # update and can only shrink, so filtering against the
+                # pre-level value is conservative (never drops an entry
+                # the prune test would have kept; DESIGN.md §17).
+                rq_pre = jnp.minimum(jnp.minimum(topk_d[:, k - 1], r_cap),
+                                     ub)
+                filt = dict(pdist=tree.pdist, qpd=qpd, rq=rq_pre)
+            else:
+                filt = {}
+            dmax, score, leaf_d, dq = frontier_scores(
+                frontier, queries, tree.vecs, tree.radius, internal_valid,
+                leaf_valid, metric=tree.metric, impl=impl,
+                interpret=interpret, **filt)
+
+            # evaluations actually performed: finite outputs ⇔ the scorer
+            # ran the metric for that entry (valid, on a live slot, not
+            # filtered).  With the filter off this equals the old
+            # valid-entry count.
+            performed = jnp.isfinite(dmax) | jnp.isfinite(leaf_d)
+            n_eval = jnp.sum(performed, axis=(1, 2), dtype=jnp.int32)
+            dist_evals += n_eval
+            if level_stats:
+                evalid = tree.valid[nodes] & fvalid[:, :, None]
+                parent_levels.append(
+                    jnp.sum(evalid, axis=(1, 2), dtype=jnp.int32) - n_eval)
             # --- internal level: d_max bound, prune, compact the frontier
             # r covers the *whole* subtree, and every non-root node holds at
             # least min_fill entries, so an entry at this level covers >=
@@ -497,9 +600,11 @@ def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
             # them out of imask when r_q itself is still infinite
             imask = (score <= r_q[:, None] + _EPS) & (score < _INF)
             if level_stats:
-                # valid entries whose d_min bound excluded their subtree
+                # scored entries whose d_min bound excluded their subtree
+                # (isfinite(score) ⇔ the metric ran for this entry, so
+                # parent-filtered entries are not double-counted here)
                 pruned_levels.append(jnp.sum(
-                    evalid.reshape(b, w * cap) & ~imask,
+                    jnp.isfinite(score) & ~imask,
                     axis=1, dtype=jnp.int32))
             sc = jnp.where(imask, score, _INF)
             childs = tree.child[nodes].reshape(b, w * cap)
@@ -509,24 +614,67 @@ def _knn_cohort(tree: TreeArrays, queries: jax.Array, r_cap, *, k: int,
             frontier = jnp.where(
                 sel_ok, jnp.take_along_axis(childs, order, axis=1), -1)
             overflow |= jnp.sum(imask, axis=1) > w_out
+            # carry d(q, routing object) of each admitted entry: it is
+            # the next level's d(q, parent), and the child's pdist was
+            # computed against this exact routing object.  Selected
+            # slots always came through imask, so their dq is finite.
+            # Carried even with the filter off — the pre-eval upper
+            # bound above consumes it in both traces.
+            qpd = jnp.where(
+                sel_ok,
+                jnp.take_along_axis(dq.reshape(b, w * cap), order,
+                                    axis=1),
+                _INF)
         else:
-            # --- leaf level: merge candidates into the running top-k
-            r_q = jnp.minimum(jnp.minimum(topk_d[:, k - 1], r_cap), ub)
-            leaf_d = leaf_d.reshape(b, w * cap)
-            cd = jnp.where(leaf_d <= r_q[:, None], leaf_d, _INF)
-            eoid = tree.oid[nodes].reshape(b, w * cap)
-            ci = jnp.where(cd < _INF, eoid, -1)
-            all_d = jnp.concatenate([topk_d, cd], axis=1)
-            all_i = jnp.concatenate([topk_i, ci], axis=1)
-            neg, sel = jax.lax.top_k(-all_d, k)
-            topk_d = -neg
-            topk_i = jnp.take_along_axis(all_i, sel, axis=1)
+            # --- leaf level: merge candidates into the running top-k,
+            # chunked over the (score-sorted) frontier so each chunk's
+            # merge tightens r_q for the next.  Chunk 1 holds the closest
+            # subtrees and usually drives topk_d[k-1] to near-final, so
+            # the remaining chunks — most of the leaf entries — see a
+            # near-oracle radius both in the candidate test and in the
+            # parent-distance pre-filter.
+            chw = -(-w // min(_LEAF_CHUNKS, w))
+            parent_acc = jnp.zeros((b,), jnp.int32)
+            for c0 in range(0, w, chw):
+                fr_c = frontier[:, c0:c0 + chw]
+                nodes_c = nodes[:, c0:c0 + chw]
+                wc = fr_c.shape[1]
+                # per-chunk query radius: identical formula (and value)
+                # with the filter on or off — the bitwise-identity proof
+                # applies per chunk
+                r_q = jnp.minimum(jnp.minimum(topk_d[:, k - 1], r_cap), ub)
+                filt = (dict(pdist=tree.pdist, qpd=qpd[:, c0:c0 + chw],
+                             rq=r_q)
+                        if use_filter else {})
+                dmax_c, _, leaf_d, _ = frontier_scores(
+                    fr_c, queries, tree.vecs, tree.radius, internal_valid,
+                    leaf_valid, metric=tree.metric, impl=impl,
+                    interpret=interpret, **filt)
+                performed = jnp.isfinite(dmax_c) | jnp.isfinite(leaf_d)
+                n_eval = jnp.sum(performed, axis=(1, 2), dtype=jnp.int32)
+                dist_evals += n_eval
+                if level_stats:
+                    evalid = tree.valid[nodes_c] & (fr_c >= 0)[:, :, None]
+                    parent_acc += jnp.sum(
+                        evalid, axis=(1, 2), dtype=jnp.int32) - n_eval
+                leaf_d = leaf_d.reshape(b, wc * cap)
+                cd = jnp.where(leaf_d <= r_q[:, None], leaf_d, _INF)
+                eoid = tree.oid[nodes_c].reshape(b, wc * cap)
+                ci = jnp.where(cd < _INF, eoid, -1)
+                all_d = jnp.concatenate([topk_d, cd], axis=1)
+                all_i = jnp.concatenate([topk_i, ci], axis=1)
+                neg, sel = jax.lax.top_k(-all_d, k)
+                topk_d = -neg
+                topk_i = jnp.take_along_axis(all_i, sel, axis=1)
+            if level_stats:
+                parent_levels.append(parent_acc)
 
     res = QueryResult(topk_d, topk_i, page_hits, dist_evals, overflow)
     if level_stats:
-        pruned = (jnp.stack(pruned_levels) if pruned_levels
-                  else jnp.zeros((0, b), jnp.int32))
-        return res, pruned
+        by_bound = (jnp.stack(pruned_levels) if pruned_levels
+                    else jnp.zeros((0, b), jnp.int32))
+        by_parent = jnp.stack(parent_levels)
+        return res, (by_bound, by_parent)
     return res
 
 

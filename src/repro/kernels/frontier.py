@@ -2,13 +2,16 @@
 
 Every level of the level-synchronous kNN descent must evaluate the metric
 between each query of the cohort and every entry of every node on that
-query's frontier, then derive three per-entry quantities (DESIGN.md §8):
+query's frontier, then derive four per-entry quantities (DESIGN.md §8/§17):
 
   * ``dmax``   = d + r          for valid internal entries (the d_max bound:
                                  each subtree holds an object within d + r)
   * ``score``  = d - r          for valid internal entries (the triangle-
                                  inequality prune test / closest-first key)
   * ``leaf_d`` = d              for valid leaf entries (exact candidates)
+  * ``dq``     = d              for valid internal entries — the raw
+                                 query-to-routing-object distance the descent
+                                 carries to the next level as ``d(q, parent)``
 
 XLA expresses this as a ``[b, F, cap, dim]`` gather followed by the metric
 reduction — one full materialisation of every touched node page *per query*
@@ -16,9 +19,26 @@ in HBM.  This kernel instead keys the pipeline on the frontier itself: the
 ``[b, F]`` node-id table is a *scalar-prefetch* operand
 (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec index maps read the ids
 before the body runs and the Pallas pipeline streams exactly the referenced
-node pages (``vecs``/``radius``/validity rows) HBM→VMEM, double-buffered
-across grid steps.  Distances and all three outputs are computed in one
-VMEM-resident pass; nothing of size ``[b, F, cap, dim]`` ever exists.
+node pages (``vecs``/``radius``/``pdist``/validity rows) HBM→VMEM,
+double-buffered across grid steps.  Distances and all four outputs are
+computed in one VMEM-resident pass; nothing of size ``[b, F, cap, dim]``
+ever exists.
+
+Parent-distance pre-filter (DESIGN.md §17): when the caller supplies the
+``pdist`` page (d(entry, parent routing object), maintained by every
+mutation path), the per-frontier ``qpd`` vector (d(q, parent) — the
+distance that admitted each frontier node, computed at the previous level)
+and the per-query radius ``rq``, the prologue drops every entry with
+
+    |qpd - pdist| > rq + r + _PRUNE_PAD
+
+*before* the metric eval: by the triangle inequality
+|d(q,p) - d(e,p)| <= d(q,e), so such an entry provably fails the descent's
+d - r <= r_q + eps prune test and its distance never needed computing.
+Filtered entries' VPU lanes are masked (``jnp.where`` on the page input)
+and a node whose entries are all filtered skips the reduction entirely
+(``pl.when``).  Outputs are bitwise identical to the unfiltered kernel —
+only the evaluation count changes.
 
 Grid: ``(b, F)`` — one step per (query, frontier-slot) pair.  Invalid slots
 (node id < 0, the frontier padding) emit +inf rows; the metric itself is the
@@ -41,26 +61,94 @@ from repro.core.metric import get_metric
 # python literal (not a jnp scalar): kernels may not capture traced consts
 _INF = float("inf")
 
+# Filter slack: _EPS (1e-5, the descent's prune-test pad in core/smtree.py)
+# plus another 1e-5 absorbing f32 rounding of the triangle lower bound
+# (|d(q,p) - pdist| is computed from two independently rounded f32
+# distances; the true d(q,e) can undershoot it by a few ulps).  An entry
+# filtered at rq + r + _PRUNE_PAD therefore has d - r > rq + _EPS and
+# would have been discarded by the prune test anyway — the derivation and
+# the exact-boundary tests live in DESIGN.md §17 /
+# tests/test_frontier_kernel.py.
+_PRUNE_PAD = 2e-5
+
+_IMPLS = ("pallas", "xla")
+
+
+def _emit(dmax_ref, score_ref, leafd_ref, dq_ref, iv, lv, live, q_ref,
+          vecs_ref, r, *, metric: str, mask_lanes: bool):
+    """Shared kernel epilogue: evaluate the metric for one streamed node
+    page and write the four output rows, or emit +inf rows without touching
+    the VPU when no entry needs a distance (``pl.when`` whole-node skip)."""
+    any_live = jnp.any(live)
+
+    @pl.when(any_live)
+    def _():
+        q = q_ref[0, :]                  # [dim]
+        e = vecs_ref[0, :, :]            # [cap, dim] — the streamed node page
+        if mask_lanes:
+            # filtered entries: zero the lanes so the reduction they ride
+            # through is dead weight the compiler can drop; live entries'
+            # inputs are untouched, keeping d bitwise equal to the
+            # unfiltered kernel
+            e = jnp.where(live[:, None], e, 0.0)
+        d = get_metric(metric)(q[None, :], e)        # [cap]
+        dmax_ref[0, 0, :] = jnp.where(iv, d + r, _INF)
+        score_ref[0, 0, :] = jnp.where(iv, d - r, _INF)
+        leafd_ref[0, 0, :] = jnp.where(lv, d, _INF)
+        dq_ref[0, 0, :] = jnp.where(iv, d, _INF)
+
+    @pl.when(jnp.logical_not(any_live))
+    def _():
+        inf_row = jnp.full_like(r, _INF)
+        dmax_ref[0, 0, :] = inf_row
+        score_ref[0, 0, :] = inf_row
+        leafd_ref[0, 0, :] = inf_row
+        dq_ref[0, 0, :] = inf_row
+
 
 def _frontier_kernel(fids_ref, q_ref, vecs_ref, rad_ref, ival_ref, lval_ref,
-                     dmax_ref, score_ref, leafd_ref, *, metric: str):
+                     dmax_ref, score_ref, leafd_ref, dq_ref, *, metric: str):
     i = pl.program_id(0)
     j = pl.program_id(1)
     ok = fids_ref[i, j] >= 0
-    q = q_ref[0, :]                      # [dim]
-    e = vecs_ref[0, :, :]                # [cap, dim] — the streamed node page
-    d = get_metric(metric)(q[None, :], e)            # [cap]
     r = rad_ref[0, :]
     iv = (ival_ref[0, :] != 0) & ok
     lv = (lval_ref[0, :] != 0) & ok
-    dmax_ref[0, 0, :] = jnp.where(iv, d + r, _INF)
-    score_ref[0, 0, :] = jnp.where(iv, d - r, _INF)
-    leafd_ref[0, 0, :] = jnp.where(lv, d, _INF)
+    _emit(dmax_ref, score_ref, leafd_ref, dq_ref, iv, lv, iv | lv,
+          q_ref, vecs_ref, r, metric=metric, mask_lanes=False)
+
+
+def _frontier_kernel_pruned(fids_ref, q_ref, qpd_ref, rq_ref, vecs_ref,
+                            rad_ref, pd_ref, ival_ref, lval_ref,
+                            dmax_ref, score_ref, leafd_ref, dq_ref, *,
+                            metric: str):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    ok = fids_ref[i, j] >= 0
+    r = rad_ref[0, :]
+    # triangle-inequality pre-filter on the already-resident scalars — no
+    # metric eval yet.  Invalid slots carry qpd = +inf, so keep is all-False
+    # there and the whole page is skipped.
+    lb = jnp.abs(qpd_ref[0, 0] - pd_ref[0, :])
+    keep = lb <= rq_ref[0, 0] + r + _PRUNE_PAD
+    iv = (ival_ref[0, :] != 0) & ok & keep
+    lv = (lval_ref[0, :] != 0) & ok & keep
+    _emit(dmax_ref, score_ref, leafd_ref, dq_ref, iv, lv, iv | lv,
+          q_ref, vecs_ref, r, metric=metric, mask_lanes=True)
+
+
+def _check_prune_args(pdist, qpd, rq):
+    given = [x is not None for x in (pdist, qpd, rq)]
+    if any(given) and not all(given):
+        raise ValueError("parent-distance filtering needs all of "
+                         "pdist, qpd and rq (or none of them)")
+    return all(given)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))
 def frontier_scores_pallas(fids, queries, vecs, radius, internal_valid,
-                           leaf_valid, *, metric: str, interpret: bool = False):
+                           leaf_valid, *, metric: str, interpret: bool = False,
+                           pdist=None, qpd=None, rq=None):
     """Fused frontier scoring.
 
     fids           [b, F] i32  — frontier node ids (-1 = empty slot)
@@ -70,10 +158,19 @@ def frontier_scores_pallas(fids, queries, vecs, radius, internal_valid,
     internal_valid [N, cap] — nonzero where a valid internal entry
     leaf_valid     [N, cap] — nonzero where a valid leaf entry
 
-    Returns (dmax, score, leaf_d), each [b, F, cap] f32 with +inf at masked
-    positions.  ``interpret=True`` runs the identical kernel through the
-    Pallas interpreter (the CPU CI path).
+    Optional parent-distance filter inputs (all three or none):
+
+    pdist          [N, cap] f32 — d(entry, parent routing object) pages
+    qpd            [b, F] f32   — d(q, parent routing object) per frontier
+                                  slot (+inf at empty slots)
+    rq             [b] f32      — current query radius (pre-level value of
+                                  min(topk_d[k-1], r_cap, ub))
+
+    Returns (dmax, score, leaf_d, dq), each [b, F, cap] f32 with +inf at
+    masked/filtered positions.  ``interpret=True`` runs the identical
+    kernel through the Pallas interpreter (the CPU CI path).
     """
+    prune = _check_prune_args(pdist, qpd, rq)
     b, w = fids.shape
     _, cap, dim = vecs.shape
     internal_valid = internal_valid.astype(jnp.int8)
@@ -84,47 +181,103 @@ def frontier_scores_pallas(fids, queries, vecs, radius, internal_valid,
         # empty slots clamp to row 0 and are masked in the kernel body
         return lambda i, j, fids: (jnp.maximum(fids[i, j], 0),) + (0,) * ndim_tail
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(b, w),
-        in_specs=[
-            pl.BlockSpec((1, dim), lambda i, j, fids: (i, 0)),
+    q_spec = pl.BlockSpec((1, dim), lambda i, j, fids: (i, 0))
+    out_spec = pl.BlockSpec((1, 1, cap), lambda i, j, fids: (i, j, 0))
+    if prune:
+        in_specs = [
+            q_spec,
+            pl.BlockSpec((1, 1), lambda i, j, fids: (i, j)),   # qpd
+            pl.BlockSpec((1, 1), lambda i, j, fids: (i, 0)),   # rq
+            pl.BlockSpec((1, cap, dim), node_row(2)),
+            pl.BlockSpec((1, cap), node_row(1)),
+            pl.BlockSpec((1, cap), node_row(1)),               # pdist page
+            pl.BlockSpec((1, cap), node_row(1)),
+            pl.BlockSpec((1, cap), node_row(1)),
+        ]
+        operands = (fids, queries, qpd, rq[:, None], vecs, radius,
+                    pdist, internal_valid, leaf_valid)
+        kernel = _frontier_kernel_pruned
+    else:
+        in_specs = [
+            q_spec,
             pl.BlockSpec((1, cap, dim), node_row(2)),
             pl.BlockSpec((1, cap), node_row(1)),
             pl.BlockSpec((1, cap), node_row(1)),
             pl.BlockSpec((1, cap), node_row(1)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, cap), lambda i, j, fids: (i, j, 0)),
-            pl.BlockSpec((1, 1, cap), lambda i, j, fids: (i, j, 0)),
-            pl.BlockSpec((1, 1, cap), lambda i, j, fids: (i, j, 0)),
-        ],
+        ]
+        operands = (fids, queries, vecs, radius, internal_valid, leaf_valid)
+        kernel = _frontier_kernel
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, w),
+        in_specs=in_specs,
+        out_specs=[out_spec] * 4,
     )
-    out_shape = [jax.ShapeDtypeStruct((b, w, cap), jnp.float32)] * 3
+    out_shape = [jax.ShapeDtypeStruct((b, w, cap), jnp.float32)] * 4
     return pl.pallas_call(
-        functools.partial(_frontier_kernel, metric=metric),
+        functools.partial(kernel, metric=metric),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(fids, queries, vecs, radius, internal_valid, leaf_valid)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("metric",))
 def frontier_scores_xla(fids, queries, vecs, radius, internal_valid,
-                        leaf_valid, *, metric: str):
+                        leaf_valid, *, metric: str,
+                        pdist=None, qpd=None, rq=None):
     """Reference/escape-hatch implementation: the gather the kernel avoids.
 
     Materialises the [b, F, cap, dim] entry gather and reduces with the same
     shared metric definition — bitwise identical outputs to the kernel: the
     tree-fold + rounding pins in core/metric.py fix the value up to op
     rounding, and jitting keeps both paths whole-program-compiled (eager
-    per-op execution rounds sqrt/fusions differently on CPU)."""
+    per-op execution rounds sqrt/fusions differently on CPU).
+
+    The parent-distance filter (pdist/qpd/rq — see frontier_scores_pallas)
+    applies the identical keep mask and zeroes filtered rows via jnp.where
+    *before* the metric eval; on XLA:CPU the compiler still schedules the
+    full reduction shape, so this buys parity and honest eval counters, not
+    wall-clock (DESIGN.md §17 — the lane skip is a kernel-path win)."""
+    prune = _check_prune_args(pdist, qpd, rq)
     nodes = jnp.maximum(fids, 0)
     ok = (fids >= 0)[:, :, None]
-    d = get_metric(metric)(queries[:, None, None, :], vecs[nodes])
     r = radius[nodes]
     iv = (internal_valid[nodes] != 0) & ok
     lv = (leaf_valid[nodes] != 0) & ok
+    e = vecs[nodes]
+    if prune:
+        lb = jnp.abs(qpd[:, :, None] - pdist[nodes])
+        keep = lb <= rq[:, None, None] + r + _PRUNE_PAD
+        iv = iv & keep
+        lv = lv & keep
+        e = jnp.where((iv | lv)[..., None], e, 0.0)
+    d = get_metric(metric)(queries[:, None, None, :], e)
     return (jnp.where(iv, d + r, _INF),
             jnp.where(iv, d - r, _INF),
-            jnp.where(lv, d, _INF))
+            jnp.where(lv, d, _INF),
+            jnp.where(iv, d, _INF))
+
+
+def frontier_scores(fids, queries, vecs, radius, internal_valid, leaf_valid,
+                    *, metric: str, impl: str, interpret: bool = False,
+                    pdist=None, qpd=None, rq=None):
+    """Dispatch one level's frontier scoring to a backend by name.
+
+    ``impl`` must name a scoring backend exactly — 'pallas' (the fused
+    kernel; interpret-mode off-TPU) or 'xla' (the gather path).  Anything
+    else raises ``ValueError`` naming the valid set rather than silently
+    picking a default ('perquery' and 'auto' are descent-level toggles,
+    resolved before this point by core/smtree._resolve_impl)."""
+    if impl not in _IMPLS:
+        raise ValueError(
+            f"frontier_scores impl must be one of {_IMPLS}; got {impl!r}")
+    if impl == "pallas":
+        return frontier_scores_pallas(
+            fids, queries, vecs, radius, internal_valid, leaf_valid,
+            metric=metric, interpret=interpret,
+            pdist=pdist, qpd=qpd, rq=rq)
+    return frontier_scores_xla(
+        fids, queries, vecs, radius, internal_valid, leaf_valid,
+        metric=metric, pdist=pdist, qpd=qpd, rq=rq)

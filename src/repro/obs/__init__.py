@@ -161,7 +161,16 @@ def want_level_stats() -> bool:
 def observe_query_result(res, pruned=None, *, prefix: str = "descent") -> None:
     """Accumulate the descent's per-dispatch reductions into paper-level
     counters: metric (distance) evaluations, nodes visited, and — when
-    the kernel was asked for level stats — pruned-by-bound per level.
+    the kernel was asked for level stats — pruned-by-bound and
+    pruned-by-parent per level.
+
+    ``pruned`` is what ``smtree.knn(..., level_stats=True)`` returned:
+    a ``(by_bound, by_parent)`` pair of ``[levels, b]`` stacks (a bare
+    array is accepted as by-bound only, for older recorded shapes).
+    ``by_parent`` feeds ``{prefix}.pruned_by_parent_total`` — entries the
+    parent-distance pre-filter dropped before any metric eval, the
+    quantity DESIGN.md §17 moves; note ``dist_evals_total`` already
+    excludes them (it counts evaluations performed).
 
     Callers pass a ``QueryResult`` whose fields they are already
     materialising to the host (the serving paths call ``np.asarray`` on
@@ -180,11 +189,17 @@ def observe_query_result(res, pruned=None, *, prefix: str = "descent") -> None:
     REGISTRY.counter(f"{prefix}.nodes_visited_total").inc(nodes)
     if overflow:
         REGISTRY.counter(f"{prefix}.frontier_overflow_total").inc(overflow)
-    if pruned is not None:
-        p = np.asarray(pruned)          # [levels, b]
-        REGISTRY.counter(f"{prefix}.pruned_by_bound_total").inc(
-            int(p.sum()))
+    if pruned is None:
+        return
+    by_bound, by_parent = (pruned if isinstance(pruned, tuple)
+                           else (pruned, None))
+    for stack, kind in ((by_bound, "pruned_by_bound"),
+                        (by_parent, "pruned_by_parent")):
+        if stack is None:
+            continue
+        p = np.asarray(stack)           # [levels, b]
+        REGISTRY.counter(f"{prefix}.{kind}_total").inc(int(p.sum()))
         for lvl in range(p.shape[0]):
             REGISTRY.counter(
-                f"{prefix}.pruned_by_bound_level{lvl:02d}_total"
+                f"{prefix}.{kind}_level{lvl:02d}_total"
             ).inc(int(p[lvl].sum()))

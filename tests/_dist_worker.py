@@ -250,6 +250,34 @@ def scenario_forest_knn_cohort_parity():
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-6)
 
 
+def scenario_forest_parent_prune_parity():
+    """8-shard mesh forest: kNN with the parent-distance pre-filter on is
+    bitwise identical to the unpruned collective — both via the explicit
+    kwarg and via the REPRO_PARENT_PRUNE env toggle."""
+    from repro.core.distributed import build_forest, forest_knn
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    X = np.random.default_rng(41).random((4096, 8)).astype(np.float32)
+    # near-data queries (the regime where the filter actually fires)
+    Q = (X[:32] + np.random.default_rng(42)
+         .normal(0, 0.01, (32, 8))).astype(np.float32)
+    forest, _ = build_forest(X, mesh, capacity=16)
+    with _use_mesh(mesh):
+        d_on, i_on = forest_knn(forest, mesh, jnp.asarray(Q), k=5,
+                                max_frontier=64, parent_prune=True)
+        d_off, i_off = forest_knn(forest, mesh, jnp.asarray(Q), k=5,
+                                  max_frontier=64, parent_prune=False)
+        os.environ["REPRO_PARENT_PRUNE"] = "0"
+        try:
+            d_env, i_env = forest_knn(forest, mesh, jnp.asarray(Q), k=5,
+                                      max_frontier=64)
+        finally:
+            del os.environ["REPRO_PARENT_PRUNE"]
+    np.testing.assert_array_equal(np.asarray(d_on), np.asarray(d_off))
+    np.testing.assert_array_equal(np.asarray(i_on), np.asarray(i_off))
+    np.testing.assert_array_equal(np.asarray(d_env), np.asarray(d_off))
+    np.testing.assert_array_equal(np.asarray(i_env), np.asarray(i_off))
+
+
 def scenario_replica_forest_mesh():
     """WAL-shipping follower of a StreamingForest: tails the leader's
     segments on host, verifies bitwise equality by digest exchange, then

@@ -65,6 +65,151 @@ def test_env_toggle_routes_impl(monkeypatch):
 
 
 # --------------------------------------------------------------------------
+# parent-distance pre-filter (DESIGN.md §17): results bitwise identical with
+# pruning on vs off; only dist_evals (evaluations *performed*) may shrink
+# --------------------------------------------------------------------------
+RESULT_FIELDS = ("dists", "ids", "page_hits", "overflow")
+
+
+def assert_results_equal_ex_evals(a, b, msg=""):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}:{f}")
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("metric", ["d_inf", "l2", "l1"])
+def test_knn_parent_prune_bitwise(metric, impl):
+    X = clustered(1500, dims=8, seed=3)
+    eng = SMTreeEngine.build(X, capacity=16, metric=metric)
+    Q = np.vstack([uniform(16, dims=8, seed=4), X[:16] + 0.003])
+    for k, F in ((1, 64), (10, 64), (10, 256)):
+        off = eng.knn(Q, k=k, max_frontier=F, impl=impl, parent_prune=False)
+        on = eng.knn(Q, k=k, max_frontier=F, impl=impl, parent_prune=True)
+        assert_results_equal_ex_evals(off, on, f"knn k={k} F={F} {metric}")
+        # the filter only removes work, never adds it
+        assert (np.asarray(on.dist_evals) <= np.asarray(off.dist_evals)).all()
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("metric", ["d_inf", "l2", "l1"])
+def test_range_search_parent_prune_bitwise(metric, impl):
+    X = clustered(1500, dims=8, seed=5)
+    eng = SMTreeEngine.build(X, capacity=16, metric=metric)
+    Q = X[::100].copy()
+    for r in (0.0, 0.05, 0.5):
+        off = eng.range_search(Q, r, max_results=64, impl=impl,
+                               parent_prune=False)
+        on = eng.range_search(Q, r, max_results=64, impl=impl,
+                              parent_prune=True)
+        assert_results_equal_ex_evals(off, on, f"range r={r} {metric}")
+        assert (np.asarray(on.dist_evals) <= np.asarray(off.dist_evals)).all()
+
+
+def test_parent_prune_env_toggle(monkeypatch):
+    X = clustered(600, dims=6, seed=6)
+    eng = SMTreeEngine.build(X, capacity=8)
+    Q = uniform(8, dims=6, seed=7)
+    explicit_off = eng.knn(Q, k=3, impl="xla", parent_prune=False)
+    monkeypatch.setenv("REPRO_PARENT_PRUNE", "0")
+    via_env = eng.knn(Q, k=3, impl="xla")
+    assert_results_equal(explicit_off, via_env, "env off routing")
+    monkeypatch.setenv("REPRO_PARENT_PRUNE", "1")
+    on_env = eng.knn(Q, k=3, impl="xla")
+    assert_results_equal_ex_evals(explicit_off, on_env, "env on routing")
+    monkeypatch.setenv("REPRO_PARENT_PRUNE", "yes")
+    with pytest.raises(ValueError, match="REPRO_PARENT_PRUNE"):
+        eng.knn(Q, k=3, impl="xla")
+
+
+def _collinear_tree(metric="d_inf"):
+    """Planted adversarial geometry: points on a line at exactly-
+    representable f32 coordinates.  For collinear same-side points the
+    triangle inequality is *tight* — |d(q,p) − d(e,p)| == d(q,e) exactly,
+    in f32 too — so the parent filter sits exactly on its boundary for
+    every entry: any over-aggressive filtering (a missing pad, a stale
+    pdist/radius) drops true neighbors."""
+    n, dims = 192, 4
+    X = np.zeros((n, dims), np.float32)
+    X[:, 0] = np.arange(n, dtype=np.float32) / 64.0
+    eng = SMTreeEngine.build(X, capacity=4, metric=metric)
+    return eng, X
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_parent_prune_adversarial_collinear(impl):
+    eng, X = _collinear_tree()
+    # far collinear queries: every frontier entry is same-side, the filter's
+    # lower bound equals the true distance bit-for-bit
+    q = np.zeros((3, 4), np.float32)
+    q[:, 0] = [X[-1, 0] + 8.0, -5.0, X[96, 0]]
+    for k in (1, 5, 17):
+        off = eng.knn(q, k=k, max_frontier=64, impl=impl, parent_prune=False)
+        on = eng.knn(q, k=k, max_frontier=64, impl=impl, parent_prune=True)
+        assert_results_equal_ex_evals(off, on, f"collinear k={k}")
+        np.testing.assert_allclose(np.asarray(on.dists),
+                                   brute_knn_dists("d_inf", X, q, k),
+                                   atol=1e-6)
+
+
+def test_parent_prune_rides_on_pdist_invariant():
+    """Corrupting pdist makes the filter wrongly prune — the demonstration
+    that pruning correctness rides on the pdist invariant (pinned
+    independently by tests/test_pdist_invariant.py), while the unfiltered
+    path is immune."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core import smtree
+    eng, X = _collinear_tree()
+    q = np.zeros((1, 4), np.float32)
+    q[0, 0] = X[96, 0]
+    want = brute_knn_dists("d_inf", X, q, 5)
+    # stale-pdist plant: every entry claims to sit 1000 from its routing
+    # object, so |d(q,p) − pdist| dwarfs rq + r and the filter drops
+    # everything below the root
+    bad = dataclasses.replace(eng.tree,
+                              pdist=jnp.full_like(eng.tree.pdist, 1000.0))
+    res_off = smtree.knn(bad, q, k=5, max_frontier=64, impl="xla",
+                         parent_prune=False)
+    np.testing.assert_allclose(np.asarray(res_off.dists), want, atol=1e-6)
+    res_on = smtree.knn(bad, q, k=5, max_frontier=64, impl="xla",
+                        parent_prune=True)
+    assert not np.allclose(np.asarray(res_on.dists), want), \
+        "corrupt pdist must break the filtered path (else the filter is dead)"
+
+
+def test_level_stats_parent_counts():
+    """level_stats returns (by_bound, by_parent); parent counts are zero at
+    the root level and with the filter off, and account exactly for the
+    dist_evals delta.  At internal levels, every parent-filtered entry
+    provably fails the d_min bound too (DESIGN.md §17), so in the
+    unfiltered trace it shows up as pruned-by-bound instead:
+    bb_off == bb_on + bp_on at those levels."""
+    from repro.core import smtree
+    X = clustered(2000, dims=8, seed=23)
+    eng = SMTreeEngine.build(X, capacity=16)
+    Q = np.asarray(X[:32] + 0.002, np.float32)
+    res_on, (bb_on, bp_on) = smtree.knn(eng.tree, Q, k=5, max_frontier=64,
+                                        impl="xla", level_stats=True,
+                                        parent_prune=True)
+    res_off, (bb_off, bp_off) = smtree.knn(eng.tree, Q, k=5, max_frontier=64,
+                                           impl="xla", level_stats=True,
+                                           parent_prune=False)
+    assert np.asarray(bp_off).sum() == 0
+    assert np.asarray(bp_on)[0].sum() == 0          # root has no parent
+    n_internal = np.asarray(bb_on).shape[0]
+    np.testing.assert_array_equal(
+        np.asarray(bb_off),
+        np.asarray(bb_on) + np.asarray(bp_on)[:n_internal])
+    delta = (np.asarray(res_off.dist_evals) - np.asarray(res_on.dist_evals))
+    np.testing.assert_array_equal(np.asarray(bp_on).sum(axis=0), delta)
+    assert np.asarray(bp_on).sum() > 0              # the filter actually bites
+
+
+# --------------------------------------------------------------------------
 # cohort vs legacy per-query engine (results, not stats — the cohort path's
 # min-fill-aware d_max bound prunes tighter, so page_hits legitimately
 # differ; distances and ids may not)

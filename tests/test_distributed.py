@@ -17,6 +17,7 @@ SCENARIOS = [
     "forest_device_merges",
     "forest_migration_mesh",
     "forest_knn_cohort_parity",
+    "forest_parent_prune_parity",
     "replica_forest_mesh",
     "promote_follower_mesh",
     "train_step_sharded",

@@ -4,14 +4,23 @@ The kernel (kernels/frontier.py) must be *bitwise* identical to the XLA
 gather path on every output — the cohort descent's xla-vs-pallas parity
 guarantee reduces to this plus determinism of top_k.  Runs the real kernel
 code through the Pallas interpreter on CPU.
+
+The parent-distance pre-filter variant (DESIGN.md §17) additionally must:
+drop exactly the entries with |qpd − pdist| > rq + r (+ the documented
+pad), keep the *boundary* case |qpd − pdist| == rq + r (never prune on
+equality — mirrors the descent's _EPS-padded prune test), and leave every
+kept entry's outputs bitwise equal to the unfiltered kernel's.
 """
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.frontier import frontier_scores_pallas, frontier_scores_xla
+from repro.kernels.frontier import (_PRUNE_PAD, frontier_scores,
+                                    frontier_scores_pallas,
+                                    frontier_scores_xla)
 
 METRICS = ["d_inf", "l2", "l1"]
+OUT_NAMES = ("dmax", "score", "leaf_d", "dq")
 
 
 def _random_tree_pages(rng, N=40, cap=16, dim=10):
@@ -25,26 +34,122 @@ def _random_tree_pages(rng, N=40, cap=16, dim=10):
             jnp.asarray(internal_valid), jnp.asarray(leaf_valid))
 
 
+def _random_frontier(rng, N, b, w):
+    # frontier includes empty (-1) slots, duplicates, and boundary ids
+    fids = rng.integers(-1, N, size=(b, w)).astype(np.int32)
+    fids[0, :] = -1                      # fully-done query
+    fids[1, :] = 0                       # duplicated node
+    fids[2, 0] = N - 1                   # last row
+    return jnp.asarray(fids)
+
+
+def _random_prune_inputs(rng, fids, N, cap):
+    b, w = fids.shape
+    pdist = np.abs(rng.normal(size=(N, cap))).astype(np.float32)
+    qpd = np.abs(rng.normal(size=(b, w))).astype(np.float32)
+    qpd[np.asarray(fids) < 0] = np.inf   # empty slots carry +inf
+    rq = np.abs(rng.normal(size=(b,))).astype(np.float32)
+    return jnp.asarray(pdist), jnp.asarray(qpd), jnp.asarray(rq)
+
+
 @pytest.mark.parametrize("metric", METRICS)
 def test_kernel_matches_xla_bitwise(metric):
     rng = np.random.default_rng(0)
     vecs, radius, iv, lv = _random_tree_pages(rng)
     b, w = 8, 5
     queries = jnp.asarray(rng.normal(size=(b, vecs.shape[-1])).astype(np.float32))
-    # frontier includes empty (-1) slots, duplicates, and boundary ids
-    fids = rng.integers(-1, vecs.shape[0], size=(b, w)).astype(np.int32)
-    fids[0, :] = -1                      # fully-done query
-    fids[1, :] = 0                       # duplicated node
-    fids[2, 0] = vecs.shape[0] - 1       # last row
-    fids = jnp.asarray(fids)
+    fids = _random_frontier(rng, vecs.shape[0], b, w)
 
     got = frontier_scores_pallas(fids, queries, vecs, radius, iv, lv,
                                  metric=metric, interpret=True)
     want = frontier_scores_xla(fids, queries, vecs, radius, iv, lv,
                                metric=metric)
-    for g, wv, name in zip(got, want, ("dmax", "score", "leaf_d")):
+    assert len(got) == len(want) == 4
+    for g, wv, name in zip(got, want, OUT_NAMES):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(wv),
                                       err_msg=f"{metric}/{name}")
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_pruned_kernel_matches_xla_bitwise(metric):
+    """With the parent filter engaged, pallas and xla must still agree on
+    every output bit — same keep mask, same distances."""
+    rng = np.random.default_rng(3)
+    vecs, radius, iv, lv = _random_tree_pages(rng)
+    b, w = 8, 5
+    queries = jnp.asarray(rng.normal(size=(b, vecs.shape[-1])).astype(np.float32))
+    fids = _random_frontier(rng, vecs.shape[0], b, w)
+    pdist, qpd, rq = _random_prune_inputs(rng, fids, vecs.shape[0],
+                                          vecs.shape[1])
+
+    got = frontier_scores_pallas(fids, queries, vecs, radius, iv, lv,
+                                 metric=metric, interpret=True,
+                                 pdist=pdist, qpd=qpd, rq=rq)
+    want = frontier_scores_xla(fids, queries, vecs, radius, iv, lv,
+                               metric=metric, pdist=pdist, qpd=qpd, rq=rq)
+    for g, wv, name in zip(got, want, OUT_NAMES):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wv),
+                                      err_msg=f"{metric}/{name}")
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+@pytest.mark.parametrize("metric", METRICS)
+def test_pruned_outputs_subset_of_unpruned(metric, impl):
+    """The filter only ever *removes* evaluations: kept entries' outputs are
+    bitwise those of the unfiltered kernel; dropped entries are exactly the
+    |qpd − pdist| > rq + r + pad set and emit +inf."""
+    rng = np.random.default_rng(4)
+    vecs, radius, iv, lv = _random_tree_pages(rng)
+    b, w = 8, 5
+    queries = jnp.asarray(rng.normal(size=(b, vecs.shape[-1])).astype(np.float32))
+    fids = _random_frontier(rng, vecs.shape[0], b, w)
+    pdist, qpd, rq = _random_prune_inputs(rng, fids, vecs.shape[0],
+                                          vecs.shape[1])
+
+    plain = frontier_scores(fids, queries, vecs, radius, iv, lv,
+                            metric=metric, impl=impl, interpret=True)
+    pruned = frontier_scores(fids, queries, vecs, radius, iv, lv,
+                             metric=metric, impl=impl, interpret=True,
+                             pdist=pdist, qpd=qpd, rq=rq)
+    nodes = np.maximum(np.asarray(fids), 0)
+    lb = np.abs(np.asarray(qpd)[:, :, None] - np.asarray(pdist)[nodes])
+    keep = lb <= (np.asarray(rq)[:, None, None] + np.asarray(radius)[nodes]
+                  + np.float32(_PRUNE_PAD))
+    for g_plain, g_pruned, name in zip(plain, pruned, OUT_NAMES):
+        a, p = np.asarray(g_plain), np.asarray(g_pruned)
+        np.testing.assert_array_equal(p[keep], a[keep],
+                                      err_msg=f"{metric}/{impl}/{name}/kept")
+        assert np.isposinf(p[~keep]).all(), f"{metric}/{impl}/{name}/dropped"
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_prune_boundary_is_inclusive(impl):
+    """|qpd − pdist| == rq + r must NOT prune (consistent with the _EPS
+    padding of the descent's prune test: equality always survives), while a
+    gap clearly above the pad must."""
+    cap, dim = 4, 6
+    vecs = jnp.zeros((1, cap, dim), jnp.float32)
+    radius = jnp.asarray([[0.0, 0.25, 0.0, 0.0]], jnp.float32)
+    iv = jnp.ones((1, cap), bool)
+    lv = jnp.zeros((1, cap), bool)
+    # exactly representable f32 values: lb = |1.5 − pdist|, rq = 0.5
+    #   slot0: lb = 0.5  == rq + r (0.5)   -> keep (boundary)
+    #   slot1: lb = 0.75 == rq + r (0.75)  -> keep (boundary, r > 0)
+    #   slot2: lb = 0.5 + pad/2            -> keep (inside the pad)
+    #   slot3: lb = 0.625 > rq + r + pad   -> prune
+    pdist = jnp.asarray([[1.0, 0.75, 1.0 - _PRUNE_PAD / 2, 0.875]],
+                        jnp.float32)
+    qpd = jnp.asarray([[1.5]], jnp.float32)
+    rq = jnp.asarray([0.5], jnp.float32)
+    fids = jnp.zeros((1, 1), jnp.int32)
+    queries = jnp.zeros((1, dim), jnp.float32)
+
+    dmax, score, leaf_d, dq = frontier_scores(
+        fids, queries, vecs, radius, iv, lv, metric="d_inf", impl=impl,
+        interpret=True, pdist=pdist, qpd=qpd, rq=rq)
+    finite = np.isfinite(np.asarray(dmax))[0, 0]
+    np.testing.assert_array_equal(finite, [True, True, True, False],
+                                  err_msg=impl)
 
 
 @pytest.mark.parametrize("metric", ["d_inf", "l2"])
@@ -60,19 +165,57 @@ def test_empty_frontier_emits_inf(metric):
 
 
 def test_masks_partition_outputs():
-    """An entry is internal xor leaf xor invalid: dmax/score finite exactly
-    where internal-valid, leaf_d finite exactly where leaf-valid."""
+    """An entry is internal xor leaf xor invalid: dmax/score/dq finite
+    exactly where internal-valid, leaf_d finite exactly where leaf-valid."""
     rng = np.random.default_rng(2)
     vecs, radius, iv, lv = _random_tree_pages(rng)
     b, w = 4, 6
     queries = jnp.asarray(rng.normal(size=(b, vecs.shape[-1])).astype(np.float32))
     fids = jnp.asarray(rng.integers(0, vecs.shape[0], size=(b, w)).astype(np.int32))
-    dmax, score, leaf_d = frontier_scores_pallas(
+    dmax, score, leaf_d, dq = frontier_scores_pallas(
         fids, queries, vecs, radius, iv, lv, metric="d_inf", interpret=True)
     iv_g = np.asarray(iv)[np.asarray(fids)]
     lv_g = np.asarray(lv)[np.asarray(fids)]
     assert (np.isfinite(np.asarray(dmax)) == iv_g).all()
     assert (np.isfinite(np.asarray(score)) == iv_g).all()
+    assert (np.isfinite(np.asarray(dq)) == iv_g).all()
     assert (np.isfinite(np.asarray(leaf_d)) == lv_g).all()
     # no entry is both internal and leaf
     assert not (iv_g & lv_g).any()
+
+
+def test_dq_is_raw_distance():
+    """dq must be the *unmodified* metric value for internal entries — the
+    carry the next level reuses as d(q, parent) must match what pdist of
+    the children was computed against."""
+    rng = np.random.default_rng(5)
+    vecs, radius, iv, lv = _random_tree_pages(rng, N=10, cap=6, dim=8)
+    fids = jnp.asarray(rng.integers(0, 10, size=(3, 4)).astype(np.int32))
+    queries = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32))
+    dmax, score, leaf_d, dq = frontier_scores_xla(
+        fids, queries, vecs, radius, iv, lv, metric="d_inf")
+    r_g = np.asarray(radius)[np.maximum(np.asarray(fids), 0)]
+    fin = np.isfinite(np.asarray(dq))
+    np.testing.assert_array_equal(np.asarray(dmax)[fin],
+                                  (np.asarray(dq) + r_g)[fin])
+
+
+def test_unknown_impl_raises():
+    rng = np.random.default_rng(6)
+    vecs, radius, iv, lv = _random_tree_pages(rng, N=4, cap=4, dim=4)
+    fids = jnp.zeros((1, 1), jnp.int32)
+    queries = jnp.zeros((1, 4), jnp.float32)
+    with pytest.raises(ValueError, match=r"pallas.*xla"):
+        frontier_scores(fids, queries, vecs, radius, iv, lv,
+                        metric="d_inf", impl="bogus")
+
+
+def test_partial_prune_args_raise():
+    rng = np.random.default_rng(7)
+    vecs, radius, iv, lv = _random_tree_pages(rng, N=4, cap=4, dim=4)
+    fids = jnp.zeros((1, 1), jnp.int32)
+    queries = jnp.zeros((1, 4), jnp.float32)
+    with pytest.raises(ValueError, match="pdist"):
+        frontier_scores(fids, queries, vecs, radius, iv, lv,
+                        metric="d_inf", impl="xla",
+                        qpd=jnp.zeros((1, 1), jnp.float32))

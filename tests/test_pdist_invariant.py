@@ -1,0 +1,147 @@
+"""pdist exactness — the invariant the parent-distance filter rides on.
+
+The cohort descent's pre-filter (DESIGN.md §17) prunes an entry when
+``|d(q, parent) − pdist| > r_q + r`` without ever evaluating the metric,
+which is only sound if every stored ``pdist[n, s]`` is *exactly* the f32
+metric value ``d(vecs[n, s], routing vector of node n)`` — the vector the
+parent stores at ``vecs[parent[n], pslot[n]]``.  Every mutation path
+(bulk build, fast insert/delete, host and device splits/merges, batch
+migration) must maintain this bitwise, not merely to tolerance: the
+bitwise-identity argument for the filter assumes the stored value equals
+the recomputed one, and all writers share the fixed-association metric
+fold in core/metric.py, so exact equality is the honest contract.
+
+``SMTreeEngine.validate`` checks pdist only to atol=1e-4; this file is
+the strict version, drilled through randomized mutation interleavings.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import smtree
+from repro.core.engine import SMTreeEngine
+from repro.core.metric import get_metric
+from repro.core.smtree import (OP_DELETE, OP_INSERT, OP_NOP, apply_mutations,
+                               bulk_build)
+from repro.data.datagen import clustered, uniform
+
+DIM = 6
+METRICS = ["d_inf", "l2", "l1"]
+
+
+def assert_pdist_exact(tree, msg=""):
+    """Bitwise check: every valid entry of every alive non-root node has
+    ``pdist == metric(vec, parent routing vector)`` exactly."""
+    g = lambda a: np.asarray(jax.device_get(a))
+    valid, alive = g(tree.valid), g(tree.alive)
+    parent, pslot = g(tree.parent), g(tree.pslot)
+    vecs, pdist = g(tree.vecs), g(tree.pdist)
+    root = int(g(tree.root))
+    N = alive.shape[0]
+    has_parent = alive & (np.arange(N) != root) & (parent >= 0)
+    pn = np.where(has_parent, parent, 0)
+    ps = np.where(has_parent, np.maximum(pslot, 0), 0)
+    routing = vecs[pn, ps]                                   # [N, dim]
+    want = np.asarray(get_metric(tree.metric)(vecs, routing[:, None, :]))
+    mask = valid & has_parent[:, None]
+    assert want.dtype == np.float32
+    np.testing.assert_array_equal(pdist[mask], want[mask], err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# static builds
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("gen", [uniform, clustered])
+def test_bulk_build_pdist_exact(metric, gen):
+    X = gen(500, dims=DIM, seed=11)
+    t = bulk_build(X, capacity=8, metric=metric)
+    assert_pdist_exact(t, f"bulk_build/{metric}/{gen.__name__}")
+
+
+# ---------------------------------------------------------------------------
+# randomized host-engine interleavings (fast path + host splits/merges)
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_engine_mutations_keep_pdist_exact(seed):
+    rng = np.random.default_rng(seed)
+    metric = ["d_inf", "l2", "l1"][seed % 3]
+    X = uniform(600, dims=DIM, seed=seed).astype(np.float32)
+    eng = SMTreeEngine.build(X[:200], ids=np.arange(200), capacity=4,
+                             metric=metric, slack=3.0)
+    live = set(range(200))
+    next_id = 200
+    for step in range(120):
+        if live and rng.random() < 0.4:
+            oid = int(rng.choice(sorted(live)))
+            assert eng.delete(X[oid], oid)
+            live.discard(oid)
+        elif next_id < len(X):
+            eng.insert(X[next_id], next_id)
+            live.add(next_id)
+            next_id += 1
+        if step % 40 == 39:                 # mid-drill, not only at the end
+            assert_pdist_exact(eng.tree, f"host seed={seed} step={step}")
+    assert_pdist_exact(eng.tree, f"host seed={seed} final")
+    eng.validate()
+
+
+# ---------------------------------------------------------------------------
+# device batch path (fused scan + device splits/merges)
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_device_mutations_keep_pdist_exact(seed):
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    metric = ["d_inf", "l2", "l1"][seed % 3]
+    X = clustered(700, dims=DIM, seed=seed).astype(np.float32)
+    t = bulk_build(X[:300], ids=np.arange(300), capacity=4, metric=metric,
+                   slack=3.0)
+    live = list(range(300))
+    next_id = 300
+    for batch in range(3):
+        ops, xs, oids = [], [], []
+        # conflict-free cohort: each oid at most once per batch
+        dels = rng.choice(live, size=min(24, len(live)), replace=False)
+        for oid in dels:
+            ops.append(OP_DELETE); xs.append(X[oid]); oids.append(oid)
+        n_ins = min(40, len(X) - next_id)
+        for oid in range(next_id, next_id + n_ins):
+            ops.append(OP_INSERT); xs.append(X[oid]); oids.append(oid)
+        ops.append(OP_NOP); xs.append(np.zeros(DIM, np.float32)); oids.append(-1)
+        t, st_ = apply_mutations(
+            t, np.asarray(ops, np.int32), np.asarray(xs, np.float32),
+            np.asarray(oids, np.int32), splits=True, merges=True)
+        st_ = np.asarray(st_)
+        applied = np.isin(st_, (smtree.ST_APPLIED, smtree.ST_SPLIT,
+                                smtree.ST_MERGE))
+        for op, oid, ok in zip(ops, oids, applied):
+            if not ok or oid < 0:
+                continue
+            if op == OP_DELETE:
+                live.remove(oid)
+            elif op == OP_INSERT:
+                live.append(oid)
+        next_id += n_ins
+        assert_pdist_exact(t, f"device seed={seed} batch={batch}")
+
+
+# ---------------------------------------------------------------------------
+# batch migration between trees (extract + cohort apply on both sides)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("metric", METRICS)
+def test_move_objects_keeps_pdist_exact(metric):
+    X = uniform(400, dims=DIM, seed=5).astype(np.float32)
+    donor = bulk_build(X[:200], ids=np.arange(200), capacity=4,
+                       metric=metric, slack=3.0)
+    receiver = bulk_build(X[200:], ids=np.arange(200, 400), capacity=4,
+                          metric=metric, slack=3.0)
+    rng = np.random.default_rng(9)
+    ids = rng.choice(200, size=48, replace=False).astype(np.int32)
+    donor, receiver, moved = smtree.move_objects(donor, receiver, ids,
+                                                 splits=True, merges=True)
+    assert int(np.asarray(moved).sum()) > 0
+    assert_pdist_exact(donor, f"move/{metric}/donor")
+    assert_pdist_exact(receiver, f"move/{metric}/receiver")
